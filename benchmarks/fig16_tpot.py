@@ -1,0 +1,70 @@
+"""Paper Fig. 16 + Appendix C (Figs. 22/23): TPOT tail-latency reduction.
+
+Per (model × dataset × setup): mean / p90 / p95 / p99 TPOT reduction of GEM
+and EPLB vs linear. The paper's observations to reproduce: (1) gains grow
+with variability; (2) reductions are consistent across the distribution
+(mean ≈ p90 ≈ p95 ≈ p99 within ~half a point).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import DATASETS, PAPER_MODELS, SETUPS
+from .fig15_e2e import run_cell
+
+
+def tpot_stats(sim):
+    lat = sim.step_latencies
+    return {
+        "mean": float(lat.mean()),
+        "p90": float(np.quantile(lat, 0.90)),
+        "p95": float(np.quantile(lat, 0.95)),
+        "p99": float(np.quantile(lat, 0.99)),
+    }
+
+
+def run(setups=SETUPS):
+    rows = []
+    for model in PAPER_MODELS:
+        for dataset in DATASETS:
+            for setup in setups:
+                cell = run_cell(model, dataset, setup, n_seeds=1,
+                                return_sims=True)
+                sims = cell["sims"]
+                base = tpot_stats(sims["linear"])
+                for policy in ("gem", "eplb"):
+                    stats = tpot_stats(sims[policy])
+                    rows.append(
+                        dict(
+                            model=model.name, dataset=dataset, setup=setup,
+                            policy=policy,
+                            **{
+                                f"{k}_reduction_pct":
+                                    100.0 * (1 - stats[k] / base[k])
+                                for k in base
+                            },
+                        )
+                    )
+    return rows
+
+
+def summarize(rows):
+    gem_high = [r for r in rows if r["policy"] == "gem" and r["setup"] == "high"]
+    p90 = [r["p90_reduction_pct"] for r in gem_high]
+    spreads = [
+        abs(r["mean_reduction_pct"] - r["p99_reduction_pct"]) for r in gem_high
+    ]
+    return {
+        "p90_mean_pct": float(np.mean(p90)),
+        "p90_max_pct": float(np.max(p90)),
+        "mean_vs_p99_spread_pts": float(np.mean(spreads)),
+    }
+
+
+if __name__ == "__main__":
+    rows = run(("high",))
+    for r in rows:
+        if r["policy"] == "gem":
+            print(f"{r['model']:16s} {r['dataset']:13s} mean {r['mean_reduction_pct']:+6.2f}% "
+                  f"p90 {r['p90_reduction_pct']:+6.2f}% p99 {r['p99_reduction_pct']:+6.2f}%")
+    print(summarize(rows))

@@ -1,0 +1,76 @@
+"""Paper Fig. 18: variability-profiling cost — GEM's tile-boundary sampling
+vs the naive full sweep (1..16K token counts, 500 launches each).
+
+The paper reports 0.5–3.6 minutes vs 3.4–20.5 hours (265–515×). Device time
+is computed analytically from the staircase model (we don't sleep for the
+20-hour sweep); the fast profiler additionally runs for real to report wall
+time and sample counts.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    DeviceFleet,
+    dense_grid,
+    profile_fleet,
+    profiling_cost_seconds,
+    setup_speeds,
+    simulator_measure_fn,
+    tile_boundary_grid,
+)
+
+from .common import NUM_DEVICES, PAPER_MODELS
+
+MAX_TOKENS = 16_384
+REPEATS = 500
+
+
+def run():
+    rows = []
+    for model in PAPER_MODELS:
+        fleet = DeviceFleet.from_speeds(
+            setup_speeds("moderate", NUM_DEVICES), tile=model.tile,
+            tile_time=model.tile_time, base=model.tile_time * 0.25,
+        )
+        fast_grid = tile_boundary_grid(
+            MAX_TOKENS, model.tile, sparse_above=16 * model.tile,
+            sparse_stride=2048,
+        )
+        fast_s = profiling_cost_seconds(fleet, fast_grid, REPEATS)
+        dense_s = profiling_cost_seconds(fleet, dense_grid(MAX_TOKENS), REPEATS)
+        res = profile_fleet(
+            simulator_measure_fn(fleet), NUM_DEVICES, max_tokens=MAX_TOKENS,
+            tile=model.tile, repeats=3, sparse_above=16 * model.tile,
+            sparse_stride=2048,
+        )
+        rows.append(
+            dict(
+                model=model.name,
+                samples=res.num_samples,
+                fast_device_minutes=fast_s / 60,
+                dense_device_hours=dense_s / 3600,
+                speedup=dense_s / fast_s,
+            )
+        )
+    return rows
+
+
+def summarize(rows):
+    speedups = [r["speedup"] for r in rows]
+    return {
+        "min_speedup": min(speedups),
+        "max_speedup": max(speedups),
+        "fast_minutes_range": (
+            min(r["fast_device_minutes"] for r in rows),
+            max(r["fast_device_minutes"] for r in rows),
+        ),
+    }
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(f"{r['model']:16s} samples={r['samples']:4d} "
+              f"fast={r['fast_device_minutes']:6.2f} min  "
+              f"dense={r['dense_device_hours']:6.2f} h  "
+              f"speedup={r['speedup']:6.1f}x")
+    print(summarize(rows))

@@ -1,0 +1,38 @@
+"""Paper Fig. 19 + §6: variability grows with fleet size.
+
+Monte-Carlo resampling (10k samples per N) of the calibrated L40 throughput
+distribution: expected slowest-to-fastest gap vs system size. Anchors:
+11.9% at N=4 (paper-exact), monotone growth toward >20% at N=64.
+"""
+from __future__ import annotations
+
+from repro.core import L40_FLEET, MI300X_FLEET, TRAINIUM_FLEET, expected_gap_curve
+
+SIZES = (2, 4, 8, 16, 32, 64, 128)
+
+
+def run(num_samples: int = 10_000):
+    rows = []
+    for name, dist in (("l40", L40_FLEET), ("mi300x", MI300X_FLEET),
+                       ("trainium", TRAINIUM_FLEET)):
+        curve = expected_gap_curve(list(SIZES), dist=dist,
+                                   num_samples=num_samples)
+        for n, gap in curve.items():
+            rows.append(dict(platform=name, n=n, gap_pct=100 * gap))
+    return rows
+
+
+def summarize(rows):
+    l40 = {r["n"]: r["gap_pct"] for r in rows if r["platform"] == "l40"}
+    return {
+        "gap_at_4_pct": l40[4],
+        "gap_at_64_pct": l40[64],
+        "monotone": all(l40[a] < l40[b] for a, b in zip(SIZES, SIZES[1:])),
+    }
+
+
+if __name__ == "__main__":
+    rows = run(4000)
+    for r in rows:
+        print(f"{r['platform']:9s} N={r['n']:4d} gap={r['gap_pct']:5.1f}%")
+    print(summarize(rows))

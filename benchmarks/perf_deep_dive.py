@@ -1,0 +1,104 @@
+"""§Perf profiling tool: per-collective breakdown for one (arch × shape).
+
+Recompiles the cell and lists every collective instruction with its
+trip-multiplied operand bytes and the jaxpr op_name path — the "profile"
+the hypothesis loop reads (this container has no wall-clock TPU profile;
+the lowered IR is the profile, per the dry-run methodology).
+
+    PYTHONPATH=src python -m benchmarks.perf_deep_dive mixtral-8x7b train_4k
+"""
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+import re
+import sys
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import build_step_fn
+from repro.launch.hlo_analysis import (
+    COLLECTIVES,
+    _build_factors,
+    _group_size,
+    _line_shape_bytes,
+    compute_stats,
+)
+from repro.launch.mesh import make_production_mesh, policy_for
+from repro.launch.specs import input_specs
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def compile_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 config=None, policy=None):
+    config = config or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = policy or policy_for(
+        mesh, step_kind=shape.kind, global_batch=shape.global_batch,
+        config=config,
+    )
+    kwargs, _ = input_specs(config, shape, policy)
+    fn, donate = build_step_fn(config, shape, policy)
+    with mesh:
+        compiled = (
+            jax.jit(fn, donate_argnames=donate or None)
+            .lower(**kwargs)
+            .compile()
+        )
+    return compiled, config, policy
+
+
+def top_collectives(text: str, n: int = 15) -> list[dict]:
+    comps, entry, factors, _ = _build_factors(text, 1)
+    items = []
+    for comp, lines in comps.items():
+        f = factors.get(comp, 0.0)
+        if not f:
+            continue
+        for line in lines:
+            ls = line.strip()
+            for kind in COLLECTIVES:
+                if f" {kind}(" in ls or f" {kind}-start(" in ls:
+                    size = _line_shape_bytes(ls.split("= ", 1)[-1])
+                    if size is None:
+                        continue
+                    g = _group_size(ls)
+                    if kind == "all-gather":
+                        operand = size / g
+                    elif kind == "reduce-scatter":
+                        operand = size * g
+                    else:
+                        operand = size
+                    m = _OPNAME_RE.search(ls)
+                    items.append(
+                        dict(
+                            kind=kind, trips=f, group=g,
+                            bytes_total=operand * f,
+                            op_name=(m.group(1) if m else "?")[-110:],
+                        )
+                    )
+                    break
+    items.sort(key=lambda d: -d["bytes_total"])
+    return items[:n]
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    compiled, _, _ = compile_cell(arch, shape)
+    text = compiled.as_text()
+    stats = compute_stats(text)
+    print(f"{arch} × {shape}: walk flops={stats['flops']:.3e} "
+          f"bytes={stats['bytes']:.3e}")
+    total = 0.0
+    for it in top_collectives(text):
+        total += it["bytes_total"]
+        print(f"  {it['kind']:18s} ×{it['trips']:5.0f} g={it['group']:3d} "
+              f"{it['bytes_total']/1e9:8.2f} GB  {it['op_name']}")
+    print(f"  (top-15 sum: {total/1e9:.1f} GB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract:
+``us_per_call`` is the mean wall time of the benchmark's core operation;
+``derived`` carries the headline quantity the paper reports for that
+table/figure. A JSON dump of every row lands in results/bench.json.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run``
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_fig02_utilization():
+    from . import fig02_utilization as m
+
+    (rows, extra), us = _timed(m.run)
+    s = m.summarize(rows, extra)
+    return rows, us / len(rows), (
+        f"max_over_uniform={s['max_over_uniform_peak']:.1f}x;"
+        f"top8_overlap={s['mean_top8_overlap']:.2f}"
+    )
+
+
+def bench_fig10_trace_length():
+    from . import fig10_trace_length as m
+
+    rows, us = _timed(m.run)
+    s = m.summarize(rows)
+    sat = all(v["saturated_by_16"] for v in s.values())
+    worst1 = min(v["at_1"] for v in s.values())
+    return rows, us / len(rows), (
+        f"saturates_by_16={sat};min_reduction_at_T1={worst1:.1f}pct"
+    )
+
+
+def bench_fig15_e2e():
+    from . import fig15_e2e as m
+
+    rows, us = _timed(m.run)
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"high_mean={s['high']['mean_pct']:.1f}pct;"
+        f"high_max={s['high']['max_pct']:.1f}pct;"
+        f"moderate_mean={s['moderate']['mean_pct']:.1f}pct;"
+        f"low_mean={s['low']['mean_pct']:.1f}pct"
+    )
+
+
+def bench_fig16_tpot():
+    from . import fig16_tpot as m
+
+    rows, us = _timed(m.run, ("high",))
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"p90_mean={s['p90_mean_pct']:.1f}pct;p90_max={s['p90_max_pct']:.1f}pct;"
+        f"mean_vs_p99_spread={s['mean_vs_p99_spread_pts']:.2f}pts"
+    )
+
+
+def bench_fig17_policies():
+    from . import fig17_policies as m
+
+    (rows, _info), us = _timed(m.run)
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"gem_vs_linear={s['gem_vs_linear_pct']:.1f}pct;"
+        f"gem_vs_eplb={s['gem_vs_eplb_pts']:.1f}pts;"
+        f"drains_slow={s['gem_drains_slow_device']}"
+    )
+
+
+def bench_fig18_profiling():
+    from . import fig18_profiling as m
+
+    rows, us = _timed(m.run)
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"speedup={s['min_speedup']:.0f}x..{s['max_speedup']:.0f}x;"
+        f"fast_minutes={s['fast_minutes_range'][0]:.1f}.."
+        f"{s['fast_minutes_range'][1]:.1f}"
+    )
+
+
+def bench_fig19_scale():
+    from . import fig19_scale as m
+
+    rows, us = _timed(m.run)
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"gap_N4={s['gap_at_4_pct']:.1f}pct;gap_N64={s['gap_at_64_pct']:.1f}pct;"
+        f"monotone={s['monotone']}"
+    )
+
+
+def bench_tab_convergence():
+    from . import tab_convergence as m
+
+    rows, us = _timed(m.run)
+    s = m.summarize(rows)
+    return rows, us / len(rows), (
+        f"max_swaps={s['max_swaps_any_model']};"
+        f"under_18={s['under_paper_bound_18']};"
+        f"map_s_per_layer={s['max_mapping_s_per_layer']:.2f}"
+    )
+
+
+def bench_kernels():
+    """Pallas-kernel oracle micro-bench (jnp path timing on this CPU host;
+    the Pallas kernels themselves validate under interpret=True in tests)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import moe_ffn_ref
+
+    key = jax.random.PRNGKey(0)
+    E, C, D, F = 8, 256, 512, 1024
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (E, C, D), jnp.float32)
+    wg = jax.random.normal(ks[1], (E, D, F), jnp.float32) * 0.05
+    wu = jax.random.normal(ks[2], (E, D, F), jnp.float32) * 0.05
+    wd = jax.random.normal(ks[3], (E, F, D), jnp.float32) * 0.05
+    ffn = jax.jit(moe_ffn_ref)
+    ffn(x, wg, wu, wd).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ffn(x, wg, wu, wd).block_until_ready()
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    flops = 6 * E * C * D * F
+    return [], us, f"moe_ffn_ref_gflops={flops / (us * 1e-6) / 1e9:.1f}"
+
+
+def bench_roofline():
+    from . import roofline as m
+
+    if not os.path.exists("results/dryrun.json"):
+        return [], 0.0, "missing_results/dryrun.json_run_dryrun_first"
+    (rows, summary), us = _timed(m.run)
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(m.to_markdown(rows))
+    return rows, us / max(len(rows), 1), (
+        f"cells_ok={summary['cells_ok']};fits_all={summary['all_fit_16gb']};"
+        f"dominant={summary['dominant_hist']}"
+    )
+
+
+BENCHES = [
+    ("fig02_expert_utilization", bench_fig02_utilization),
+    ("fig10_trace_length", bench_fig10_trace_length),
+    ("fig15_e2e_latency", bench_fig15_e2e),
+    ("fig16_tpot_tail", bench_fig16_tpot),
+    ("fig17_mapping_policies", bench_fig17_policies),
+    ("fig18_profiling_cost", bench_fig18_profiling),
+    ("fig19_variability_at_scale", bench_fig19_scale),
+    ("tab_search_convergence", bench_tab_convergence),
+    ("kernel_moe_ffn", bench_kernels),
+    ("roofline_from_dryrun", bench_roofline),
+]
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    all_rows = {}
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        try:
+            rows, us, derived = fn()
+            all_rows[name] = rows
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # surface, don't mask
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    with open("results/bench.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end serving driver: a Mixtral-family MoE served with batched
+requests through the continuous-batching engine, with GEM profiling,
+trace collection, placement search and in-deployment expert swap.
+
+    PYTHONPATH=src python examples/serve_moe.py [--policy gem|eplb|linear]
+                                                [--requests 24] [--arch ...]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    DeviceFleet,
+    GEMConfig,
+    profile_fleet,
+    setup_speeds,
+    simulator_measure_fn,
+)
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+from repro.sharding import host_policy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--policy", default="gem",
+                    choices=("gem", "eplb", "linear"))
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--variability", default="high",
+                    choices=("high", "moderate", "low"))
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_smoke_config(args.arch), decode_capacity_factor=4.0
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+
+    # emulated 4-device fleet + Step-2 profile
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds(args.variability, 4), tile=8, tile_time=40e-6
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet), 4, max_tokens=512, tile=8, repeats=5
+    ).profile
+
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=8, max_len=128,
+            gem=GEMConfig(trace_length=16, num_restarts=10),
+            placement_policy=args.policy,
+            other_time_per_step=2e-4,
+        ),
+        profile=profile, num_devices=4,
+    )
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 32)))
+        eng.submit(prompt, max_new_tokens=args.max_new_tokens)
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    report = eng.latency_report()
+    print(f"policy={args.policy} variability={args.variability}")
+    print(f"served {len(done)} requests in {eng.step_count} engine steps "
+          f"({wall:.1f}s wall on this host)")
+    print(f"placement re-plan applied: {eng.placement_applied}")
+    print("simulated fleet latency (the paper's figure of merit):")
+    for k in ("mean_tpot", "p90_tpot", "p99_tpot", "mean_e2e"):
+        if k in report:
+            print(f"  {k:10s} = {report[k]*1e3:8.3f} ms")
+    sample = done[0]
+    print(f"sample completion (uid={sample.uid}): {sample.generated[:12]}…")
+
+
+if __name__ == "__main__":
+    main()

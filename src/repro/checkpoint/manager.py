@@ -1,0 +1,157 @@
+"""Sharding-aware checkpointing with atomic commit and elastic re-mesh.
+
+Layout (one directory per step)::
+
+    <root>/step_00000100/
+        arrays.npz     flat {path: ndarray} of every leaf
+        manifest.json  tree structure + shapes/dtypes + user metadata
+        COMMIT         empty marker written last — a step directory without
+                       it is torn (crashed mid-save) and is ignored/cleaned
+
+Fault-tolerance contract:
+  * **atomic**: readers only trust committed steps; a kill at any point
+    leaves the previous committed step intact (tested).
+  * **exact resume**: the manifest carries opaque user state (data iterator
+    position, RNG, GEM placements) so a restart reproduces the exact batch
+    sequence.
+  * **elastic re-mesh**: arrays are stored unsharded (gathered at save); a
+    restore may target *any* mesh — the caller re-device_puts with the new
+    sharding specs (`restore_sharded` does this in one call). Saving gathers
+    via ``jax.device_get``, which is the right call at reproduction scale;
+    a per-shard variant would swap ``_flatten``'s leaf handler only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten_into(skeleton, flat, prefix=""):
+    if isinstance(skeleton, dict):
+        return {
+            k: _unflatten_into(v, flat, f"{prefix}{k}/")
+            for k, v in skeleton.items()
+        }
+    if isinstance(skeleton, (list, tuple)):
+        seq = [
+            _unflatten_into(v, flat, f"{prefix}{i}/")
+            for i, v in enumerate(skeleton)
+        ]
+        return type(skeleton)(seq)
+    if skeleton is None:
+        return None
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # -- discovery -----------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def committed_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "COMMIT")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    # -- save / restore ------------------------------------------------------
+    def save(self, step: int, state, *, extra: dict | None = None) -> str:
+        d = self._step_dir(step)
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "paths": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                      for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        # commit: marker inside, then atomic rename of the directory
+        open(os.path.join(tmp, "COMMIT"), "w").close()
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)
+        self._gc()
+        return d
+
+    def restore(self, skeleton, *, step: int | None = None):
+        """Returns (state host-arrays matching ``skeleton``, extra dict, step)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.root}")
+        d = self._step_dir(step)
+        if not os.path.exists(os.path.join(d, "COMMIT")):
+            raise FileNotFoundError(f"step {step} is not committed")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        state = _unflatten_into(skeleton, flat)
+        return state, manifest["extra"], step
+
+    def restore_sharded(self, skeleton, shardings, *, step: int | None = None):
+        """Restore and place onto a (possibly different) mesh in one call.
+
+        ``shardings`` mirrors ``skeleton`` with NamedShardings (or None for
+        host arrays). This is the elastic re-mesh path: a checkpoint written
+        on mesh A restores onto mesh B because arrays are stored unsharded.
+        """
+        state, extra, step = self.restore(skeleton, step=step)
+
+        def place(x, s):
+            if x is None:
+                return None
+            return jax.device_put(x, s) if s is not None else x
+
+        state = jax.tree.map(
+            place, state, shardings,
+            is_leaf=lambda t: t is None or isinstance(t, np.ndarray),
+        )
+        return state, extra, step
+
+    # -- retention -----------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self.committed_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

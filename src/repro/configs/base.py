@@ -1,0 +1,175 @@
+"""Model configuration schema and input-shape sets.
+
+One :class:`ModelConfig` per assigned architecture lives in
+``repro/configs/<id>.py`` with the exact published dimensions; every config
+also provides a ``smoke()`` reduction (same family, tiny dims) used by the
+CPU smoke tests. The full configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_applicable"]
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // num_heads
+    # --- attention details ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int = 0  # 0 → full attention
+    rope_theta: float = 10_000.0
+    # --- MLP ---
+    mlp_activation: str = "swiglu"  # swiglu | geglu
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0  # per-expert hidden size (granite: 512)
+    expert_tp: int = 1  # virtual-expert factorization degree (see models/moe.py)
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    decode_capacity_factor: float = 2.0
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0  # N (state size per head); 0 → no ssm blocks
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # --- hybrid (zamba2-style) ---
+    attn_every: int = 0  # shared attention block applied every N ssm blocks
+    # --- modality frontend stub ---
+    frontend: str = ""  # "" | "audio" | "vision"
+    num_patches: int = 0  # vision: patch embeddings prepended to the sequence
+    # --- numerics ---
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # --- decode cache write: "dus" writes one slot in place (O(1) bytes);
+    # "onehot" blends the whole cache (O(cache) bytes, but partitions
+    # trivially) — see EXPERIMENTS.md §Perf for the measured comparison ---
+    decode_cache_update: str = "dus"
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # -- derived quantities --------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 128 so embedding tables shard evenly on any
+        mesh axis (Megatron-style padding; padded logits are masked)."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.ssm_state > 0 and self.attn_every == 0
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.ssm_state > 0 and self.attn_every > 0
+
+    @property
+    def has_attention(self) -> bool:
+        return not self.is_ssm
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM / hybrid / sliding-window attention."""
+        return self.ssm_state > 0 or self.sliding_window > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def ffn_hidden(self) -> int:
+        return self.expert_d_ff if self.is_moe else self.d_ff
+
+    def param_count(self) -> int:
+        """Approximate total parameter count N (for 6·N·D roofline checks)."""
+        D, V = self.d_model, self.vocab_size
+        total = V * D  # embedding
+        if not self.tie_embeddings:
+            total += V * D  # lm head
+        per_layer = 0
+        if self.ssm_state > 0:
+            di, ns = self.d_inner, self.ssm_state
+            nh = self.ssm_heads
+            # in_proj (z, x, B, C, dt) + out_proj + conv + head params
+            per_layer_ssm = (
+                D * (2 * di + 2 * ns + nh) + di * D + self.ssm_conv * (di + 2 * ns) + 2 * nh
+            )
+        if self.is_ssm:
+            per_layer = per_layer_ssm + D  # + norm
+            total += self.num_layers * per_layer
+            return total
+        # attention params
+        hd, H, KV = self.head_dim, self.num_heads, self.num_kv_heads
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        if self.is_moe:
+            ffn = self.num_experts * (3 * D * self.expert_d_ff) + D * self.num_experts
+        else:
+            ffn = 3 * D * self.d_ff
+        if self.is_hybrid:
+            # ssm blocks every layer + one shared attention+mlp block
+            total += self.num_layers * (per_layer_ssm + D)
+            total += attn + 3 * D * self.d_ff + 2 * D  # shared block (one copy)
+            return total
+        total += self.num_layers * (attn + ffn + 2 * D)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        D = self.d_model
+        dense = self.param_count() - self.num_layers * self.num_experts * (
+            3 * D * self.expert_d_ff
+        )
+        return dense + self.num_layers * self.experts_per_token * (
+            3 * D * self.expert_d_ff
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(config: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, per the assignment rules."""
+    if shape.name == "long_500k" and not config.sub_quadratic:
+        return False, "skipped(full-attn): 500k decode needs sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,148 @@
+"""Staircase latency model for MoE expert compute (paper §3.3.2).
+
+MoE kernels process tokens in fixed-size *tiles* (multiples of 32/64 on GPU;
+the MXU-aligned block rows of our Pallas grouped GEMM on TPU). Latency is flat
+within a tile and jumps at tile boundaries — a staircase. GEM exploits this to
+profile devices only at tile boundaries instead of every token count.
+
+Two uses:
+  * ``StaircaseLatencyModel`` — the ground-truth device simulator used by the
+    benchmark/simulation layer (the analogue of a physical accelerator with a
+    given sustained throughput multiplier).
+  * ``fit_profile`` / sampling utilities used by the profiler to reconstruct a
+    :class:`~repro.core.types.VariabilityProfile` from (simulated or measured)
+    latency samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "StaircaseLatencyModel",
+    "DeviceFleet",
+    "tile_boundary_grid",
+    "dense_grid",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StaircaseLatencyModel:
+    """Ground-truth latency of one device's MoE layer vs token count.
+
+    latency(n) = base + ceil(n / tile) * tile_time / speed
+
+    ``speed`` is the device's throughput multiplier (1.0 = nominal; the paper's
+    L40 fleet spans roughly [0.88, 1.11] around the mean). ``base`` models
+    kernel-launch / dispatch overhead, which the paper observes is *not*
+    proportional to load, so a slow device is slow mostly in its tile time.
+    ``jitter`` adds multiplicative measurement noise when sampling.
+    """
+
+    tile: int = 512  # tokens per latency step (paper Fig. 7: 512 on L40)
+    tile_time: float = 120e-6  # seconds per tile at speed 1.0
+    base: float = 35e-6  # fixed per-invocation overhead (s)
+    speed: float = 1.0  # relative throughput of this device
+    jitter: float = 0.0  # stdev of multiplicative measurement noise
+
+    def latency(self, tokens, rng: np.random.Generator | None = None) -> np.ndarray:
+        tokens = np.asarray(tokens, dtype=np.float64)
+        tiles = np.ceil(np.maximum(tokens, 0) / self.tile)
+        lat = (self.base + tiles * self.tile_time) / self.speed
+        if self.jitter > 0.0:
+            if rng is None:
+                rng = np.random.default_rng(0)
+            lat = lat * (1.0 + rng.normal(0.0, self.jitter, size=lat.shape))
+        return lat
+
+    def measure(
+        self, tokens: int, repeats: int, rng: np.random.Generator
+    ) -> float:
+        """Simulate ``repeats`` kernel launches and return the mean latency.
+
+        This is the microbenchmark primitive of Step-2: each call costs
+        ``repeats * latency`` of (simulated) device time, which the profiler
+        budget accounting charges.
+        """
+        samples = self.latency(np.full(repeats, tokens, dtype=np.int64), rng=rng)
+        return float(samples.mean())
+
+
+@dataclasses.dataclass
+class DeviceFleet:
+    """A set of devices with heterogeneous speeds (one EP group each)."""
+
+    models: Sequence[StaircaseLatencyModel]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.models)
+
+    @property
+    def speeds(self) -> np.ndarray:
+        return np.asarray([m.speed for m in self.models])
+
+    @staticmethod
+    def homogeneous(
+        num_devices: int, *, tile: int = 512, tile_time: float = 120e-6,
+        base: float = 35e-6, jitter: float = 0.0,
+    ) -> "DeviceFleet":
+        return DeviceFleet(
+            [
+                StaircaseLatencyModel(tile, tile_time, base, 1.0, jitter)
+                for _ in range(num_devices)
+            ]
+        )
+
+    @staticmethod
+    def from_speeds(
+        speeds: Sequence[float], *, tile: int = 512, tile_time: float = 120e-6,
+        base: float = 35e-6, jitter: float = 0.0,
+    ) -> "DeviceFleet":
+        return DeviceFleet(
+            [
+                StaircaseLatencyModel(tile, tile_time, base, float(s), jitter)
+                for s in speeds
+            ]
+        )
+
+    def latency_matrix(self, token_grid: np.ndarray) -> np.ndarray:
+        """(G, S) noiseless latencies over a token grid."""
+        return np.stack([m.latency(token_grid) for m in self.models])
+
+
+def tile_boundary_grid(
+    max_tokens: int,
+    tile: int,
+    *,
+    sparse_above: int | None = None,
+    sparse_stride: int = 4096,
+) -> np.ndarray:
+    """GEM's fast profiling grid (paper §3.3.2).
+
+    Samples one point per tile boundary (the only places latency can change)
+    up to ``sparse_above``, then switches to sparse sampling every
+    ``sparse_stride`` tokens, relying on linear interpolation between samples
+    — the per-tile increment is a vanishing fraction of total latency at high
+    counts.
+    """
+    if sparse_above is None:
+        sparse_above = min(max_tokens, 16 * tile)
+    dense = np.arange(tile, min(sparse_above, max_tokens) + 1, tile)
+    grid = [np.asarray([1], dtype=np.int64), dense.astype(np.int64)]
+    if max_tokens > sparse_above:
+        sparse = np.arange(
+            sparse_above + sparse_stride, max_tokens + 1, sparse_stride
+        )
+        grid.append(sparse.astype(np.int64))
+    out = np.unique(np.concatenate(grid))
+    if out[-1] != max_tokens:
+        out = np.append(out, max_tokens)
+    return out
+
+
+def dense_grid(max_tokens: int) -> np.ndarray:
+    """The naive full sweep (every token count) — the paper's slow baseline."""
+    return np.arange(1, max_tokens + 1, dtype=np.int64)

@@ -1,0 +1,210 @@
+"""Eq. 1 mapping score and fast incremental scoring for the placement search.
+
+    S(M) = sum_t  max_g  C_g( n_g(M, t) )
+
+``n_g(M,t)`` is the token count device ``g`` receives at trace step ``t`` under
+mapping ``M``; ``C_g`` is that device's profiled latency curve; the inner max
+is the straggler at step ``t`` (paper §3.3.3, Fig. 13).
+
+The swap search evaluates O(E^2) candidate swaps per iteration; naively that is
+O(E^2 · T · G) interpolations. ``IncrementalScorer`` keeps the per-step
+per-device token matrix and the per-step top-3 cost statistics so each swap is
+scored with two curve lookups per step, vectorized over all pairs at once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .types import ExpertTrace, Placement, VariabilityProfile
+
+__all__ = ["score", "per_step_latency", "IncrementalScorer"]
+
+
+def per_step_latency(
+    trace: ExpertTrace, profile: VariabilityProfile, placement: Placement
+) -> np.ndarray:
+    """(T,) straggler latency of each trace step under ``placement``."""
+    n = trace.per_device_tokens(placement)  # (T, G)
+    costs = profile.cost_all(n)  # (T, G)
+    return costs.max(axis=1)
+
+
+def score(
+    trace: ExpertTrace, profile: VariabilityProfile, placement: Placement
+) -> float:
+    """S(M): summed straggler latency over the trace (Eq. 1)."""
+    return float(per_step_latency(trace, profile, placement).sum())
+
+
+class IncrementalScorer:
+    """Incremental S(M) evaluation over add-expert and swap-pair moves.
+
+    Maintains:
+      * ``tokens``    (T, G)  per-step per-device token counts,
+      * ``costs``     (T, G)  per-step per-device latencies,
+      * per-step top-3 cost values/indices (so a swap touching two devices can
+        reconstruct the straggler max without a full G-wide re-max).
+    """
+
+    def __init__(self, trace: ExpertTrace, profile: VariabilityProfile):
+        if profile.num_devices <= 0:
+            raise ValueError("profile must cover at least one device")
+        self.trace = trace
+        self.profile = profile
+        self.T = trace.num_steps
+        self.E = trace.num_experts
+        self.G = profile.num_devices
+        self.counts = trace.counts.astype(np.float64)  # (T, E)
+        self._xp = profile.token_counts.astype(np.float64)
+        self._fp = profile.latencies  # (G, S)
+        self.device_of = np.full(self.E, -1, dtype=np.int32)
+        self.tokens = np.zeros((self.T, self.G), dtype=np.float64)
+        self.costs = self._cost_matrix(self.tokens)
+
+    # -- curve lookups -----------------------------------------------------
+    def _cost(self, g: int, tokens: np.ndarray) -> np.ndarray:
+        return np.interp(tokens, self._xp, self._fp[g])
+
+    def _cost_matrix(self, tokens: np.ndarray) -> np.ndarray:
+        out = np.empty_like(tokens)
+        for g in range(self.G):
+            out[:, g] = self._cost(g, tokens[:, g])
+        return out
+
+    # -- state -------------------------------------------------------------
+    def placement(self) -> Placement:
+        if (self.device_of < 0).any():
+            raise ValueError("not all experts are placed yet")
+        return Placement(self.device_of.copy(), self.G)
+
+    def load_placement(self, placement: Placement) -> None:
+        self.device_of = placement.expert_to_device.copy()
+        self.tokens = self.counts @ self._onehot(placement)
+        self.costs = self._cost_matrix(self.tokens)
+
+    def _onehot(self, placement: Placement) -> np.ndarray:
+        oh = np.zeros((self.E, self.G), dtype=np.float64)
+        oh[np.arange(self.E), placement.expert_to_device] = 1.0
+        return oh
+
+    def score(self) -> float:
+        return float(self.costs.max(axis=1).sum())
+
+    def per_device_share(self) -> np.ndarray:
+        """Fraction of total tokens each device processes (diagnostic)."""
+        tot = self.tokens.sum()
+        return self.tokens.sum(axis=0) / max(tot, 1.0)
+
+    # -- greedy construction (Alg. 2 inner step) ----------------------------
+    def placed_count(self) -> np.ndarray:
+        cnt = np.zeros(self.G, dtype=np.int64)
+        placed = self.device_of >= 0
+        if placed.any():
+            cnt = np.bincount(self.device_of[placed], minlength=self.G)
+        return cnt
+
+    def score_with_add(self, e: int) -> np.ndarray:
+        """(G,) partial-mapping score if expert ``e`` were placed on each device."""
+        col = self.counts[:, e]  # (T,)
+        # For each candidate device g, only column g changes.
+        # max' = max(max over g'!=g, new cost_g). Use top-2 stats.
+        top1 = self.costs.max(axis=1)
+        arg1 = self.costs.argmax(axis=1)
+        tmp = self.costs.copy()
+        tmp[np.arange(self.T), arg1] = -np.inf
+        top2 = tmp.max(axis=1)
+        scores = np.empty(self.G, dtype=np.float64)
+        for g in range(self.G):
+            new_cost_g = self._cost(g, self.tokens[:, g] + col)
+            others = np.where(arg1 == g, top2, top1)
+            scores[g] = np.maximum(others, new_cost_g).sum()
+        return scores
+
+    def add_expert(self, e: int, g: int) -> None:
+        if self.device_of[e] >= 0:
+            raise ValueError(f"expert {e} already placed")
+        self.device_of[e] = g
+        self.tokens[:, g] += self.counts[:, e]
+        self.costs[:, g] = self._cost(g, self.tokens[:, g])
+
+    # -- swap search (Alg. 3 inner step) -------------------------------------
+    def _top3(self):
+        """Per-step top-3 cost values and their device indices."""
+        # argpartition for top3 along axis 1
+        G = self.G
+        k = min(3, G)
+        idx = np.argpartition(-self.costs, kth=k - 1, axis=1)[:, :k]
+        vals = np.take_along_axis(self.costs, idx, axis=1)
+        order = np.argsort(-vals, axis=1)
+        vals = np.take_along_axis(vals, order, axis=1)
+        idx = np.take_along_axis(idx, order, axis=1)
+        if k < 3:  # pad so downstream indexing is uniform
+            pad = 3 - k
+            vals = np.concatenate(
+                [vals, np.full((self.T, pad), -np.inf)], axis=1
+            )
+            idx = np.concatenate(
+                [idx, np.full((self.T, pad), -1, dtype=idx.dtype)], axis=1
+            )
+        return vals, idx
+
+    def best_swap(self) -> tuple[int, int, float]:
+        """Evaluate all cross-device expert swaps; return (e_a, e_b, new_score).
+
+        Vectorized over all pairs. Returns the pair minimizing the new score
+        (ties broken arbitrarily); if no swap helps, the returned score is
+        >= the current score and the caller decides to stop.
+        """
+        E, T = self.E, self.T
+        dev = self.device_of
+        ea, eb = np.triu_indices(E, k=1)
+        cross = dev[ea] != dev[eb]
+        ea, eb = ea[cross], eb[cross]
+        P = len(ea)
+        if P == 0:
+            return -1, -1, self.score()
+        dA = dev[ea]  # (P,)
+        dB = dev[eb]
+        delta = self.counts[:, eb] - self.counts[:, ea]  # (T, P)
+        newA = self.tokens[:, dA] + delta  # (T, P) tokens on device A after swap
+        newB = self.tokens[:, dB] - delta
+
+        costA = np.empty((T, P), dtype=np.float64)
+        costB = np.empty((T, P), dtype=np.float64)
+        for g in range(self.G):
+            mA = dA == g
+            if mA.any():
+                costA[:, mA] = np.interp(newA[:, mA], self._xp, self._fp[g])
+            mB = dB == g
+            if mB.any():
+                costB[:, mB] = np.interp(newB[:, mB], self._xp, self._fp[g])
+
+        vals, idx = self._top3()  # (T,3)
+        # "max over devices other than dA,dB" per (t, pair):
+        # first top-3 entry whose device is not dA and not dB.
+        i0 = idx[:, 0][:, None]
+        i1 = idx[:, 1][:, None]
+        v0 = np.broadcast_to(vals[:, 0][:, None], (T, P))
+        v1 = np.broadcast_to(vals[:, 1][:, None], (T, P))
+        v2 = np.broadcast_to(vals[:, 2][:, None], (T, P))
+        hit0 = (i0 == dA[None, :]) | (i0 == dB[None, :])
+        hit1 = (i1 == dA[None, :]) | (i1 == dB[None, :])
+        others = np.where(~hit0, v0, np.where(~hit1, v1, v2))
+        if self.G == 2:
+            others = np.full((T, P), -np.inf)
+
+        step_max = np.maximum(others, np.maximum(costA, costB))  # (T, P)
+        pair_scores = step_max.sum(axis=0)  # (P,)
+        best = int(pair_scores.argmin())
+        return int(ea[best]), int(eb[best]), float(pair_scores[best])
+
+    def apply_swap(self, e_a: int, e_b: int) -> None:
+        gA, gB = self.device_of[e_a], self.device_of[e_b]
+        if gA == gB:
+            raise ValueError("swap must cross devices")
+        delta = self.counts[:, e_b] - self.counts[:, e_a]
+        self.tokens[:, gA] += delta
+        self.tokens[:, gB] -= delta
+        self.device_of[e_a], self.device_of[e_b] = gB, gA
+        self.costs[:, gA] = self._cost(gA, self.tokens[:, gA])
+        self.costs[:, gB] = self._cost(gB, self.tokens[:, gB])

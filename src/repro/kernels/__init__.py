@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for GEM's compute hot-spots.
+
+* ``moe_gemm`` — fused grouped expert FFN (the MoE layer whose tile
+  staircase GEM's Step-2 profiler samples).
+* ``topk_router`` — fused softmax + top-k + renorm routing.
+
+``ops`` wraps both with backend detection (interpret=True on CPU);
+``ref`` holds the pure-jnp oracles the tests allclose against.
+"""
+from .ops import moe_ffn, moe_ffn_ref, topk_router, topk_router_ref
+
+__all__ = ["moe_ffn", "moe_ffn_ref", "topk_router", "topk_router_ref"]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused grouped expert FFN (gate ∘ up → silu·mul → down).
+
+This is GEM's compute hot-spot: the per-device expert GEMM whose *tile
+staircase* is exactly what the paper's Step-2 profiler samples (§3.3.2 —
+"latency only jumps upon crossing tile boundaries"). On TPU the tile is the
+``block_c`` row block feeding the 128×128 MXU, so the profiler samples token
+counts at multiples of ``block_c``.
+
+Layout (matches ``repro.models.moe``'s capacity dispatch): tokens arrive
+pre-grouped per (virtual) expert in a dense (E, C, D) buffer; weights are
+stacked (E, D, F) / (E, F, D). One kernel invocation computes
+
+    y[e, c, :] = (silu(x[e, c, :] @ Wg[e]) * (x[e, c, :] @ Wu[e])) @ Wd[e]
+
+Grid: (E, C/block_c, F/block_f) — experts and row blocks parallel, the F
+axis is the contraction of the second GEMM and accumulates into the output
+block (zeroed at the first F step). All operands are tiled into VMEM via
+BlockSpecs; accumulation is fp32 in the output ref, cast once at the end.
+
+VMEM budget per step (bf16): x (block_c·D) + Wg,Wu (2·D·block_f) +
+Wd (block_f·D) + out fp32 (block_c·D) — e.g. D=4096, block_c=128,
+block_f=256: ≈ 1 + 4 + 2 + 2 MB ≈ 9 MB < 16 MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_ffn_pallas"]
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, n_f_blocks: int):
+    f_idx = pl.program_id(2)
+
+    @pl.when(f_idx == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]  # (block_c, D)
+    wg = wg_ref[0]  # (D, block_f)
+    wu = wu_ref[0]
+    wd = wd_ref[0]  # (block_f, D)
+    h_gate = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    h_up = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h_gate) * h_up
+    o_ref[...] += jnp.dot(
+        h.astype(x.dtype), wd, preferred_element_type=jnp.float32
+    )[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_ffn_pallas(
+    x_e, w_gate, w_up, w_down, *, block_c: int = 128, block_f: int = 256,
+    interpret: bool = False,
+):
+    """x_e (E, C, D), w_gate/w_up (E, D, F), w_down (E, F, D) → (E, C, D).
+
+    C must divide by ``block_c`` and F by ``block_f`` (the dispatch pads
+    capacity to the tile size — that padding IS the latency staircase).
+    """
+    E, C, D = x_e.shape
+    F = w_gate.shape[-1]
+    if C % block_c or F % block_f:
+        raise ValueError(
+            f"C={C} must divide block_c={block_c}, F={F} block_f={block_f}"
+        )
+    grid = (E, C // block_c, F // block_f)
+    out = pl.pallas_call(
+        functools.partial(_ffn_kernel, n_f_blocks=F // block_f),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, D, block_f), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, block_f, D), lambda e, c, f: (e, f, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x_e, w_gate, w_up, w_down)
+    return out.astype(x_e.dtype)

@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs op-by-op in Python, which validates indexing/BlockSpec
+semantics against the ``ref.py`` oracles. On TPU the same calls compile to
+Mosaic. ``auto_interpret()`` picks per-backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from .moe_gemm import moe_ffn_pallas
+from .ref import moe_ffn_ref, topk_router_ref
+from .topk_router import topk_router_pallas
+
+__all__ = [
+    "auto_interpret",
+    "moe_ffn",
+    "topk_router",
+    "moe_ffn_ref",
+    "topk_router_ref",
+]
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def moe_ffn(x_e, w_gate, w_up, w_down, *, block_c: int = 128,
+            block_f: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return moe_ffn_pallas(
+        x_e, w_gate, w_up, w_down, block_c=block_c, block_f=block_f,
+        interpret=interpret,
+    )
+
+
+def topk_router(logits, k: int, *, block_t: int = 256,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = auto_interpret()
+    return topk_router_pallas(logits, k, block_t=block_t, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_ffn_ref", "topk_router_ref"]
+
+
+def moe_ffn_ref(x_e, w_gate, w_up, w_down):
+    """Grouped expert FFN oracle.
+
+    x_e (E, C, D) capacity-grouped tokens; w_gate/w_up (E, D, F);
+    w_down (E, F, D) → (E, C, D). fp32 accumulation like the kernel.
+    """
+    h_gate = jnp.einsum(
+        "ecd,edf->ecf", x_e, w_gate, preferred_element_type=jnp.float32
+    )
+    h_up = jnp.einsum(
+        "ecd,edf->ecf", x_e, w_up, preferred_element_type=jnp.float32
+    )
+    h = jax.nn.silu(h_gate) * h_up
+    y = jnp.einsum(
+        "ecf,efd->ecd", h.astype(x_e.dtype), w_down,
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x_e.dtype)
+
+
+def topk_router_ref(logits, k: int):
+    """Softmax → top-k ids + renormalized gates.
+
+    logits (T, E) fp32 → (gates (T, k) f32, ids (T, k) i32), ids sorted by
+    descending gate, ties broken toward the lower expert id.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)
+    gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return gates, ids.astype(jnp.int32)

@@ -1,0 +1,3 @@
+from .mesh import make_host_mesh, make_production_mesh, policy_for
+
+__all__ = ["make_host_mesh", "make_production_mesh", "policy_for"]

@@ -1,0 +1,75 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch mixtral-8x7b``.
+
+Host-scale driver around the continuous-batching engine (the production
+launch path would swap host_policy for policy_for(make_production_mesh())
+and real TPU profiling for the emulated fleet — everything else is shared).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_smoke_config
+from ..core import (
+    DeviceFleet,
+    GEMConfig,
+    profile_fleet,
+    setup_speeds,
+    simulator_measure_fn,
+)
+from ..models import init_params
+from ..serving import EngineConfig, ServingEngine
+from ..sharding import host_policy
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="mixtral-8x7b")
+    ap.add_argument("--policy", default="gem", choices=("gem", "eplb", "linear"))
+    ap.add_argument("--variability", default="high",
+                    choices=("high", "moderate", "low"))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--num-devices", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = dataclasses.replace(get_smoke_config(args.arch),
+                              decode_capacity_factor=4.0)
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    profile = None
+    if cfg.is_moe:
+        fleet = DeviceFleet.from_speeds(
+            setup_speeds(args.variability, args.num_devices),
+            tile=8, tile_time=40e-6,
+        )
+        profile = profile_fleet(
+            simulator_measure_fn(fleet), args.num_devices,
+            max_tokens=512, tile=8, repeats=5,
+        ).profile
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(max_batch=8, max_len=128,
+                     gem=GEMConfig(trace_length=16, num_restarts=10),
+                     placement_policy=args.policy,
+                     other_time_per_step=2e-4),
+        profile=profile, num_devices=args.num_devices,
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=int(rng.integers(8, 32))),
+                   max_new_tokens=args.max_new_tokens)
+    done = eng.run()
+    print(f"served {len(done)} requests, {eng.step_count} steps, "
+          f"replan={eng.placement_applied}")
+    for k, v in eng.latency_report().items():
+        print(f"  {k} = {v:.6f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

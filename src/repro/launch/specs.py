@@ -1,0 +1,192 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every lowered step.
+
+Weak-type-correct, sharding-attached, zero-allocation. The same specs drive
+the multi-pod dry-run (lower + compile) and the roofline extraction.
+
+Per shape kind:
+  * train_*    → ``train_step(state, batch[, placements])``
+  * prefill_*  → ``prefill(params, batch[, placements])``
+  * decode_* / long_* → ``decode_step(params, caches, cur_len, tokens[, placements])``
+
+Modality frontends are stubbed exactly as assigned: ``[vlm]`` batches carry
+precomputed patch embeddings (B, P, D); ``[audio]`` tokens are the EnCodec
+code stream (the backbone's own vocab).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.model import init_decode_cache, init_params
+from ..sharding.policy import ShardingPolicy
+
+__all__ = [
+    "abstract_params",
+    "abstract_state",
+    "cache_specs",
+    "batch_specs",
+    "input_specs",
+]
+
+
+def _named(policy: ShardingPolicy, spec):
+    return NamedSharding(policy.mesh, spec) if policy.mesh is not None else None
+
+
+def _attach(shapes, specs, policy: ShardingPolicy):
+    """Attach NamedShardings from a PartitionSpec tree onto a shape tree."""
+    def go(shape, spec):
+        return jax.ShapeDtypeStruct(
+            shape.shape, shape.dtype, sharding=_named(policy, spec)
+        )
+    return jax.tree.map(
+        go, shapes, specs,
+        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct),
+    )
+
+
+def abstract_params(config: ModelConfig, policy: ShardingPolicy,
+                    dtype=jnp.bfloat16):
+    """(ShapeDtypeStructs with shardings, PartitionSpec tree) — no allocation."""
+    cell: dict[str, Any] = {}
+
+    def build(key):
+        params, specs = init_params(config, key, policy, dtype=dtype)
+        cell["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    specs = cell["specs"]
+    return _attach(shapes, specs, policy), specs
+
+
+def abstract_opt_state(param_shapes, param_specs, policy: ShardingPolicy):
+    def f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
+    shapes = {
+        "mu": jax.tree.map(f32, param_shapes),
+        "nu": jax.tree.map(f32, param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    specs = {"mu": param_specs, "nu": param_specs, "step": P()}
+    return _attach(shapes, specs, policy), specs
+
+
+def abstract_state(config: ModelConfig, policy: ShardingPolicy,
+                   dtype=jnp.bfloat16):
+    """Abstract TrainState = {params, opt{mu, nu, step}} with shardings."""
+    p_shapes, p_specs = abstract_params(config, policy, dtype)
+    o_shapes, o_specs = abstract_opt_state(p_shapes, p_specs, policy)
+    return (
+        {"params": p_shapes, "opt": o_shapes},
+        {"params": p_specs, "opt": o_specs},
+    )
+
+
+def cache_specs(config: ModelConfig, policy: ShardingPolicy, batch: int,
+                max_len: int, dtype=jnp.bfloat16):
+    """(cache ShapeDtypeStructs with shardings, PartitionSpec tree)."""
+    shapes = jax.eval_shape(
+        lambda: init_decode_cache(config, batch, max_len, policy, dtype)
+    )
+    m = policy.model_axis
+    b = policy.cache_batch
+    kv = policy.kv_seq
+
+    def attn_spec(leading):
+        return {"k": P(*leading, b, kv, None, None),
+                "v": P(*leading, b, kv, None, None)}
+
+    def ssm_spec(leading):
+        lead = (None,) * len(leading)
+        return {
+            "state": P(*lead, b, m, None, None),
+            "conv_x": P(*lead, b, None, m),
+            "conv_b": P(*lead, b, None, None),
+            "conv_c": P(*lead, b, None, None),
+        }
+
+    specs: dict[str, Any] = {}
+    if config.is_hybrid:
+        specs["ssm_staged"] = ssm_spec((0, 0))
+        specs["attn"] = attn_spec((None,))
+        if "ssm_tail" in shapes:
+            specs["ssm_tail"] = ssm_spec((0,))
+    elif config.is_ssm:
+        specs["ssm"] = ssm_spec((0,))
+    else:
+        specs["attn"] = attn_spec((None,))
+    return _attach(shapes, specs, policy), specs
+
+
+def batch_specs(config: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    """Training/prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    b = policy.batch
+    P_tok = S
+    out: dict[str, Any] = {}
+    if config.frontend == "vision":
+        P_tok = S - config.num_patches
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, config.num_patches, config.d_model), jnp.bfloat16,
+            sharding=_named(policy, P(b, None, None)),
+        )
+    out["tokens"] = jax.ShapeDtypeStruct(
+        (B, P_tok), jnp.int32, sharding=_named(policy, P(b, None))
+    )
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=_named(policy, P(b, None))
+        )
+        if config.frontend == "vision":
+            out["loss_mask"] = jax.ShapeDtypeStruct(
+                (B, S), jnp.float32, sharding=_named(policy, P(b, None))
+            )
+    return out
+
+
+def placement_specs(config: ModelConfig, policy: ShardingPolicy):
+    Ev = config.num_experts * config.expert_tp
+    return jax.ShapeDtypeStruct(
+        (config.num_layers, Ev), jnp.int32, sharding=_named(policy, P(None, None))
+    )
+
+
+def input_specs(config: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    """Returns (kwargs dict of ShapeDtypeStructs) for the step of this shape."""
+    if shape.kind == "train":
+        state, state_specs = abstract_state(config, policy)
+        out = {"state": state, "batch": batch_specs(config, shape, policy)}
+        if config.is_moe:
+            out["placements"] = placement_specs(config, policy)
+        return out, {"state_specs": state_specs}
+    if shape.kind == "prefill":
+        params, p_specs = abstract_params(config, policy)
+        out = {"params": params, "batch": batch_specs(config, shape, policy)}
+        if config.is_moe:
+            out["placements"] = placement_specs(config, policy)
+        return out, {"param_specs": p_specs}
+    if shape.kind == "decode":
+        params, p_specs = abstract_params(config, policy)
+        caches, c_specs = cache_specs(
+            config, policy, shape.global_batch, shape.seq_len
+        )
+        b = policy.batch
+        out = {
+            "params": params,
+            "caches": caches,
+            "cur_len": jax.ShapeDtypeStruct((), jnp.int32, sharding=_named(policy, P())),
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32, sharding=_named(policy, P(b, None))
+            ),
+        }
+        if config.is_moe:
+            out["placements"] = placement_specs(config, policy)
+        return out, {"param_specs": p_specs, "cache_specs": c_specs}
+    raise ValueError(shape.kind)

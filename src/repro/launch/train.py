@@ -1,0 +1,74 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> --steps N``.
+
+Runs the smoke-scale config of the chosen architecture on this host with the
+full training substrate (AdamW, accumulation, checkpointing). On a real
+cluster the same step function lowers against make_production_mesh() — that
+path is exercised by the dry-run (``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..configs import ARCHS, get_smoke_config
+from ..models import init_params
+from ..sharding import host_policy
+from ..training import (
+    AdamWConfig,
+    DataConfig,
+    SyntheticTokenStream,
+    init_train_state,
+    make_train_step,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen2.5-14b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=2.0)
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    opt = AdamWConfig(learning_rate=1e-3, warmup_steps=10,
+                      total_steps=args.steps, compress=args.compress_grads)
+    step_fn = jax.jit(make_train_step(cfg, policy, opt, accum_steps=args.accum,
+                                      remat=False))
+    state = init_train_state(params, opt)
+    data = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.batch * args.accum,
+    ))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        state, extra, start = mgr.restore(state)
+        data.load_state_dict(extra["data"])
+        print(f"resumed at step {start}")
+
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        state, metrics = step_fn(state, next(data))
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"({time.perf_counter()-t0:.1f}s)")
+        if mgr and (step + 1) % 10 == 0:
+            mgr.save(step + 1, state, extra={"data": data.state_dict()})
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+from .attention import AttnCache, attention_decode, attention_train
+from .layers import cross_entropy_loss, gated_mlp, rms_norm
+from .model import (
+    decode_step,
+    forward_train,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from .moe import apply_placement, identity_placement, moe_layer, moe_layer_dense_ref
+from .ssm import SSMCache, ssm_decode, ssm_train
+
+__all__ = [
+    "AttnCache", "attention_decode", "attention_train",
+    "cross_entropy_loss", "gated_mlp", "rms_norm",
+    "decode_step", "forward_train", "init_decode_cache", "init_params",
+    "loss_fn", "prefill",
+    "apply_placement", "identity_placement", "moe_layer", "moe_layer_dense_ref",
+    "SSMCache", "ssm_decode", "ssm_train",
+]

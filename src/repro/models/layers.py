@@ -1,0 +1,179 @@
+"""Shared model layers: norms, RoPE, gated MLPs, vocab embedding/logits.
+
+All layers are pure functions over parameter dicts. Initialization helpers
+return (params, specs) pairs where ``specs`` mirrors the params tree with
+PartitionSpecs from the :class:`~repro.sharding.ShardingPolicy`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..sharding.policy import ShardingPolicy
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "gated_mlp",
+    "init_gated_mlp",
+    "embed_tokens",
+    "lm_logits",
+    "cross_entropy_loss",
+]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(positions, head_dim: int, theta: float):
+    """Rotary embedding tables: positions (…,) → cos/sin (…, head_dim/2)."""
+    freqs = 1.0 / (
+        theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, hd) with cos/sin (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU), tensor-parallel over d_ff
+# --------------------------------------------------------------------------
+
+def init_gated_mlp(
+    key, d_model: int, d_ff: int, *, num_layers: int, dtype, policy: ShardingPolicy
+):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = float(1.0 / np.sqrt(d_model))
+    scale_out = float(1.0 / np.sqrt(d_ff))
+    params = {
+        "w_gate": jax.random.normal(k1, (num_layers, d_model, d_ff), dtype) * scale_in,
+        "w_up": jax.random.normal(k2, (num_layers, d_model, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(k3, (num_layers, d_ff, d_model), dtype) * scale_out,
+    }
+    specs = {
+        "w_gate": policy.w_col(),
+        "w_up": policy.w_col(),
+        "w_down": policy.w_row(),
+    }
+    return params, specs
+
+
+def gated_mlp(x, p, *, activation: str, policy: ShardingPolicy,
+              seq_sharded_out: bool = False):
+    """x (B, S, D) replicated over model → TP over F → (B, S, D).
+
+    ``seq_sharded_out=True`` lands the output sequence-sharded (the psum of
+    the row-parallel matmul fuses into a reduce-scatter — Megatron-SP exit).
+    """
+    h_gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    h_up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h_gate = policy.act_ff_sharded(h_gate)
+    h_up = policy.act_ff_sharded(h_up)
+    if activation == "swiglu":
+        h = jax.nn.silu(h_gate) * h_up
+    elif activation == "geglu":
+        h = jax.nn.gelu(h_gate, approximate=True) * h_up
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if seq_sharded_out:
+        return policy.act_seq_sharded(out)
+    return policy.act_bsd(out)
+
+
+# --------------------------------------------------------------------------
+# Vocab embedding and logits
+# --------------------------------------------------------------------------
+
+def embed_tokens(ids, table, config: ModelConfig, policy: ShardingPolicy):
+    """ids (B, S) → (B, S, D).
+
+    Tied tables are stored vocab-sharded (they double as the LM head), so the
+    lookup is a chunked one-hot matmul (partial over the local vocab shard,
+    summed by GSPMD). Untied tables are d_model-sharded: plain take.
+    """
+    if config.tie_embeddings:
+        B, S = ids.shape
+        chunk = 512 if (S > 512 and S % 512 == 0) else S
+        n_chunks = max(S // chunk, 1)
+
+        def embed_chunk(c):
+            seg = jax.lax.dynamic_slice_in_dim(ids, c * chunk, chunk, axis=1)
+            onehot = jax.nn.one_hot(seg, config.padded_vocab, dtype=table.dtype)
+            # keep the one-hot vocab-sharded alongside the tied table
+            onehot = policy.constrain(onehot, policy.batch, None, policy.model_axis)
+            return jnp.einsum("bsv,vd->bsd", onehot, table)
+
+        if n_chunks == 1:
+            out = embed_chunk(0)
+        else:
+            out = (
+                jax.lax.map(embed_chunk, jnp.arange(n_chunks))
+                .transpose(1, 0, 2, 3)
+                .reshape(B, S, -1)
+            )
+    else:
+        out = jnp.take(table, ids, axis=0)
+    return policy.act_bsd(out)
+
+
+def lm_logits(x, params, config: ModelConfig, policy: ShardingPolicy,
+              *, mode: str = "train"):
+    """x (B, S, D) → logits (B, S, V).
+
+    ``train``/``prefill``: x is sequence-sharded; the head weight is gathered
+    (ZeRO-3) and the logits stay sequence-sharded with full vocab per shard —
+    the cross-entropy then needs no vocab collectives at all.
+    ``decode``: x (B, 1, D) replicated; the head stays vocab-sharded (TP) and
+    the (tiny) logits are gathered for sampling.
+    """
+    w = params["embed"] if config.tie_embeddings else params["lm_head"]
+    eq = "bsd,vd->bsv" if config.tie_embeddings else "bsd,dv->bsv"
+
+    def mask_pad(logits):
+        if config.padded_vocab == config.vocab_size:
+            return logits
+        pad = jnp.arange(config.padded_vocab) >= config.vocab_size
+        return jnp.where(pad, jnp.float32(-1e30), logits)
+
+    if mode == "decode":
+        logits = jnp.einsum(eq, x, w)
+        logits = mask_pad(logits.astype(jnp.float32))
+        return policy.constrain(logits, policy.batch, None, None)
+    w = policy.constrain(w, None, None)  # ZeRO-3 gather, once per step
+    logits = jnp.einsum(eq, x, w)
+    logits = mask_pad(logits.astype(jnp.float32))
+    return policy.constrain(logits, policy.batch, policy.model_axis, None)
+
+
+def cross_entropy_loss(logits, labels, *, mask=None):
+    """Stable CE. logits (B, S, V) fp32 (sequence-sharded under the policy —
+    the label one-hot inherits the sharding by propagation), labels (B, S).
+    ``mask`` (B, S) optional 0/1 validity (e.g. masking vision-patch slots).
+    """
+    vmax = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(vmax)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + vmax[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - label_logit
+    if mask is not None:
+        mask = mask.astype(nll.dtype)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,497 @@
+"""Model assembly: embed → scan(blocks) → norm → logits, for all 10 archs.
+
+Entry points (all pure functions):
+
+  * :func:`init_params`    — (params, specs) with per-layer weights stacked on
+    a leading L dim so the layer stack lowers to one ``lax.scan`` body.
+  * :func:`forward_train`  — full-sequence forward returning sequence-sharded
+    logits and MoE aux (expert counts per layer for GEM's Step-1).
+  * :func:`prefill`        — forward + KV/SSM caches, last-position logits.
+  * :func:`decode_step`    — one token against the caches.
+
+Architecture families:
+  dense/audio/vlm : [ln → attn → ln → mlp] × L
+  moe             : [ln → attn → ln → moe] × L (placement tables threaded)
+  ssm             : [ln → mamba2] × L
+  hybrid (zamba2) : stages of ``attn_every`` mamba blocks followed by one
+                    *shared-weight* attention+MLP block (single param copy,
+                    per-stage KV caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.policy import ShardingPolicy
+from .attention import AttnCache, attention_decode, attention_train, init_attention
+from .layers import (
+    cross_entropy_loss,
+    embed_tokens,
+    gated_mlp,
+    init_gated_mlp,
+    lm_logits,
+    rms_norm,
+)
+from .moe import identity_placement, init_moe, moe_layer
+from .ssm import SSMCache, init_ssm, ssm_decode, ssm_train
+
+__all__ = [
+    "init_params",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_decode_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _hybrid_split(config: ModelConfig) -> tuple[int, int]:
+    """(#layers inside staged scan, #leftover trailing mamba layers)."""
+    n_stages = config.num_layers // config.attn_every
+    staged = n_stages * config.attn_every
+    return staged, config.num_layers - staged
+
+
+def init_params(config: ModelConfig, key, policy: ShardingPolicy,
+                dtype=jnp.bfloat16):
+    L = config.num_layers
+    D = config.d_model
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+
+    V = config.padded_vocab  # padded rows never receive gradient signal:
+    # the embedding lookup can't select them and the logit mask zeroes them.
+    params["embed"] = jax.random.normal(keys[0], (V, D), dtype) * 0.02
+    specs["embed"] = (
+        policy.embed_tied() if config.tie_embeddings else policy.embed_untied()
+    )
+    if not config.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (D, V), dtype) * 0.02
+        specs["lm_head"] = policy.lm_head()
+    params["final_norm"] = jnp.zeros((D,), dtype)
+    specs["final_norm"] = policy.spec(None)
+
+    blocks: dict[str, Any] = {}
+    bspecs: dict[str, Any] = {}
+    if config.ssm_state > 0:
+        blocks["ln"] = jnp.zeros((L, D), dtype)
+        bspecs["ln"] = policy.w_vector()
+        blocks["ssm"], bspecs["ssm"] = init_ssm(
+            keys[2], config, num_layers=L, dtype=dtype, policy=policy
+        )
+    else:
+        blocks["ln1"] = jnp.zeros((L, D), dtype)
+        blocks["ln2"] = jnp.zeros((L, D), dtype)
+        bspecs["ln1"] = policy.w_vector()
+        bspecs["ln2"] = policy.w_vector()
+        blocks["attn"], bspecs["attn"] = init_attention(
+            keys[3], config, num_layers=L, dtype=dtype, policy=policy
+        )
+        if config.is_moe:
+            blocks["moe"], bspecs["moe"] = init_moe(
+                keys[4], config, num_layers=L, dtype=dtype, policy=policy
+            )
+        else:
+            blocks["mlp"], bspecs["mlp"] = init_gated_mlp(
+                keys[4], D, config.d_ff, num_layers=L, dtype=dtype, policy=policy
+            )
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+
+    if config.is_hybrid:
+        shared: dict[str, Any] = {}
+        sspecs: dict[str, Any] = {}
+        shared["ln1"] = jnp.zeros((1, D), dtype)
+        shared["ln2"] = jnp.zeros((1, D), dtype)
+        sspecs["ln1"] = policy.w_vector()
+        sspecs["ln2"] = policy.w_vector()
+        shared["attn"], sspecs["attn"] = init_attention(
+            keys[5], config, num_layers=1, dtype=dtype, policy=policy
+        )
+        shared["mlp"], sspecs["mlp"] = init_gated_mlp(
+            keys[6], D, config.d_ff, num_layers=1, dtype=dtype, policy=policy
+        )
+        params["shared"] = shared
+        specs["shared"] = sspecs
+    return params, specs
+
+
+def _slice_layer(tree, idx):
+    return jax.tree.map(lambda t: t[idx], tree)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train / prefill path: residual sequence-sharded)
+# ---------------------------------------------------------------------------
+
+def _attn_block_train(x, lp, placement_l, config: ModelConfig,
+                      policy: ShardingPolicy, *, return_cache: bool,
+                      capacity_factor=None):
+    h = rms_norm(x, lp["ln1"], config.norm_eps)
+    a, cache = attention_train(
+        h, lp["attn"], config, policy, return_cache=return_cache
+    )
+    if cache is not None:
+        cache = {"k": cache.k, "v": cache.v}
+    x = x + a
+    h2 = rms_norm(x, lp["ln2"], config.norm_eps)
+    aux = None
+    if config.is_moe:
+        h2 = policy.act_bsd(h2)  # gather tokens across the model axis
+        y, aux = moe_layer(
+            h2, lp["moe"], placement_l, config, policy,
+            capacity_factor=capacity_factor, seq_sharded_out=True,
+        )
+    else:
+        h2 = policy.act_bsd(h2)
+        y = gated_mlp(
+            h2, lp["mlp"], activation=config.mlp_activation, policy=policy,
+            seq_sharded_out=True,
+        )
+    x = policy.act_seq_sharded(x + y)
+    return x, cache, aux
+
+
+def _ssm_block_train(x, lp, config: ModelConfig, policy: ShardingPolicy,
+                     *, return_cache: bool):
+    h = rms_norm(x, lp["ln"], config.norm_eps)
+    h = policy.act_bsd(h)  # SSM scans the full sequence: gather over model
+    y, cache = ssm_train(h, lp["ssm"], config, policy, return_cache=return_cache)
+    if cache is not None:
+        cache = _ssm_named(cache.tree())
+    x = policy.act_seq_sharded(x + policy.act_seq_sharded(y))
+    return x, cache
+
+
+def _moe_aux_zero(config: ModelConfig):
+    return {
+        "expert_counts": jnp.zeros((config.num_experts,), jnp.int32),
+        "aux_loss": jnp.asarray(0.0, jnp.float32),
+        "dropped": jnp.asarray(0.0, jnp.float32),
+    }
+
+
+def _stack_forward(x, params, placements, config: ModelConfig,
+                   policy: ShardingPolicy, *, return_cache: bool,
+                   remat: bool, capacity_factor=None):
+    """Run the whole layer stack. Returns (x, caches, moe_aux)."""
+    blocks = params["blocks"]
+
+    if config.is_hybrid:
+        staged, leftover = _hybrid_split(config)
+        n_stages = staged // config.attn_every
+        shared = params["shared"]
+
+        def stage_body(xc, stage_blocks):
+            def inner(xc2, lp):
+                xc2, cache = _ssm_block_train(
+                    xc2, lp, config, policy, return_cache=return_cache
+                )
+                return xc2, cache
+            if remat:
+                inner = jax.checkpoint(inner)
+            xc, ssm_caches = jax.lax.scan(inner, xc, stage_blocks)
+            # shared attention + MLP block (one weight copy)
+            sp = _slice_layer(shared, 0)
+
+            def shared_block(xc2):
+                h = rms_norm(xc2, sp["ln1"], config.norm_eps)
+                a, cache = attention_train(
+                    h, sp["attn"], config, policy, return_cache=return_cache
+                )
+                xc2 = xc2 + a
+                h2 = rms_norm(xc2, sp["ln2"], config.norm_eps)
+                h2 = policy.act_bsd(h2)
+                y = gated_mlp(
+                    h2, sp["mlp"], activation=config.mlp_activation,
+                    policy=policy, seq_sharded_out=True,
+                )
+                if cache is not None:
+                    cache = {"k": cache.k, "v": cache.v}
+                return policy.act_seq_sharded(xc2 + y), cache
+            if remat:
+                shared_block = jax.checkpoint(shared_block)
+            xc, attn_cache = shared_block(xc)
+            return xc, (ssm_caches, attn_cache)
+
+        staged_blocks = jax.tree.map(
+            lambda t: t[:staged].reshape(n_stages, config.attn_every, *t.shape[1:]),
+            blocks,
+        )
+        x, (ssm_caches, attn_caches) = jax.lax.scan(stage_body, x, staged_blocks)
+        tail_caches = None
+        if leftover:
+            tail_blocks = jax.tree.map(lambda t: t[staged:], blocks)
+
+            def tail(xc, lp):
+                xc, cache = _ssm_block_train(
+                    xc, lp, config, policy, return_cache=return_cache
+                )
+                return xc, cache
+            if remat:
+                tail = jax.checkpoint(tail)
+            x, tail_caches = jax.lax.scan(tail, x, tail_blocks)
+        caches = {
+            "ssm_staged": ssm_caches, "attn": attn_caches, "ssm_tail": tail_caches,
+        } if return_cache else None
+        return x, caches, None
+
+    if config.is_ssm:
+        def body(xc, lp):
+            xc, cache = _ssm_block_train(
+                xc, lp, config, policy, return_cache=return_cache
+            )
+            return xc, cache
+        if remat:
+            body = jax.checkpoint(body)
+        x, caches = jax.lax.scan(body, x, blocks)
+        return x, ({"ssm": caches} if return_cache else None), None
+
+    # attention families
+    def body(xc, inputs):
+        lp, placement_l = inputs
+        xc, cache, aux = _attn_block_train(
+            xc, lp, placement_l, config, policy,
+            return_cache=return_cache, capacity_factor=capacity_factor,
+        )
+        if aux is None:
+            aux = _moe_aux_zero(config) if config.is_moe else 0.0
+        return xc, (cache, aux)
+    if remat:
+        body = jax.checkpoint(body)
+    if placements is None:
+        placements = identity_placement(config, config.num_layers)
+    x, (caches, auxes) = jax.lax.scan(body, x, (blocks, placements))
+    moe_aux = auxes if config.is_moe else None
+    return x, ({"attn": caches} if return_cache else None), moe_aux
+
+
+def _embed_input(params, batch, config: ModelConfig, policy: ShardingPolicy):
+    """tokens (+ optional patch embeddings) → (B, S, D) sequence-sharded."""
+    x = embed_tokens(batch["tokens"], params["embed"], config, policy)
+    if config.frontend == "vision" and "patches" in batch:
+        # precomputed patch embeddings from the stubbed vision frontend
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return policy.act_seq_sharded(x)
+
+
+def forward_train(params, batch, config: ModelConfig, policy: ShardingPolicy,
+                  placements=None, *, remat: bool = True):
+    """batch: tokens (B, S[-P]), optional patches (B, P, D), labels (B, S).
+
+    Returns (logits (B, S, V) sequence-sharded, aux dict).
+    """
+    x = _embed_input(params, batch, config, policy)
+    x, _, moe_aux = _stack_forward(
+        x, params, placements, config, policy, return_cache=False, remat=remat
+    )
+    x = rms_norm(x, params["final_norm"], config.norm_eps)
+    logits = lm_logits(x, params, config, policy, mode="train")
+    aux = {}
+    if moe_aux is not None:
+        aux["expert_counts"] = moe_aux["expert_counts"]  # (L, E)
+        aux["aux_loss"] = jnp.mean(moe_aux["aux_loss"])
+        aux["dropped"] = jnp.mean(moe_aux["dropped"])
+    return logits, aux
+
+
+def loss_fn(params, batch, config: ModelConfig, policy: ShardingPolicy,
+            placements=None, *, remat: bool = True):
+    logits, aux = forward_train(
+        params, batch, config, policy, placements, remat=remat
+    )
+    mask = batch.get("loss_mask")
+    loss = cross_entropy_loss(logits, batch["labels"], mask=mask)
+    if config.is_moe:
+        loss = loss + config.router_aux_coef * aux["aux_loss"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, config: ModelConfig, policy: ShardingPolicy,
+            placements=None):
+    """Returns (last-position logits (B, V), caches)."""
+    x = _embed_input(params, batch, config, policy)
+    x, caches, _ = _stack_forward(
+        x, params, placements, config, policy, return_cache=True, remat=False
+    )
+    x = rms_norm(x, params["final_norm"], config.norm_eps)
+    last = policy.constrain(x[:, -1:], policy.batch, None, None)
+    logits = lm_logits(last, params, config, policy, mode="decode")
+    return logits[:, 0], caches
+
+
+def init_decode_cache(config: ModelConfig, batch: int, max_len: int,
+                      policy: ShardingPolicy, dtype=jnp.bfloat16):
+    """Zero caches shaped for ``decode_step`` (used by input_specs too)."""
+    L = config.num_layers
+    caches: dict[str, Any] = {}
+    window = config.sliding_window
+    attn_len = min(window, max_len) if window else max_len
+
+    def kv(leading):
+        c = AttnCache.zeros(batch, attn_len, config, dtype, extra_leading=leading)
+        return {"k": policy.kv_cache(c.k), "v": policy.kv_cache(c.v)}
+
+    if config.is_hybrid:
+        staged, leftover = _hybrid_split(config)
+        n_stages = staged // config.attn_every
+        caches["ssm_staged"] = _ssm_tree(
+            config, batch, (n_stages, config.attn_every), dtype, policy
+        )
+        caches["attn"] = kv((n_stages,))
+        if leftover:
+            caches["ssm_tail"] = _ssm_tree(config, batch, (leftover,), dtype, policy)
+    elif config.is_ssm:
+        caches["ssm"] = _ssm_tree(config, batch, (L,), dtype, policy)
+    else:
+        caches["attn"] = kv((L,))
+    return caches
+
+
+def _ssm_tree(config, batch, leading, dtype, policy: ShardingPolicy):
+    c = SSMCache.zeros(batch, config, dtype, extra_leading=leading)
+    m = policy.model_axis
+    lead = (None,) * len(leading)
+    cb = policy.cache_batch
+    return {
+        "state": policy.constrain(c.state, *lead, cb, m, None, None),
+        "conv_x": policy.constrain(c.conv_x, *lead, cb, None, m),
+        "conv_b": policy.constrain(c.conv_b, *lead, cb, None, None),
+        "conv_c": policy.constrain(c.conv_c, *lead, cb, None, None),
+    }
+
+
+def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
+                policy: ShardingPolicy, placements=None):
+    """One serving step: tokens (B, 1) int32, cur_len scalar int32.
+
+    Returns (logits (B, V), new caches, moe aux or None).
+    """
+    x = embed_tokens(tokens, params["embed"], config, policy)
+    x = policy.act_bsd(x)
+    blocks = params["blocks"]
+    moe_aux = None
+
+    if config.is_hybrid:
+        staged, leftover = _hybrid_split(config)
+        n_stages = staged // config.attn_every
+        shared = params["shared"]
+        sp = _slice_layer(shared, 0)
+
+        def stage_body(xc, inputs):
+            stage_blocks, ssm_c, attn_c = inputs
+
+            def inner(xc2, inp):
+                lp, cache_t = inp
+                h = rms_norm(xc2, lp["ln"], config.norm_eps)
+                y, new_c = ssm_decode(
+                    h, lp["ssm"], SSMCache.from_tree(cache_t), config, policy
+                )
+                return xc2 + y, new_c.tree()
+
+            xc, new_ssm = jax.lax.scan(inner, xc, (stage_blocks, ssm_c))
+            h = rms_norm(xc, sp["ln1"], config.norm_eps)
+            a, new_attn = attention_decode(
+                h, sp["attn"], AttnCache(attn_c["k"], attn_c["v"]), cur_len,
+                config, policy,
+            )
+            xc = xc + a
+            h2 = rms_norm(xc, sp["ln2"], config.norm_eps)
+            y = gated_mlp(
+                h2, sp["mlp"], activation=config.mlp_activation, policy=policy
+            )
+            return xc + y, (new_ssm, {"k": new_attn.k, "v": new_attn.v})
+
+        staged_blocks = jax.tree.map(
+            lambda t: t[:staged].reshape(n_stages, config.attn_every, *t.shape[1:]),
+            blocks,
+        )
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            stage_body, x, (staged_blocks, _ssm_xs(caches["ssm_staged"]),
+                            caches["attn"])
+        )
+        new_caches = {"ssm_staged": _ssm_named(new_ssm), "attn": new_attn}
+        if leftover:
+            tail_blocks = jax.tree.map(lambda t: t[staged:], blocks)
+
+            def tail(xc, inp):
+                lp, cache_t = inp
+                h = rms_norm(xc, lp["ln"], config.norm_eps)
+                y, new_c = ssm_decode(
+                    h, lp["ssm"], SSMCache.from_tree(cache_t), config, policy
+                )
+                return xc + y, new_c.tree()
+            x, new_tail = jax.lax.scan(
+                tail, x, (tail_blocks, _ssm_xs(caches["ssm_tail"]))
+            )
+            new_caches["ssm_tail"] = _ssm_named(new_tail)
+    elif config.is_ssm:
+        def body(xc, inp):
+            lp, cache_t = inp
+            h = rms_norm(xc, lp["ln"], config.norm_eps)
+            y, new_c = ssm_decode(
+                h, lp["ssm"], SSMCache.from_tree(cache_t), config, policy
+            )
+            return xc + y, new_c.tree()
+        x, new_ssm = jax.lax.scan(body, x, (blocks, _ssm_xs(caches["ssm"])))
+        new_caches = {"ssm": _ssm_named(new_ssm)}
+    else:
+        if placements is None:
+            placements = identity_placement(config, config.num_layers)
+
+        def body(xc, inputs):
+            lp, placement_l, cache = inputs
+            h = rms_norm(xc, lp["ln1"], config.norm_eps)
+            a, new_c = attention_decode(
+                h, lp["attn"], AttnCache(cache["k"], cache["v"]), cur_len,
+                config, policy,
+            )
+            xc = xc + a
+            h2 = rms_norm(xc, lp["ln2"], config.norm_eps)
+            if config.is_moe:
+                y, aux = moe_layer(
+                    h2, lp["moe"], placement_l, config, policy,
+                    capacity_factor=config.decode_capacity_factor,
+                )
+            else:
+                aux = _moe_aux_zero(config) if config.is_moe else 0.0
+                y = gated_mlp(
+                    h2, lp["mlp"], activation=config.mlp_activation,
+                    policy=policy,
+                )
+            if config.is_moe and aux is None:
+                aux = _moe_aux_zero(config)
+            return xc + y, ({"k": new_c.k, "v": new_c.v}, aux)
+
+        x, (new_attn, auxes) = jax.lax.scan(
+            body, x, (blocks, placements, caches["attn"])
+        )
+        new_caches = {"attn": new_attn}
+        if config.is_moe:
+            moe_aux = auxes
+
+    x = rms_norm(x, params["final_norm"], config.norm_eps)
+    logits = lm_logits(x, params, config, policy, mode="decode")
+    return logits[:, 0], new_caches, moe_aux
+
+
+def _ssm_xs(named):
+    return (named["state"], named["conv_x"], named["conv_b"], named["conv_c"])
+
+
+def _ssm_named(tree_tuple):
+    s, cx, cb, cc = tree_tuple
+    return {"state": s, "conv_x": cx, "conv_b": cb, "conv_c": cc}

@@ -1,0 +1,256 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked prefill + O(1) decode.
+
+The SSD recurrence per head h with state (hd, N):
+
+    h_t = exp(dt_t · A) · h_{t-1} + dt_t · (x_t ⊗ B_t)
+    y_t = C_t · h_t + D · x_t
+
+Prefill/training uses the chunked dual form (one lax.scan over sequence
+chunks; within a chunk the quadratic "attention-like" form, across chunks the
+linear recurrence), so compute is O(S·Q) with chunk size Q and nothing
+S×S ever materializes. Decode carries (state, conv buffer) in the cache and
+is O(1) per token.
+
+Sharding: SSD heads (d_inner/head_dim — 64 for mamba2-1.3b and zamba2) are
+sharded over the ``model`` axis; B/C projections (state size N per group,
+shared across heads) are replicated — their compute is O(S·N), negligible.
+The residual stream stays sequence-sharded between blocks; the block
+all-gathers it on entry and reduce-scatters via the out-projection psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..sharding.policy import ShardingPolicy
+
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "SSMCache"]
+
+
+def init_ssm(
+    key, config: ModelConfig, *, num_layers: int, dtype, policy: ShardingPolicy
+):
+    D = config.d_model
+    di = config.d_inner
+    N = config.ssm_state
+    nh = config.ssm_heads
+    cw = config.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = float(1.0 / np.sqrt(D))
+    params = {
+        "wz": jax.random.normal(ks[0], (num_layers, D, di), dtype) * s,
+        "wx": jax.random.normal(ks[1], (num_layers, D, di), dtype) * s,
+        "wb": jax.random.normal(ks[2], (num_layers, D, N), dtype) * s,
+        "wc": jax.random.normal(ks[3], (num_layers, D, N), dtype) * s,
+        "wdt": jax.random.normal(ks[4], (num_layers, D, nh), dtype) * s,
+        "dt_bias": jnp.zeros((num_layers, nh), dtype),
+        "A_log": jnp.tile(
+            jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32))[None], (num_layers, 1)
+        ).astype(dtype),
+        "D": jnp.ones((num_layers, nh), dtype),
+        "conv_x_w": jax.random.normal(ks[5], (num_layers, cw, di), dtype) * 0.3,
+        "conv_x_b": jnp.zeros((num_layers, di), dtype),
+        "conv_b_w": jax.random.normal(ks[6], (num_layers, cw, N), dtype) * 0.3,
+        "conv_b_b": jnp.zeros((num_layers, N), dtype),
+        "conv_c_w": jax.random.normal(ks[7], (num_layers, cw, N), dtype) * 0.3,
+        "conv_c_b": jnp.zeros((num_layers, N), dtype),
+        "gate_norm": jnp.zeros((num_layers, di), dtype),
+        "out_proj": jax.random.normal(ks[0], (num_layers, di, D), dtype)
+        / float(np.sqrt(di)),
+    }
+    m = policy.model_axis
+    f = "data" if policy.fsdp and policy.mesh is not None else None
+    specs = {
+        "wz": policy.spec(None, f, m),
+        "wx": policy.spec(None, f, m),
+        "wb": policy.spec(None, f, None),
+        "wc": policy.spec(None, f, None),
+        "wdt": policy.spec(None, f, m),
+        "dt_bias": policy.spec(None, m),
+        "A_log": policy.spec(None, m),
+        "D": policy.spec(None, m),
+        "conv_x_w": policy.spec(None, None, m),
+        "conv_x_b": policy.spec(None, m),
+        "conv_b_w": policy.spec(None, None, None),
+        "conv_b_b": policy.spec(None, None),
+        "conv_c_w": policy.spec(None, None, None),
+        "conv_c_b": policy.spec(None, None),
+        "gate_norm": policy.spec(None, m),
+        "out_proj": policy.spec(None, m, f),
+    }
+    return params, specs
+
+
+class SSMCache:
+    """Decode cache: SSD state + causal-conv ring buffers."""
+
+    def __init__(self, state, conv_x, conv_b, conv_c):
+        self.state = state  # (B, nh, hd, N) fp32
+        self.conv_x = conv_x  # (B, cw-1, d_inner)
+        self.conv_b = conv_b  # (B, cw-1, N)
+        self.conv_c = conv_c  # (B, cw-1, N)
+
+    @staticmethod
+    def zeros(batch, config: ModelConfig, dtype, extra_leading=()):
+        nh, hd, N = config.ssm_heads, config.ssm_head_dim, config.ssm_state
+        cw = config.ssm_conv
+        di = config.d_inner
+        return SSMCache(
+            jnp.zeros((*extra_leading, batch, nh, hd, N), jnp.float32),
+            jnp.zeros((*extra_leading, batch, cw - 1, di), dtype),
+            jnp.zeros((*extra_leading, batch, cw - 1, N), dtype),
+            jnp.zeros((*extra_leading, batch, cw - 1, N), dtype),
+        )
+
+    def tree(self):
+        return (self.state, self.conv_x, self.conv_b, self.conv_c)
+
+    @staticmethod
+    def from_tree(t):
+        return SSMCache(*t)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, C), w (cw, C), b (C) → (B, S, C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _conv_step(x_t, buf, w, b):
+    """Single-token conv using ring buffer. x_t (B, C), buf (B, cw-1, C)."""
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)  # (B, cw, C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+def _project(x, p, config: ModelConfig):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wb"])
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    return z, xs, Bp, Cp, dt
+
+
+def _gated_out(y, z, p, config: ModelConfig, policy: ShardingPolicy):
+    """y, z (B, S, d_inner sharded) → out (B, S, D)."""
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # grouped RMS norm over d_inner (local per shard is an approximation we
+    # avoid: normalize per head group, head-local → exact under sharding)
+    B, S = y.shape[:2]
+    nh, hd = config.ssm_heads, config.ssm_head_dim
+    yh = y.reshape(B, S, nh, hd)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + config.norm_eps)
+    y = yh.reshape(B, S, nh * hd)
+    y = y * (1.0 + p["gate_norm"].astype(jnp.float32))
+    y = y.astype(z.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out
+
+
+def ssm_train(x, p, config: ModelConfig, policy: ShardingPolicy,
+              *, return_cache: bool = False):
+    """x (B, S, D) replicated over model → (out (B,S,D), cache | None)."""
+    B, S, D = x.shape
+    nh, hd, N = config.ssm_heads, config.ssm_head_dim, config.ssm_state
+    Q = min(config.ssm_chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    z, xs, Bp, Cp, dt = _project(x, p, config)
+    xs = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    Bp = _causal_conv(Bp, p["conv_b_w"], p["conv_b_b"])
+    Cp = _causal_conv(Cp, p["conv_c_w"], p["conv_c_b"])
+    xs, Bp, Cp = jax.nn.silu(xs), jax.nn.silu(Bp), jax.nn.silu(Cp)
+    m = policy.model_axis
+    xs = policy.constrain(xs, policy.batch, None, m)
+    z = policy.constrain(z, policy.batch, None, m)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    dtx = xh * dt[..., None]  # (B, S, nh, hd)
+    dA = dt * A  # (B, S, nh)
+    # chunk views
+    def chunk(t, width):
+        return t.reshape(B, nc, Q, *t.shape[2:])
+
+    dA_c = chunk(dA, Q)  # (B, nc, Q, nh)
+    dtx_c = chunk(dtx, Q)  # (B, nc, Q, nh, hd)
+    B_c = chunk(Bp.astype(jnp.float32), Q)  # (B, nc, Q, N)
+    C_c = chunk(Cp.astype(jnp.float32), Q)  # (B, nc, Q, N)
+
+    def scan_chunk(h_prev, inputs):
+        dA_b, dtx_b, B_b, C_b = inputs  # (B, Q, nh), (B, Q, nh, hd), (B,Q,N)…
+        cum = jnp.cumsum(dA_b, axis=1)  # (B, Q, nh)
+        # within-chunk quadratic form
+        scores = jnp.einsum("bqn,bkn->bqk", C_b, B_b)  # (B, Q, Q)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B, Q, Q, nh)
+        tri = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, ..., None]
+        L = jnp.where(tri, jnp.exp(seg), 0.0)
+        y_diag = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, L, dtx_b)
+        # contribution of the carried state
+        decay_in = jnp.exp(cum)  # (B, Q, nh)
+        y_off = jnp.einsum("bqn,bqh,bhpn->bqhp", C_b, decay_in, h_prev)
+        # chunk state update
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)  # (B, Q, nh)
+        states = jnp.einsum("bkn,bkh,bkhp->bhpn", B_b, decay_out, dtx_b)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h_prev + states
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    # move chunk axis to front for scan
+    xs_scan = (
+        dA_c.transpose(1, 0, 2, 3),
+        dtx_c.transpose(1, 0, 2, 3, 4),
+        B_c.transpose(1, 0, 2, 3),
+        C_c.transpose(1, 0, 2, 3),
+    )
+    h_final, y_chunks = jax.lax.scan(scan_chunk, h0, xs_scan)
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, nh * hd)
+    out = _gated_out(y, z, p, config, policy)
+
+    cache = None
+    if return_cache:
+        cw = config.ssm_conv
+        # pre-activation conv inputs for the ring buffers
+        z2, xs2, Bp2, Cp2, _ = _project(x[:, S - (cw - 1):], p, config)
+        del z2
+        cache = SSMCache(h_final, xs2, Bp2, Cp2)
+    return out, cache
+
+
+def ssm_decode(x, p, cache: SSMCache, config: ModelConfig,
+               policy: ShardingPolicy):
+    """One token. x (B, 1, D) → (out (B, 1, D), new cache)."""
+    B = x.shape[0]
+    nh, hd, N = config.ssm_heads, config.ssm_head_dim, config.ssm_state
+    z, xs, Bp, Cp, dt = _project(x, p, config)
+    xs, bx = _conv_step(xs[:, 0], cache.conv_x, p["conv_x_w"], p["conv_x_b"])
+    Bp, bb = _conv_step(Bp[:, 0], cache.conv_b, p["conv_b_w"], p["conv_b_b"])
+    Cp, bc = _conv_step(Cp[:, 0], cache.conv_c, p["conv_c_w"], p["conv_c_b"])
+    xs, Bp, Cp = jax.nn.silu(xs), jax.nn.silu(Bp), jax.nn.silu(Cp)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]  # (B, nh)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt1 * A)[:, :, None, None]  # (B, nh, 1, 1)
+    inject = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xh, Bp.astype(jnp.float32)
+    )
+    h_new = cache.state * decay + inject
+    y = jnp.einsum("bn,bhpn->bhp", Cp.astype(jnp.float32), h_new)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, nh * hd)
+    out = _gated_out(y, z, p, config, policy)
+    return out, SSMCache(h_new, bx, bb, bc)

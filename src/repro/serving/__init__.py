@@ -1,0 +1,5 @@
+from .engine import EngineConfig, ServingEngine
+from .sampling import sample
+from .scheduler import Request, Scheduler
+
+__all__ = ["EngineConfig", "ServingEngine", "Request", "Scheduler", "sample"]

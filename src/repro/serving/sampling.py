@@ -1,0 +1,18 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample"]
+
+
+def sample(logits, *, temperature: float = 0.0, key=None):
+    """logits (B, V) → token ids (B,). temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("sampling with temperature needs a PRNG key")
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )

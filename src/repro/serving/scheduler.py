@@ -1,0 +1,83 @@
+"""Request scheduling: FCFS slot assignment with a token budget.
+
+The engine runs a fixed pool of ``max_batch`` decode slots (continuous
+batching: a finished request's slot is immediately refillable). The
+scheduler decides which queued requests to admit each step; its token budget
+guards prefill cost per step, and the optional variability-aware mode
+(beyond-paper, §Perf) weights the budget by the profiled speed of the
+slowest device so admission bursts don't amplify stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    arrival_step: int = 0
+    # filled by the engine
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    prompt_len: int = 0
+    start_step: int = -1
+    finish_step: int = -1
+    arrival_time: float = 0.0
+    finish_time: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, dtype=np.int32)
+        self.prompt_len = int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, max_batch: int, *, prefill_token_budget: int = 8192,
+                 slow_device_factor: float = 1.0):
+        self.max_batch = max_batch
+        self.prefill_token_budget = prefill_token_budget
+        self.slow_device_factor = slow_device_factor  # <1 ⇒ tighter budget
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}  # slot → request
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.max_batch) if s not in self.active]
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots within the prefill budget."""
+        admissions: list[tuple[int, Request]] = []
+        budget = int(self.prefill_token_budget * self.slow_device_factor)
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            if self.queue[0].prompt_len > budget and admissions:
+                break  # out of prefill budget this step
+            req = self.queue.popleft()
+            budget -= req.prompt_len
+            req.slot = slot
+            self.active[slot] = req
+            admissions.append((slot, req))
+        return admissions
+
+    def release(self, slot: int) -> Request:
+        return self.active.pop(slot)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)

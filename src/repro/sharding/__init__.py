@@ -1,0 +1,3 @@
+from .policy import ShardingPolicy, host_policy
+
+__all__ = ["ShardingPolicy", "host_policy"]

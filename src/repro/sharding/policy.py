@@ -1,0 +1,177 @@
+"""Sharding policy: one object that owns every PartitionSpec decision.
+
+Design (see DESIGN.md §4):
+
+* Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+  multi-pod. ``pod`` is folded into the batch axes (pure DP across pods, so
+  cross-pod traffic is one gradient all-reduce per step over DCN).
+
+* **Parameters** are stored sharded over ``model`` on a flat output/input dim
+  (attention projections, MLP d_ff, MoE virtual-expert dim, vocab) — never on
+  a head-count dim, so head counts that don't divide 16 (musicgen 24H,
+  qwen1.5 20H, qwen2.5 40H) stay exact with zero padding. For training,
+  params/optimizer state additionally shard their other large dim over
+  ``data`` (ZeRO-3); XLA inserts the per-layer all-gathers inside the scan.
+
+* **Activations**:
+  - train/prefill: batch over data; attention runs *sequence-parallel* over
+    ``model`` (each device attends its query-sequence slice against an
+    all-gathered K/V) — head-count agnostic; MLP/MoE run tensor-parallel with
+    all-gather/reduce-scatter boundaries (Megatron-SP style).
+  - decode: batch over data; KV cache sharded over ``model`` on the sequence
+    dim; flash-decoding-style partial softmax (the stat reductions over the
+    sharded KV dim become small all-reduces under GSPMD).
+
+The policy is mesh-optional: with ``mesh=None`` every constraint is a no-op,
+so the exact same model code runs single-device smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "host_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh | None = None
+    batch_axes: tuple[str, ...] = ("data",)  # ("pod","data") on multi-pod;
+    # () when global_batch < data-axis size (long-context decode: the batch
+    # is replicated and the KV sequence shards over data AND model instead)
+    model_axis: str = "model"
+    kv_seq_axes: tuple[str, ...] = ("model",)
+    fsdp: bool = False  # also shard params over the data axis (training)
+    # Cache batch sharding may differ from activation batch sharding: huge
+    # models decode with *replicated* activations (batch_axes=()) so the
+    # data-sharded ZeRO params contract with tiny activation all-reduces
+    # instead of per-layer weight gathers — but the KV cache still shards
+    # its batch over data. None → same as batch_axes.
+    cache_batch_axes: tuple[str, ...] | None = None
+
+    # ---- spec construction -------------------------------------------------
+    @property
+    def batch(self):
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    @property
+    def cache_batch(self):
+        axes = self.cache_batch_axes
+        if axes is None:
+            return self.batch
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    @property
+    def kv_seq(self):
+        if len(self.kv_seq_axes) == 1:
+            return self.kv_seq_axes[0]
+        return self.kv_seq_axes
+
+    @property
+    def data_axis_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def all_data_axes(self) -> tuple[str, ...]:
+        """Every non-model axis of the mesh (for full-fleet seq sharding)."""
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in self.mesh.axis_names if a != self.model_axis)
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def spec(self, *parts) -> P:
+        return P(*parts)
+
+    def named(self, *parts) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*parts))
+
+    # ---- activation constraints -------------------------------------------
+    def constrain(self, x, *parts):
+        """with_sharding_constraint when a mesh is present, no-op otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts))
+        )
+
+    # canonical activation layouts
+    def act_bsd(self, x):
+        """(B, S, D): batch over data, replicated over model."""
+        return self.constrain(x, self.batch, None, None)
+
+    def act_seq_sharded(self, x):
+        """(B, S, D): batch over data, sequence over model (SP regions)."""
+        return self.constrain(x, self.batch, self.model_axis, None)
+
+    def act_ff_sharded(self, x):
+        """(B, S, F): TP intermediate, F over model."""
+        return self.constrain(x, self.batch, None, self.model_axis)
+
+    def act_vocab_sharded(self, x):
+        """(B, S, V): logits, vocab over model."""
+        return self.constrain(x, self.batch, None, self.model_axis)
+
+    def kv_cache(self, x):
+        """(L, B, S, KV, hd): batch over data, KV sequence over kv_seq axes."""
+        return self.constrain(x, None, self.cache_batch, self.kv_seq, None, None)
+
+    # ---- parameter specs ---------------------------------------------------
+    def _fsdp_axis(self):
+        return "data" if (self.fsdp and self.mesh is not None) else None
+
+    def w_col(self, stacked: bool = True) -> P:
+        """(…, D, F): input dim optionally FSDP-sharded, output dim over model."""
+        core = (self._fsdp_axis(), self.model_axis)
+        return P(*(((None,) if stacked else ()) + core))
+
+    def w_row(self, stacked: bool = True) -> P:
+        """(…, F, D): input dim over model, output dim optionally FSDP."""
+        core = (self.model_axis, self._fsdp_axis())
+        return P(*(((None,) if stacked else ()) + core))
+
+    def w_expert(self, ndim_tail: int = 2, stacked: bool = True) -> P:
+        """(…, E_virtual, D, F) / (…, E_virtual, F, D): experts over model."""
+        core = (self.model_axis,) + (self._fsdp_axis(),) + (None,) * (ndim_tail - 1)
+        return P(*(((None,) if stacked else ()) + core))
+
+    def w_replicated(self, ndim: int) -> P:
+        return P(*([None] * ndim))
+
+    def w_vector(self, stacked: bool = True) -> P:
+        """(…, D) biases/norm scales: replicated."""
+        return P(*(((None,) if stacked else ()) + (None,)))
+
+    def embed_tied(self) -> P:
+        """Tied embedding doubles as lm_head: shard vocab over model."""
+        return P(self.model_axis, self._fsdp_axis())
+
+    def embed_untied(self) -> P:
+        """Lookup-only table: shard d_model over model (gather stays local)."""
+        return P(self._fsdp_axis(), self.model_axis)
+
+    def lm_head(self) -> P:
+        return P(self._fsdp_axis(), self.model_axis)
+
+
+def host_policy() -> ShardingPolicy:
+    """Policy for single-device smoke tests: all constraints no-ops."""
+    return ShardingPolicy(mesh=None)

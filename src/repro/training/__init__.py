@@ -1,0 +1,9 @@
+from .data import DataConfig, SyntheticTokenStream
+from .optimizer import AdamWConfig, adamw_init, adamw_update, compress_grads
+from .train_step import init_train_state, make_train_step
+
+__all__ = [
+    "DataConfig", "SyntheticTokenStream",
+    "AdamWConfig", "adamw_init", "adamw_update", "compress_grads",
+    "init_train_state", "make_train_step",
+]

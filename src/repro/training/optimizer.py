@@ -1,0 +1,134 @@
+"""AdamW with sharding-aware state and optional gradient compression.
+
+The optimizer state mirrors the parameter PartitionSpecs (ZeRO: moments live
+wherever the param shard lives). Gradient compression (int8 with error
+feedback) is a distributed-optimization option for cross-pod gradient
+all-reduce: quantize → (all-reduce happens on the int8-scaled values') fp32
+dequant — the residual is carried to the next step so the compression is
+unbiased in the long run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "compress_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # gradient compression (error feedback int8)
+    compress: bool = False
+    compress_bits: int = 8
+
+
+def _lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cosine
+    return cfg.learning_rate * warm * scale
+
+
+def adamw_init(params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def adamw_state_specs(param_specs):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "mu": param_specs,
+        "nu": param_specs,
+        "step": P(),
+    }
+
+
+def compress_grads(grads, residual, bits: int = 8):
+    """Error-feedback quantization: returns (dequantized grads, new residual).
+
+    Each leaf is quantized to ``bits`` signed levels around its max-abs scale.
+    The quantization error is carried in ``residual`` and re-added next step,
+    making the scheme unbiased over time (classic EF-SGD).
+    """
+    levels = 2.0 ** (bits - 1) - 1
+
+    def q(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / levels
+        qg = jnp.round(g / scale)
+        deq = qg * scale
+        return deq, g - deq
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r, _ = jax.tree.flatten(residual)
+    out = [q(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = tree.unflatten([o[0] for o in out])
+    new_res = tree.unflatten([o[1] for o in out])
+    return deq, new_res
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+    )
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = _lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.dtype.kind == "f" and cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mu, nu
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    outs = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tree.unflatten([o[0] for o in outs])
+    new_state = {
+        "mu": tree.unflatten([o[1] for o in outs]),
+        "nu": tree.unflatten([o[2] for o in outs]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,101 @@
+"""Training step: loss → grads → AdamW, with grad accumulation + compression.
+
+``make_train_step`` builds the jit-able step function that the launcher
+lowers for the dry-run and the examples run at host scale. MoE models thread
+GEM placement tables through to the dispatch and surface per-layer expert
+counts in the metrics (GEM's Step-1 hook works identically in training).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import loss_fn
+from ..sharding.policy import ShardingPolicy
+from .optimizer import AdamWConfig, adamw_init, adamw_update, compress_grads
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+def init_train_state(params, cfg: AdamWConfig):
+    state: dict[str, Any] = {"params": params, "opt": adamw_init(params)}
+    if cfg.compress:
+        state["ef_residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+# kept for external naming clarity
+TrainState = dict
+
+
+def make_train_step(
+    config: ModelConfig,
+    policy: ShardingPolicy,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    accum_steps: int = 1,
+    remat: bool = True,
+):
+    """Returns train_step(state, batch, placements=None) → (state, metrics).
+
+    ``accum_steps > 1`` splits the batch on the leading axis into microbatches
+    accumulated sequentially (gradient accumulation); the parameter update —
+    and with it the cross-data-parallel gradient reduction — happens once, so
+    small per-device batches don't multiply collective traffic.
+    """
+
+    def grads_of(params, batch, placements):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, config, policy, placements, remat=remat
+        )
+        return loss, aux, grads
+
+    def train_step(state, batch, placements=None):
+        params = state["params"]
+        if accum_steps == 1:
+            loss, aux, grads = grads_of(params, batch, placements)
+        else:
+            def split(t):
+                return t.reshape(accum_steps, t.shape[0] // accum_steps, *t.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                loss, aux, grads = grads_of(params, mb, placements)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, loss_acc + loss), aux
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), auxes = jax.lax.scan(
+                body, (zero_g, jnp.asarray(0.0, jnp.float32)), micro
+            )
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            aux = jax.tree.map(lambda a: a[-1], auxes)
+
+        if opt_cfg.compress:
+            grads, new_res = compress_grads(
+                grads, state["ef_residual"], opt_cfg.compress_bits
+            )
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt_cfg
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if opt_cfg.compress:
+            new_state["ef_residual"] = new_res
+        metrics = {"loss": loss, **opt_metrics}
+        if config.is_moe and aux:
+            metrics["moe_dropped"] = aux.get("dropped", 0.0)
+            metrics["expert_counts"] = aux.get("expert_counts")
+        return new_state, metrics
+
+    return train_step

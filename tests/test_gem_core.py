@@ -1,0 +1,208 @@
+"""Unit tests for GEM's core algorithms (paper §3.3, Algorithms 1–4)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceFleet,
+    ExpertTrace,
+    GEMConfig,
+    GEMPlanner,
+    IncrementalScorer,
+    Placement,
+    TraceCollector,
+    WorkloadSpec,
+    classify_experts,
+    correlated_groups,
+    correlation_matrix,
+    eplb_placement,
+    gem_place,
+    generate_trace,
+    initial_mapping,
+    linear_placement,
+    profile_fleet,
+    refine,
+    score,
+    setup_speeds,
+    simulator_measure_fn,
+)
+
+
+def make_profile(speeds, *, tile=64, max_tokens=4096):
+    fleet = DeviceFleet.from_speeds(speeds, tile=tile)
+    return profile_fleet(
+        simulator_measure_fn(fleet), len(speeds), max_tokens=max_tokens,
+        tile=tile, repeats=3,
+    ).profile
+
+
+class TestPlacement:
+    def test_linear(self):
+        p = Placement.linear(8, 4)
+        assert p.expert_to_device.tolist() == [0, 0, 1, 1, 2, 2, 3, 3]
+
+    def test_slot_roundtrip(self):
+        p = Placement(np.array([3, 0, 1, 2, 2, 1, 0, 3]), 4)
+        s2e = p.slot_to_expert()
+        e2s = p.expert_to_slot()
+        assert (s2e[e2s] == np.arange(8)).all()
+        # slots are device-major
+        per = 2
+        for s, e in enumerate(s2e):
+            assert p.expert_to_device[e] == s // per
+
+    def test_unbalanced_rejected(self):
+        with pytest.raises(ValueError):
+            Placement(np.array([0, 0, 0, 1]), 2)
+
+    def test_swap(self):
+        p = Placement.linear(8, 4)
+        q = p.swap(0, 7)
+        assert q.expert_to_device[0] == 3 and q.expert_to_device[7] == 0
+
+
+class TestTraceCollector:
+    def test_record_and_window(self):
+        c = TraceCollector(4)
+        for t in range(10):
+            c.record(np.full(4, t))
+        tr = c.trace(window=3)
+        assert tr.counts[:, 0].tolist() == [7, 8, 9]
+
+    def test_record_routing_bins_ids(self):
+        c = TraceCollector(4)
+        c.record_routing(np.array([[0, 1], [1, 2], [1, 3]]))
+        assert c.trace().counts[0].tolist() == [1, 3, 1, 1]
+
+    def test_ring_wraps(self):
+        c = TraceCollector(2, capacity=4)
+        for t in range(9):
+            c.record(np.array([t, 0]))
+        assert c.trace().counts[:, 0].tolist() == [5, 6, 7, 8]
+
+
+class TestScoring:
+    def test_score_matches_manual(self):
+        # paper Fig. 13 worked example
+        trace = ExpertTrace(np.array([[1, 2, 3, 3], [4, 1, 1, 1], [2, 2, 1, 1]]))
+        placement = Placement(np.array([0, 0, 1, 1]), 2)
+        per_dev = trace.per_device_tokens(placement)
+        assert per_dev.tolist() == [[3, 6], [5, 2], [4, 2]]
+
+    def test_incremental_swap_matches_full_rescore(self, rng):
+        trace = ExpertTrace(rng.integers(0, 50, size=(12, 16)))
+        profile = make_profile(setup_speeds("moderate", 4), max_tokens=2048)
+        scorer = IncrementalScorer(trace, profile)
+        scorer.load_placement(Placement.linear(16, 4))
+        e_a, e_b, predicted = scorer.best_swap()
+        swapped = Placement.linear(16, 4).swap(e_a, e_b)
+        assert score(trace, profile, swapped) == pytest.approx(predicted)
+
+    def test_incremental_add_matches_full(self, rng):
+        trace = ExpertTrace(rng.integers(0, 50, size=(6, 8)))
+        profile = make_profile(setup_speeds("high", 4), max_tokens=1024)
+        scorer = IncrementalScorer(trace, profile)
+        for e in range(7):
+            scorer.add_expert(e, e % 4)
+        cand = scorer.score_with_add(7)
+        for g in range(4):
+            s2 = IncrementalScorer(trace, profile)
+            for e in range(7):
+                s2.add_expert(e, e % 4)
+            s2.add_expert(7, g)
+            assert cand[g] == pytest.approx(s2.score())
+
+
+class TestSearch:
+    def _setup(self, seed=0):
+        spec = WorkloadSpec(num_experts=16, top_k=2, tokens_per_step=1024)
+        trace = generate_trace(spec, 16, seed=seed, identity_seed=7)
+        profile = make_profile(setup_speeds("high", 4), max_tokens=4096)
+        return trace, profile
+
+    def test_initial_mapping_balanced(self):
+        trace, profile = self._setup()
+        m = initial_mapping(trace, profile)
+        counts = np.bincount(m.expert_to_device, minlength=4)
+        assert (counts == 4).all()
+
+    def test_refine_never_worsens(self):
+        trace, profile = self._setup()
+        m0 = linear_placement(16, 4)
+        m, s, swaps = refine(m0, trace, profile)
+        assert s <= score(trace, profile, m0)
+
+    def test_gem_beats_linear_and_eplb_in_sample(self):
+        trace, profile = self._setup()
+        res = gem_place(trace, profile, GEMConfig(num_restarts=10))
+        s_lin = score(trace, profile, linear_placement(16, 4))
+        s_eplb = score(trace, profile, eplb_placement(trace, 4))
+        assert res.score <= s_eplb <= s_lin * 1.001
+
+    def test_convergence_under_paper_bound(self):
+        # paper §3.3.3: converges in <18 swaps for all evaluated models
+        trace, profile = self._setup()
+        res = gem_place(trace, profile, GEMConfig(num_restarts=30))
+        assert max(res.swaps_per_restart) < 18
+
+    def test_slow_device_gets_below_average_load(self):
+        # device 0 is the 12%-slower straggler: Insight-1 says it receives
+        # proportionally *less* work than the fleet average. Individual
+        # workloads can violate this slightly under tile quantization (only
+        # the per-step straggler max is optimized), so assert the mean over
+        # several workloads.
+        fracs = []
+        for seed in range(5):
+            trace, profile = self._setup(seed=seed)
+            res = gem_place(trace, profile, GEMConfig(num_restarts=10))
+            shares = trace.per_device_tokens(res.placement).sum(0)
+            fracs.append(shares[0] / shares.sum())
+        assert np.mean(fracs) < 0.25
+
+
+class TestClassification:
+    def test_consistent_and_temporal_detected(self):
+        spec = WorkloadSpec(
+            num_experts=16, top_k=2, tokens_per_step=2048,
+            num_consistent=2, num_temporal_groups=1, temporal_group_size=2,
+        )
+        trace = generate_trace(spec, 256, seed=1, identity_seed=1)
+        cls = classify_experts(trace)
+        assert len(cls.consistent) >= 1
+        assert len(cls.temporal) >= 1
+        # temporal experts burst: high intensity, low activity
+        for e in cls.temporal:
+            assert cls.active_fraction[e] < 0.5
+
+    def test_correlation_detects_groups(self):
+        spec = WorkloadSpec(
+            num_experts=12, top_k=2, tokens_per_step=2048,
+            num_temporal_groups=1, temporal_group_size=3,
+        )
+        trace = generate_trace(spec, 512, seed=2, identity_seed=2)
+        groups = correlated_groups(trace, r_thresh=0.6)
+        assert any(len(g) >= 2 for g in groups)
+        corr = correlation_matrix(trace)
+        assert np.allclose(np.diag(corr), 1.0)
+        assert (corr <= 1.0 + 1e-9).all() and (corr >= -1.0 - 1e-9).all()
+
+
+class TestPlanner:
+    def test_end_to_end_plan(self, rng):
+        planner = GEMPlanner(8, 4, num_layers=2, config=GEMConfig(
+            trace_length=8, num_restarts=4))
+        profile = make_profile(setup_speeds("high", 4), max_tokens=1024)
+        planner.set_profile(profile)
+        for _ in range(8):
+            for layer in range(2):
+                planner.observe_step(layer, rng.integers(0, 30, size=8))
+        assert planner.ready()
+        plan = planner.plan()
+        assert len(plan.placements) == 2
+        assert plan.predicted_improvement >= 0.0
+        for perm, inv in zip(plan.slot_permutations, plan.expert_to_slot):
+            assert (perm[inv] == np.arange(8)).all()
+
+    def test_profile_device_mismatch_rejected(self):
+        planner = GEMPlanner(8, 4, num_layers=1)
+        with pytest.raises(ValueError):
+            planner.set_profile(make_profile(setup_speeds("low", 2)))

@@ -1,0 +1,73 @@
+"""Step-2 profiler tests: accuracy and the paper's cost reduction (Fig. 18)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceFleet,
+    dense_grid,
+    profile_fleet,
+    profile_fleet_dense,
+    profiling_cost_seconds,
+    setup_speeds,
+    simulator_measure_fn,
+    tile_boundary_grid,
+)
+
+
+def test_fast_profile_matches_dense_on_staircase():
+    """Tile-boundary sampling reconstructs the full curve (no noise)."""
+    fleet = DeviceFleet.from_speeds([1.0, 0.9, 1.1], tile=128)
+    fast = profile_fleet(
+        simulator_measure_fn(fleet), 3, max_tokens=2048, tile=128, repeats=1
+    ).profile
+    check = np.arange(1, 2049, 17)
+    for g, m in enumerate(fleet.models):
+        truth = m.latency(check)
+        approx = fast.cost(g, check)
+        # staircase reconstruction: interpolation error bounded by one step
+        step = m.tile_time / m.speed
+        assert np.max(np.abs(approx - truth)) <= step + 1e-12
+
+
+def test_fast_profile_orders_of_magnitude_cheaper():
+    """Paper Fig. 18: 265–515× less device time than the 1..16K dense sweep."""
+    fleet = DeviceFleet.from_speeds(setup_speeds("moderate", 4), tile=512)
+    fast_grid = tile_boundary_grid(16_384, 512)
+    slow_grid = dense_grid(16_384)
+    fast_cost = profiling_cost_seconds(fleet, fast_grid, repeats=500)
+    slow_cost = profiling_cost_seconds(fleet, slow_grid, repeats=500)
+    assert slow_cost / fast_cost > 100
+
+
+def test_profile_monotone_even_with_noise():
+    fleet = DeviceFleet.from_speeds([1.0, 0.95], tile=64, jitter=0.05)
+    prof = profile_fleet(
+        simulator_measure_fn(fleet, seed=3), 2, max_tokens=1024, tile=64,
+        repeats=10,
+    ).profile
+    for g in range(2):
+        assert (np.diff(prof.latencies[g]) >= 0).all()
+
+
+def test_relative_speed_recovers_fleet_speeds():
+    speeds = [0.9, 1.0, 1.1, 1.0]
+    fleet = DeviceFleet.from_speeds(speeds, tile=64, base=0.0)
+    prof = profile_fleet(
+        simulator_measure_fn(fleet), 4, max_tokens=4096, tile=64, repeats=1
+    ).profile
+    rel = prof.relative_speed()
+    expect = np.asarray(speeds) / np.mean(speeds)
+    assert np.allclose(rel, expect, rtol=0.02)
+
+
+def test_sparse_region_interpolation():
+    fleet = DeviceFleet.homogeneous(1, tile=64)
+    res = profile_fleet(
+        simulator_measure_fn(fleet), 1, max_tokens=60_000, tile=64,
+        repeats=1, sparse_above=2048, sparse_stride=4096,
+    )
+    # far fewer samples than boundaries
+    assert res.num_samples < 60_000 // 64
+    truth = fleet.models[0].latency(np.asarray([50_000]))[0]
+    approx = res.profile.cost(0, 50_000)
+    assert abs(approx - truth) / truth < 0.02

@@ -1,0 +1,113 @@
+"""Hypothesis property tests for GEM's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeviceFleet,
+    ExpertTrace,
+    Placement,
+    StaircaseLatencyModel,
+    eplb_placement,
+    gem_place,
+    GEMConfig,
+    linear_placement,
+    profile_fleet,
+    score,
+    simulator_measure_fn,
+    tile_boundary_grid,
+)
+
+
+def _profile(speeds, max_tokens=2048, tile=64):
+    fleet = DeviceFleet.from_speeds(list(speeds), tile=tile)
+    return profile_fleet(
+        simulator_measure_fn(fleet), len(speeds), max_tokens=max_tokens,
+        tile=tile, repeats=1,
+    ).profile
+
+
+traces = st.integers(2, 8).flatmap(
+    lambda steps: st.integers(1, 3).flatmap(
+        lambda per: st.lists(
+            st.lists(st.integers(0, 200), min_size=8, max_size=8),
+            min_size=steps, max_size=steps,
+        ).map(lambda rows: ExpertTrace(np.asarray(rows)))
+    )
+)
+speeds4 = st.lists(
+    st.floats(0.85, 1.15, allow_nan=False), min_size=4, max_size=4
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(traces, speeds4)
+def test_score_is_max_over_devices_sum_over_steps(trace, speeds):
+    profile = _profile(speeds)
+    p = linear_placement(8, 4)
+    per_dev = trace.per_device_tokens(p)
+    manual = sum(
+        max(profile.cost(g, per_dev[t, g]) for g in range(4))
+        for t in range(trace.num_steps)
+    )
+    assert np.isclose(score(trace, profile, p), manual)
+
+
+@settings(max_examples=20, deadline=None)
+@given(traces, speeds4, st.integers(0, 1000))
+def test_gem_never_worse_than_its_own_greedy_init(trace, speeds, seed):
+    profile = _profile(speeds)
+    res = gem_place(trace, profile, GEMConfig(num_restarts=3, seed=seed))
+    assert res.score <= res.initial_score + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(traces, speeds4)
+def test_placements_always_balanced(trace, speeds):
+    profile = _profile(speeds)
+    res = gem_place(trace, profile, GEMConfig(num_restarts=2))
+    counts = np.bincount(res.placement.expert_to_device, minlength=4)
+    assert (counts == 2).all()
+    counts = np.bincount(eplb_placement(trace, 4).expert_to_device, minlength=4)
+    assert (counts == 2).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.floats(0.7, 1.3), st.integers(1, 4096),
+    st.integers(16, 512), st.floats(1e-6, 1e-3), st.floats(0.0, 1e-4),
+)
+def test_staircase_monotone_and_quantized(speed, tokens, tile, tile_time, base):
+    m = StaircaseLatencyModel(
+        tile=tile, tile_time=tile_time, base=base, speed=speed
+    )
+    lat = m.latency(np.asarray([tokens]))[0]
+    assert lat >= m.latency(np.asarray([max(tokens - 1, 0)]))[0] - 1e-15
+    # within a tile, latency is flat
+    lo = (tokens - 1) // tile * tile + 1
+    assert np.isclose(m.latency(np.asarray([lo]))[0], lat)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(64, 20_000), st.sampled_from([32, 64, 128, 512]))
+def test_tile_grid_covers_and_is_sparse(max_tokens, tile):
+    grid = tile_boundary_grid(max_tokens, tile)
+    assert grid[0] >= 1 and grid[-1] == max_tokens
+    assert (np.diff(grid) > 0).all()
+    assert len(grid) <= max_tokens  # never denser than the naive sweep
+    # dense region hits every tile boundary
+    boundaries = np.arange(tile, min(max_tokens, 16 * tile) + 1, tile)
+    assert np.isin(boundaries, grid).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(traces, speeds4, st.integers(0, 7), st.integers(0, 7))
+def test_score_invariant_under_same_device_relabeling(trace, speeds, a, b):
+    """Swapping two experts on the SAME device never changes the score."""
+    profile = _profile(speeds)
+    p = linear_placement(8, 4)
+    if p.expert_to_device[a] != p.expert_to_device[b]:
+        a = (b // 2) * 2
+    q = Placement(p.expert_to_device.copy(), 4)
+    s0 = score(trace, profile, p)
+    # permuting experts within one device leaves per-device loads unchanged
+    assert np.isclose(score(trace, profile, q), s0)
