@@ -24,6 +24,39 @@ LINK_BW = 50e9  # bytes/s per ICI link
 
 SINGLE_POD_CHIPS = 256
 
+MXU_INTENSITY = PEAK_FLOPS / HBM_BW  # flops/byte needed to be compute-bound
+
+
+def moe_kernel_tiles(d_model: int, expert_d_ff: int, *, block_c: int = 128,
+                     block_f: int = 256, dtype_bytes: int = 2) -> dict:
+    """Per-grid-step roofline of the fused Pallas expert FFN
+    (``repro.kernels.moe_gemm``): one (e, c, f) step reads a
+    (block_c, D) row tile + (D, block_f)×2 + (block_f, D) weight tiles and
+    does the three GEMMs. The returned ``compute_bound`` flag says whether
+    the tile's arithmetic intensity clears the MXU ridge point — the
+    quantity to tune ``pallas_block_c/f`` against."""
+    D, F = d_model, expert_d_ff
+    flops = 2 * block_c * D * block_f * 3  # gate + up + down GEMMs
+    hbm_bytes = dtype_bytes * (
+        block_c * D          # x row tile
+        + 2 * D * block_f    # w_gate + w_up tiles
+        + block_f * D        # w_down tile
+    ) + 4 * block_c * D      # fp32 accumulator write
+    vmem_bytes = hbm_bytes + 4 * 2 * block_c * block_f  # h_gate/h_up fp32
+    intensity = flops / hbm_bytes
+    n_steps = (F // block_f) if block_f and F >= block_f else 1
+    return {
+        "block_c": block_c,
+        "block_f": block_f,
+        "flops_per_step": flops,
+        "hbm_bytes_per_step": hbm_bytes,
+        "vmem_bytes_per_step": vmem_bytes,
+        "arithmetic_intensity": intensity,
+        "compute_bound": intensity >= MXU_INTENSITY,
+        "f_steps_per_row_block": n_steps,
+        "step_time_bound_s": max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW),
+    }
+
 
 def _tokens(shape_name: str, arch_cfg) -> int:
     from repro.configs import SHAPES
@@ -156,7 +189,36 @@ def run(results_path: str = "results/dryrun.json"):
 
 
 if __name__ == "__main__":
-    rows, summary = run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--moe-backend", default="einsum",
+                    choices=("einsum", "pallas", "dense_ref"))
+    ap.add_argument("--results", default="results/dryrun.json")
+    args = ap.parse_args()
+    if args.moe_backend == "pallas":
+        # kernel-tile roofline for the MoE archs: is the configured tile
+        # compute-bound, and does it fit VMEM?
+        from repro.configs import ARCHS
+
+        print("pallas moe_ffn tile roofline (per grid step):")
+        for name, cfg in ARCHS.items():
+            if not cfg.is_moe:
+                continue
+            t = moe_kernel_tiles(
+                cfg.d_model, cfg.expert_d_ff // cfg.expert_tp,
+                block_c=cfg.pallas_block_c, block_f=cfg.pallas_block_f,
+            )
+            print(f"  {name:22s} block=({t['block_c']},{t['block_f']}) "
+                  f"AI={t['arithmetic_intensity']:.0f} flop/B "
+                  f"{'compute' if t['compute_bound'] else 'memory'}-bound "
+                  f"vmem={t['vmem_bytes_per_step']/2**20:.1f} MiB "
+                  f"step≥{t['step_time_bound_s']*1e6:.1f} us")
+    if not os.path.exists(args.results):
+        print(f"no {args.results}; run repro.launch.dryrun for the full "
+              "per-(arch×shape) roofline")
+        raise SystemExit(0)
+    rows, summary = run(args.results)
     for r in rows:
         if r["status"] == "ok":
             print(f"{r['arch']:22s} {r['shape']:12s} C={r['compute_s']:.2e} "

@@ -5,10 +5,16 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract:
 ``derived`` carries the headline quantity the paper reports for that
 table/figure. A JSON dump of every row lands in results/bench.json.
 
-Run: ``PYTHONPATH=src python -m benchmarks.run``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--moe-backend pallas]``
+
+``--moe-backend`` selects the MoE data-plane backend (einsum | pallas |
+dense_ref) for the benches that execute the real JAX model; the
+simulator-only figure benches are backend-independent and ignore it.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import json
 import os
 import time
@@ -114,29 +120,78 @@ def bench_tab_convergence():
     )
 
 
-def bench_kernels():
-    """Pallas-kernel oracle micro-bench (jnp path timing on this CPU host;
-    the Pallas kernels themselves validate under interpret=True in tests)."""
+def bench_kernels(moe_backend: str = "einsum"):
+    """MoE FFN kernel micro-bench on this host. einsum times the jit'd jnp
+    oracle; pallas runs the fused kernel (interpret mode off-TPU — numbers
+    validate the path, not TPU speed) and reports parity vs the oracle."""
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
+    from repro.kernels import moe_ffn
     from repro.kernels.ref import moe_ffn_ref
 
     key = jax.random.PRNGKey(0)
-    E, C, D, F = 8, 256, 512, 1024
+    # interpret mode executes the kernel body op-by-op: keep pallas dims small
+    E, C, D, F = (8, 256, 512, 1024) if moe_backend == "einsum" else (4, 128, 128, 256)
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (E, C, D), jnp.float32)
     wg = jax.random.normal(ks[1], (E, D, F), jnp.float32) * 0.05
     wu = jax.random.normal(ks[2], (E, D, F), jnp.float32) * 0.05
     wd = jax.random.normal(ks[3], (E, F, D), jnp.float32) * 0.05
+    flops = 6 * E * C * D * F
+    if moe_backend == "pallas":
+        got = moe_ffn(x, wg, wu, wd, block_c=128, block_f=256)
+        err = float(
+            np.abs(np.asarray(got) - np.asarray(moe_ffn_ref(x, wg, wu, wd))).max()
+        )
+        t0 = time.perf_counter()
+        moe_ffn(x, wg, wu, wd, block_c=128, block_f=256).block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6
+        return [], us, f"pallas_interpret_max_abs_err={err:.2e}"
     ffn = jax.jit(moe_ffn_ref)
     ffn(x, wg, wu, wd).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(5):
         ffn(x, wg, wu, wd).block_until_ready()
     us = (time.perf_counter() - t0) / 5 * 1e6
-    flops = 6 * E * C * D * F
     return [], us, f"moe_ffn_ref_gflops={flops / (us * 1e-6) / 1e9:.1f}"
+
+
+def bench_moe_layer_backend(moe_backend: str = "einsum"):
+    """Data-plane wiring check: the smoke-Mixtral MoE layer under the
+    selected backend vs the einsum reference (max |Δ| must be ~fp32 eps)."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models.moe import identity_placement, init_moe, moe_layer
+    from repro.sharding import host_policy
+
+    cfg = dc.replace(get_smoke_config("mixtral-8x7b"), capacity_factor=8.0)
+    policy = host_policy()
+    params, _ = init_moe(
+        jax.random.PRNGKey(0), cfg, num_layers=1, dtype=jnp.float32,
+        policy=policy,
+    )
+    lp = jax.tree.map(lambda t: t[0], params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    table = identity_placement(cfg, 1)[0]
+    y_ref, _ = moe_layer(x, lp, table, cfg, policy, backend="einsum")
+    y, aux = moe_layer(x, lp, table, cfg, policy, backend=moe_backend)  # warmup
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    y, aux = moe_layer(x, lp, table, cfg, policy, backend=moe_backend)
+    jax.block_until_ready(y)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(np.abs(np.asarray(y) - np.asarray(y_ref)).max())
+    return [], us, (
+        f"backend={moe_backend};max_abs_err_vs_einsum={err:.2e};"
+        f"dropped={float(aux['dropped']):.3f}"
+    )
 
 
 def bench_roofline():
@@ -164,17 +219,35 @@ BENCHES = [
     ("fig19_variability_at_scale", bench_fig19_scale),
     ("tab_search_convergence", bench_tab_convergence),
     ("kernel_moe_ffn", bench_kernels),
+    ("moe_layer_backend", bench_moe_layer_backend),
     ("roofline_from_dryrun", bench_roofline),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--moe-backend", default="einsum",
+                    choices=("einsum", "pallas", "dense_ref"))
+    ap.add_argument("--only", default="",
+                    help="substring filter on benchmark names")
+    args = ap.parse_args(argv)
     os.makedirs("results", exist_ok=True)
     all_rows = {}
+    if args.only and os.path.exists("results/bench.json"):
+        # a filtered run updates, rather than replaces, prior full results
+        with open("results/bench.json") as f:
+            all_rows = json.load(f)
     print("name,us_per_call,derived")
     for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        kwargs = (
+            {"moe_backend": args.moe_backend}
+            if "moe_backend" in inspect.signature(fn).parameters
+            else {}
+        )
         try:
-            rows, us, derived = fn()
+            rows, us, derived = fn(**kwargs)
             all_rows[name] = rows
             print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # surface, don't mask

@@ -35,6 +35,8 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--variability", default="high",
                     choices=("high", "moderate", "low"))
+    ap.add_argument("--moe-backend", default="einsum",
+                    choices=("einsum", "pallas", "dense_ref"))
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -58,6 +60,7 @@ def main():
             gem=GEMConfig(trace_length=16, num_restarts=10),
             placement_policy=args.policy,
             other_time_per_step=2e-4,
+            moe_backend=args.moe_backend,
         ),
         profile=profile, num_devices=4,
     )
@@ -71,7 +74,8 @@ def main():
     done = eng.run()
     wall = time.perf_counter() - t0
     report = eng.latency_report()
-    print(f"policy={args.policy} variability={args.variability}")
+    print(f"policy={args.policy} variability={args.variability} "
+          f"moe_backend={args.moe_backend}")
     print(f"served {len(done)} requests in {eng.step_count} engine steps "
           f"({wall:.1f}s wall on this host)")
     print(f"placement re-plan applied: {eng.placement_applied}")

@@ -11,9 +11,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_applicable"]
+__all__ = [
+    "ModelConfig", "ShapeSpec", "SHAPES", "shape_applicable", "MOE_BACKENDS",
+]
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+MOE_BACKENDS = ("einsum", "pallas", "dense_ref")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +46,16 @@ class ModelConfig:
     router_aux_coef: float = 0.01
     capacity_factor: float = 1.25
     decode_capacity_factor: float = 2.0
+    # --- MoE data-plane backend (see models/moe.py) ---
+    # "einsum": grouped-einsum reference path (default; GSPMD-partitionable)
+    # "pallas": fused Pallas kernels (moe_ffn_pallas + topk_router_pallas);
+    #           interpret mode off-TPU, so the same config is CPU-testable
+    # "dense_ref": every expert on every token — the capacity-free oracle
+    moe_backend: str = "einsum"
+    # Pallas tile sizes: the row block feeding the MXU (capacity pads up to
+    # this — the paper's §3.3.2 latency staircase) and the F contraction block
+    pallas_block_c: int = 128
+    pallas_block_f: int = 256
     # --- SSM (Mamba2 / SSD) ---
     ssm_state: int = 0  # N (state size per head); 0 → no ssm blocks
     ssm_expand: int = 2
@@ -65,6 +79,10 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads > 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.moe_backend not in MOE_BACKENDS:
+            raise ValueError(
+                f"moe_backend={self.moe_backend!r} not in {MOE_BACKENDS}"
+            )
 
     # -- derived quantities --------------------------------------------------
     @property

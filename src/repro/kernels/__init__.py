@@ -4,9 +4,19 @@
   staircase GEM's Step-2 profiler samples).
 * ``topk_router`` — fused softmax + top-k + renorm routing.
 
-``ops`` wraps both with backend detection (interpret=True on CPU);
-``ref`` holds the pure-jnp oracles the tests allclose against.
+``compat`` resolves jax-version differences (``CompilerParams`` vs
+``TPUCompilerParams``) and the per-backend interpret default; ``ops`` wraps
+both kernels with that detection (interpret=True on CPU); ``ref`` holds the
+pure-jnp oracles the tests allclose against.
 """
+from .compat import auto_interpret, pallas_compiler_params
 from .ops import moe_ffn, moe_ffn_ref, topk_router, topk_router_ref
 
-__all__ = ["moe_ffn", "moe_ffn_ref", "topk_router", "topk_router_ref"]
+__all__ = [
+    "auto_interpret",
+    "pallas_compiler_params",
+    "moe_ffn",
+    "moe_ffn_ref",
+    "topk_router",
+    "topk_router_ref",
+]

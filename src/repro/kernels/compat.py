@@ -1,0 +1,57 @@
+"""Version-portable Pallas TPU shims shared by every kernel in this package.
+
+jax renamed the Mosaic compiler-params dataclass across releases:
+``pltpu.TPUCompilerParams`` (jax ≤ 0.4.x / 0.5.x) became
+``pltpu.CompilerParams`` (0.6+). Kernels written against one spelling break
+on the other with an ``AttributeError`` at trace time — exactly the failure
+mode that took out the whole kernel path on this container's jax. All
+kernels therefore build their compiler params through
+:func:`pallas_compiler_params`, which resolves the spelling *at call time*
+(not import time) so a jax upgrade — or a test monkeypatching the module —
+is picked up without re-importing the kernels.
+
+``auto_interpret`` lives here too: every kernel entry point defaults to
+``interpret=True`` off-TPU so the same call sites are CPU-testable.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "compiler_params_cls",
+    "pallas_compiler_params",
+    "auto_interpret",
+    "resolve_interpret",
+]
+
+_SPELLINGS = ("CompilerParams", "TPUCompilerParams")
+
+
+def compiler_params_cls():
+    """The Mosaic compiler-params class under whichever name this jax has."""
+    for name in _SPELLINGS:
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls
+    raise AttributeError(
+        "jax.experimental.pallas.tpu exposes none of "
+        f"{_SPELLINGS} — unsupported jax version {jax.__version__}"
+    )
+
+
+def pallas_compiler_params(dimension_semantics):
+    """Compiler params carrying ``dimension_semantics`` for ``pallas_call``."""
+    return compiler_params_cls()(
+        dimension_semantics=tuple(dimension_semantics)
+    )
+
+
+def auto_interpret() -> bool:
+    """True when kernels should run in interpret mode (any non-TPU backend)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Apply the per-backend default when the caller didn't pin a mode."""
+    return auto_interpret() if interpret is None else bool(interpret)

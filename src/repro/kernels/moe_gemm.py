@@ -28,12 +28,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import pallas_compiler_params
 
 __all__ = ["moe_ffn_pallas"]
 
 
-def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, n_f_blocks: int):
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
     f_idx = pl.program_id(2)
 
     @pl.when(f_idx == 0)
@@ -72,7 +73,7 @@ def moe_ffn_pallas(
         )
     grid = (E, C // block_c, F // block_f)
     out = pl.pallas_call(
-        functools.partial(_ffn_kernel, n_f_blocks=F // block_f),
+        _ffn_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
@@ -82,8 +83,8 @@ def moe_ffn_pallas(
         ],
         out_specs=pl.BlockSpec((1, block_c, D), lambda e, c, f: (e, c, 0)),
         out_shape=jax.ShapeDtypeStruct((E, C, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+        compiler_params=pallas_compiler_params(
+            ("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(x_e, w_gate, w_up, w_down)

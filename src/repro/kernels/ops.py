@@ -7,8 +7,7 @@ Mosaic. ``auto_interpret()`` picks per-backend.
 """
 from __future__ import annotations
 
-import jax
-
+from .compat import auto_interpret, resolve_interpret
 from .moe_gemm import moe_ffn_pallas
 from .ref import moe_ffn_ref, topk_router_ref
 from .topk_router import topk_router_pallas
@@ -22,22 +21,16 @@ __all__ = [
 ]
 
 
-def auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def moe_ffn(x_e, w_gate, w_up, w_down, *, block_c: int = 128,
             block_f: int = 256, interpret: bool | None = None):
-    if interpret is None:
-        interpret = auto_interpret()
     return moe_ffn_pallas(
         x_e, w_gate, w_up, w_down, block_c=block_c, block_f=block_f,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )
 
 
 def topk_router(logits, k: int, *, block_t: int = 256,
                 interpret: bool | None = None):
-    if interpret is None:
-        interpret = auto_interpret()
-    return topk_router_pallas(logits, k, block_t=block_t, interpret=interpret)
+    return topk_router_pallas(
+        logits, k, block_t=block_t, interpret=resolve_interpret(interpret)
+    )

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import pallas_compiler_params
 
 __all__ = ["topk_router_pallas"]
 
@@ -45,11 +46,20 @@ def _router_kernel(logits_ref, gates_ref, ids_ref, *, k: int):
 @functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
 def topk_router_pallas(logits, k: int, *, block_t: int = 256,
                        interpret: bool = False):
-    """logits (T, E) → (gates (T, k) f32, ids (T, k) i32)."""
+    """logits (T, E) → (gates (T, k) f32, ids (T, k) i32).
+
+    Ragged T is padded up to a ``block_t`` multiple and the outputs sliced
+    back — rows are independent, so the pad rows (zeros) never leak. The old
+    behaviour (silently growing the block to the full T) put the whole
+    ragged batch in one VMEM tile, which blows VMEM for large T.
+    """
     T, E = logits.shape
-    if T % block_t:
-        block_t = T
-    grid = (T // block_t,)
+    block_t = min(block_t, max(T, 1))
+    T_pad = -(-T // block_t) * block_t
+    padded = logits
+    if T_pad != T:
+        padded = jnp.pad(logits, ((0, T_pad - T), (0, 0)))
+    grid = (T_pad // block_t,)
     gates, ids = pl.pallas_call(
         functools.partial(_router_kernel, k=k),
         grid=grid,
@@ -59,10 +69,10 @@ def topk_router_pallas(logits, k: int, *, block_t: int = 256,
             pl.BlockSpec((block_t, k), lambda t: (t, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((T, k), jnp.float32),
-            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((T_pad, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=pallas_compiler_params(("parallel",)),
         interpret=interpret,
-    )(logits)
-    return gates, ids
+    )(padded)
+    return gates[:T], ids[:T]

@@ -23,14 +23,33 @@ within their slot via argsort + segment offsets, dropped beyond the static
 capacity, gathered into (E_v, C, D) buffers, FFN'd, and combined with a
 scatter-add. Per-real-expert token counts are returned for GEM's Step-1
 trace collection.
+
+**Backends.** ``ModelConfig.moe_backend`` selects the data-plane compute:
+
+* ``"einsum"`` (default) — the grouped-einsum path below; fully
+  GSPMD-partitionable, the parity reference for the others.
+* ``"pallas"`` — router top-k and the grouped expert FFN run through the
+  fused Pallas kernels (``topk_router_pallas`` / ``moe_ffn_pallas``),
+  dispatched per data group. Capacity pads up to the kernel's ``block_c``
+  row tile — exactly the §3.3.2 latency staircase GEM's profiler samples.
+  Off-TPU the kernels run in interpret mode, so the backend is CPU-testable;
+  under a real mesh it falls back to einsum with a one-time warning until
+  per-shard shard_map dispatch lands (ROADMAP open item).
+* ``"dense_ref"`` — every expert computed on every token (capacity-free
+  oracle); router stats still flow so GEM's Step-1 hooks keep working.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
+from ..configs.base import MOE_BACKENDS, ModelConfig
+from ..kernels.compat import auto_interpret
+from ..kernels.moe_gemm import moe_ffn_pallas
+from ..kernels.topk_router import topk_router_pallas
 from ..sharding.policy import ShardingPolicy
 
 __all__ = [
@@ -39,7 +58,33 @@ __all__ = [
     "apply_placement",
     "identity_placement",
     "moe_layer_dense_ref",
+    "resolve_moe_backend",
 ]
+
+_WARNED: set = set()
+
+
+def _warn_once(key, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def resolve_moe_backend(
+    backend: str | None, config: ModelConfig, policy: ShardingPolicy
+) -> str:
+    """Effective backend for this call: explicit arg > config, mesh-gated."""
+    backend = backend if backend is not None else config.moe_backend
+    if backend not in MOE_BACKENDS:
+        raise ValueError(f"moe_backend={backend!r} not in {MOE_BACKENDS}")
+    if backend == "pallas" and policy.mesh is not None:
+        _warn_once(
+            ("pallas_mesh",),
+            "moe_backend='pallas' under a device mesh falls back to 'einsum' "
+            "until per-shard shard_map kernel dispatch lands (ROADMAP)",
+        )
+        backend = "einsum"
+    return backend
 
 
 def init_moe(
@@ -118,6 +163,58 @@ def _rank_in_group(slots, num_slots: int):
     return jnp.take(pos_sorted, inv), group_sizes
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _expert_ffn_pallas(x_e, wg, wu, wd, *, block_c: int, block_f: int):
+    """(Gd, E_v, C, D) → (Gd, E_v, C, D) through the fused Pallas kernel.
+
+    Capacity rounds up to a ``block_c`` multiple — the pad rows are zeros
+    (they gather the zero pad token), FFN(0) = 0, and the rows are sliced
+    back off; that rounding is the tile staircase the paper profiles. F pads
+    with zero columns/rows, exact for silu(x@Wg)·(x@Wu)@Wd. The data-group
+    loop is static (Gd is a trace-time constant, 1 on hosts).
+    """
+    Gd, Ev, C, D = x_e.shape
+    F = wg.shape[-1]
+    bc = min(block_c, _round_up(C, 8))
+    Cp = _round_up(C, bc)
+    bf = min(block_f, _round_up(F, 128))
+    Fp = _round_up(F, bf)
+    if Cp != C:
+        x_e = jnp.pad(x_e, ((0, 0), (0, 0), (0, Cp - C), (0, 0)))
+    if Fp != F:
+        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, Fp - F)))
+        wu = jnp.pad(wu, ((0, 0), (0, 0), (0, Fp - F)))
+        wd = jnp.pad(wd, ((0, 0), (0, Fp - F), (0, 0)))
+    interpret = auto_interpret()
+    y = jnp.stack(
+        [
+            moe_ffn_pallas(
+                x_e[g], wg, wu, wd, block_c=bc, block_f=bf,
+                interpret=interpret,
+            )
+            for g in range(Gd)
+        ]
+    )
+    return y[:, :, :C, :]
+
+
+def _dense_mix(xf, p, gates, ids, config: ModelConfig):
+    """Capacity-free expert mix: xf (N, D), gates/ids (N, k) → (N, D)."""
+    E, tp = config.num_experts, config.expert_tp
+    h_gate = jnp.einsum("nd,edf->nef", xf, p["w_gate"])
+    h_up = jnp.einsum("nd,edf->nef", xf, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    y_all = jnp.einsum("nef,efd->ned", h, p["w_down"])  # (N, E_v, D)
+    y_real = y_all.reshape(xf.shape[0], E, tp, -1).sum(axis=2)  # (N, E, D)
+    sel = jax.nn.one_hot(ids, E, dtype=y_real.dtype) * gates[..., None].astype(
+        y_real.dtype
+    )
+    return jnp.einsum("nke,ned->nd", sel, y_real)
+
+
 def moe_layer(
     x,
     p,
@@ -127,13 +224,18 @@ def moe_layer(
     *,
     capacity_factor: float | None = None,
     seq_sharded_out: bool = False,
+    backend: str | None = None,
 ):
     """x (B, S, D) replicated over model → (y (B,S,D), aux dict).
 
     aux: ``expert_counts`` (E,) tokens routed per *real* expert this call
     (GEM Step-1 hook), ``aux_loss`` load-balance loss (train), ``dropped``
     fraction of assignments dropped at capacity.
+
+    ``backend`` overrides ``config.moe_backend`` for this call (see the
+    module docstring for the three backends).
     """
+    backend = resolve_moe_backend(backend, config, policy)
     B, S, D = x.shape
     E = config.num_experts
     tp = config.expert_tp
@@ -148,6 +250,13 @@ def moe_layer(
     # granite train_4k: 16 GB/layer).
     Gd = policy.data_axis_size
     if B % Gd:
+        _warn_once(
+            ("gd_collapse", B, Gd),
+            f"moe_layer: batch B={B} (x shape {tuple(x.shape)}) does not "
+            f"divide the data-axis size Gd={Gd}; collapsing to Gd=1 — "
+            "data-parallel dispatch grouping is lost and the expert buffers "
+            "replicate across the data axis",
+        )
         Gd = 1
     N = B * S
     Ng = N // Gd
@@ -156,9 +265,18 @@ def moe_layer(
 
     # ---- router (over real experts) ----
     logits = jnp.einsum("gnd,de->gne", xg, p["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, ids = jax.lax.top_k(probs, k)  # (Gd, Ng, k)
-    gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    probs = jax.nn.softmax(logits, axis=-1)  # aux loss needs full probs
+    if backend == "pallas":
+        # fused softmax + top-k + renorm; same selection as lax.top_k on
+        # probs (softmax is monotone in the logits, ties break low-id)
+        gates, ids = topk_router_pallas(
+            logits.reshape(Gd * Ng, E), k, interpret=auto_interpret()
+        )
+        gates = gates.reshape(Gd, Ng, k)
+        ids = ids.reshape(Gd, Ng, k)
+    else:
+        gate_vals, ids = jax.lax.top_k(probs, k)  # (Gd, Ng, k)
+        gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
 
     # Switch-style load-balance aux loss (used by training only).
     density = jnp.mean(
@@ -170,6 +288,26 @@ def moe_layer(
         ids.reshape(-1),
         num_segments=E,
     )
+
+    if backend == "dense_ref":
+        # capacity-free oracle: skip dispatch entirely, keep the aux stats.
+        # The stacked weights live in *slot* order (physical placement);
+        # gather them back to virtual-expert order so the oracle stays
+        # placement-invariant like the dispatch path.
+        pv = dict(p)
+        for name in ("w_gate", "w_up", "w_down"):
+            pv[name] = jnp.take(p[name], expert_to_slot, axis=0)
+        y = _dense_mix(
+            xg.reshape(N, D), pv, gates.reshape(N, k), ids.reshape(N, k),
+            config,
+        ).reshape(B, S, D)
+        y = policy.act_seq_sharded(y) if seq_sharded_out else policy.act_bsd(y)
+        aux = {
+            "expert_counts": expert_counts,
+            "aux_loss": aux_loss,
+            "dropped": jnp.asarray(0.0, jnp.float32),
+        }
+        return y, aux
 
     # ---- virtual assignments → physical slots (ranked per data group) ----
     vids = ids[..., None] * tp + jnp.arange(tp, dtype=ids.dtype)  # (Gd,Ng,k,tp)
@@ -211,11 +349,17 @@ def moe_layer(
         x_pad, flat_idx[:, :, None], axis=1
     ).reshape(Gd, Ev, C, D)
     x_e = policy.constrain(x_e, b, m, None, None)
-    h_gate = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])
-    h_up = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
-    h = jax.nn.silu(h_gate) * h_up
-    h = policy.constrain(h, b, m, None, None)
-    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    if backend == "pallas":
+        y_e = _expert_ffn_pallas(
+            x_e, p["w_gate"], p["w_up"], p["w_down"],
+            block_c=config.pallas_block_c, block_f=config.pallas_block_f,
+        )
+    else:
+        h_gate = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])
+        h_up = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
+        h = jax.nn.silu(h_gate) * h_up
+        h = policy.constrain(h, b, m, None, None)
+        y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
     y_e = y_e * dispatch_gate[..., None].astype(y_e.dtype)
     y_e = policy.constrain(y_e, b, m, None, None)
 
@@ -254,21 +398,10 @@ def moe_layer_dense_ref(x, p, config: ModelConfig):
     dispatch path (with generous capacity the two must agree).
     """
     B, S, D = x.shape
-    E, tp = config.num_experts, config.expert_tp
     k = config.experts_per_token
     xf = x.reshape(-1, D)
     logits = jnp.einsum("nd,de->ne", xf, p["router"]).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, ids = jax.lax.top_k(probs, k)
     gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
-
-    # dense compute of all virtual experts: (N, Ev, D→)
-    h_gate = jnp.einsum("nd,edf->nef", xf, p["w_gate"])
-    h_up = jnp.einsum("nd,edf->nef", xf, p["w_up"])
-    h = jax.nn.silu(h_gate) * h_up
-    y_all = jnp.einsum("nef,efd->ned", h, p["w_down"])  # (N, Ev, D)
-    # sum virtual slices per real expert
-    y_real = y_all.reshape(xf.shape[0], E, tp, D).sum(axis=2)  # (N, E, D)
-    sel = jax.nn.one_hot(ids, E, dtype=y_real.dtype) * gates[..., None]
-    y = jnp.einsum("nke,ned->nd", sel, y_real)
-    return y.reshape(B, S, D)
+    return _dense_mix(xf, p, gates, ids, config).reshape(B, S, D)

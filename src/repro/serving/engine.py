@@ -51,8 +51,10 @@ class EngineConfig:
     gem: GEMConfig = GEMConfig()
     placement_policy: str = "gem"  # gem | eplb | linear
     replan_after: int | None = None  # engine steps before replan (default:
-    # gem.trace_length)
+    # gem.trace_length; 0 means "as soon as the trace collectors fill")
     other_time_per_step: float = 0.0  # simulated non-MoE per-step latency
+    moe_backend: str | None = None  # override ModelConfig.moe_backend for
+    # the engine's data plane (einsum | pallas | dense_ref)
 
 
 class ServingEngine:
@@ -66,6 +68,10 @@ class ServingEngine:
         profile: VariabilityProfile | None = None,
         num_devices: int | None = None,
     ):
+        if engine_config.moe_backend is not None:
+            config = dataclasses.replace(
+                config, moe_backend=engine_config.moe_backend
+            )
         self.params = params
         self.config = config
         self.policy = policy
@@ -199,7 +205,11 @@ class ServingEngine:
             or self.profile is None
         ):
             return
-        threshold = self.ecfg.replan_after or self.ecfg.gem.trace_length
+        threshold = (
+            self.ecfg.replan_after
+            if self.ecfg.replan_after is not None
+            else self.ecfg.gem.trace_length
+        )
         if self.step_count < threshold:
             return
         if not all(

@@ -96,6 +96,55 @@ def test_continuous_batching_refills_slots():
     assert starts[-1] > finishes[0]
 
 
+def test_replan_after_zero_is_not_coerced_to_default():
+    """Regression: ``replan_after=0`` ("replan as soon as the collectors
+    fill") used to be silently coerced to ``gem.trace_length`` by a falsy
+    ``or``. With pre-filled collectors and step_count=0 the replan must fire
+    immediately."""
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", 4), tile=8, tile_time=40e-6
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet), 4, max_tokens=512, tile=8, repeats=3
+    ).profile
+    ecfg = EngineConfig(
+        max_batch=4, max_len=80, gem=GEMConfig(trace_length=4, num_restarts=2),
+        replan_after=0,
+    )
+    eng = ServingEngine(params, cfg, policy, ecfg, profile=profile,
+                        num_devices=4)
+    Ev = cfg.num_experts * cfg.expert_tp
+    rng = np.random.default_rng(0)
+    for _ in range(4):  # fill every layer's collector to trace_length
+        counts = rng.integers(0, 32, size=Ev)
+        for layer in range(cfg.num_layers):
+            eng.planner.observe_step(layer, counts)
+    assert eng.step_count == 0
+    eng._maybe_replan()
+    assert eng.placement_applied  # falsy-or bug: waits trace_length steps
+
+
+def test_engine_moe_backend_override_threads_to_config():
+    """EngineConfig.moe_backend replaces the model config's backend."""
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(max_batch=2, max_len=32, moe_backend="pallas"),
+    )
+    assert eng.config.moe_backend == "pallas"
+    rng = np.random.default_rng(5)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=6), max_new_tokens=4)
+    done = eng.run(max_steps=40)
+    assert len(done) == 1 and len(done[0].generated) == 4
+
+
 def test_non_moe_arch_serves_without_gem():
     eng, cfg = _engine(arch="qwen1.5-4b")
     assert eng.planner is None

@@ -47,6 +47,10 @@ ROUTER_SHAPES = [
     (256, 40, 8, 128),
     (512, 128, 8, 256),
     (64, 16, 4, 64),
+    # ragged T: padded up to a block_t multiple inside the kernel wrapper
+    # (the old path silently grew the block to the full T)
+    (100, 8, 2, 64),
+    (130, 16, 4, 128),
 ]
 
 

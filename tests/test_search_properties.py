@@ -1,6 +1,13 @@
 """Hypothesis property tests for GEM's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-test.txt); "
+    "property tests skipped",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     DeviceFleet,
