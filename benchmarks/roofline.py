@@ -45,6 +45,16 @@ def moe_kernel_tiles(d_model: int, expert_d_ff: int, *, block_c: int = 128,
     vmem_bytes = hbm_bytes + 4 * 2 * block_c * block_f  # h_gate/h_up fp32
     intensity = flops / hbm_bytes
     n_steps = (F // block_f) if block_f and F >= block_f else 1
+    # Per *row block* (the unit the output revisiting amortizes over): the
+    # fp32 accumulator stays resident in VMEM across all F steps of one
+    # (e, c) block — its index map ignores f — so HBM carries the x tile and
+    # one accumulator write ONCE per row block, plus every weight tile once.
+    # This is the intensity pallas_block_c/f tuning should clear, not the
+    # per-step one (which double-counts the accumulator F/block_f times).
+    blk_flops = flops * n_steps
+    blk_hbm = dtype_bytes * (block_c * D + 3 * D * block_f * n_steps) \
+        + 4 * block_c * D
+    blk_intensity = blk_flops / blk_hbm
     return {
         "block_c": block_c,
         "block_f": block_f,
@@ -52,10 +62,114 @@ def moe_kernel_tiles(d_model: int, expert_d_ff: int, *, block_c: int = 128,
         "hbm_bytes_per_step": hbm_bytes,
         "vmem_bytes_per_step": vmem_bytes,
         "arithmetic_intensity": intensity,
-        "compute_bound": intensity >= MXU_INTENSITY,
+        "block_intensity": blk_intensity,
+        "compute_bound": blk_intensity >= MXU_INTENSITY,
         "f_steps_per_row_block": n_steps,
         "step_time_bound_s": max(flops / PEAK_FLOPS, hbm_bytes / HBM_BW),
+        "row_block_time_bound_s": max(
+            blk_flops / PEAK_FLOPS, blk_hbm / HBM_BW
+        ),
     }
+
+
+VMEM_BUDGET_BYTES = 16 * 2**20  # v5e per-core VMEM
+BLOCK_C_SWEEP = (8, 16, 32, 64, 128, 256, 512, 1024)
+BLOCK_F_SWEEP = (128, 256, 512, 1024)
+
+
+def sweep_pallas_blocks(mesh_data: int = 16, mesh_model: int = 16,
+                        out_path: str = "results/pallas_autotune.json"):
+    """Sweep ``pallas_block_c/f`` over the per-shard shapes the shard_map
+    path actually sees.
+
+    Under per-shard dispatch each device runs ``moe_ffn_pallas`` on its
+    local (E_v/16, C, D) buffer — E_local experts, the capacity C implied by
+    that shape's per-group token count, the arch's D and per-virtual-expert
+    F. For every MoE (arch × shape) cell the sweep grids (block_c, block_f),
+    applies the same padding the dispatch plane applies (C up to block_c —
+    the §3.3.2 staircase — F up to block_f), and scores each tile by the
+    analytic roofline of :func:`moe_kernel_tiles`. Emits the *compute-bound
+    frontier* — every VMEM-fitting, compute-bound tile — plus the
+    min-total-time pick per cell into ``results/pallas_autotune.json``.
+    (Analytic on purpose: interpret-mode wall clock on this host says
+    nothing about MXU behaviour.)
+    """
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    from repro.kernels.compat import round_up as _round_up  # one staircase
+
+    rows = []
+    for arch, cfg in sorted(ARCHS.items()):
+        if not cfg.is_moe:
+            continue
+        Ev = cfg.num_experts * cfg.expert_tp
+        # mirrors ShardingPolicy.moe_shard_spec: an indivisible E_v
+        # replicates — every device then computes ALL experts, not E_v/mm
+        e_local = Ev // mesh_model if Ev % mesh_model == 0 else Ev
+        Fv = cfg.expert_d_ff // cfg.expert_tp
+        for shape in SHAPES.values():
+            ok, _why = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            toks = (shape.global_batch if shape.kind == "decode"
+                    else shape.global_batch * shape.seq_len)
+            n_group = max(toks // mesh_data, 1)  # tokens per dispatch group
+            cf = (cfg.decode_capacity_factor if shape.kind == "decode"
+                  else cfg.capacity_factor)
+            C = max(
+                int(-(-n_group * cfg.experts_per_token * cf
+                      // cfg.num_experts)), 1
+            )
+            grid = []
+            seen_tiles = set()
+            for bc in BLOCK_C_SWEEP:
+                for bf in BLOCK_F_SWEEP:
+                    bc_eff = min(bc, _round_up(C, 8))
+                    bf_eff = min(bf, _round_up(Fv, 128))
+                    if (bc_eff, bf_eff) in seen_tiles:  # clamping dedups
+                        continue
+                    seen_tiles.add((bc_eff, bf_eff))
+                    Cp = _round_up(C, bc_eff)
+                    Fp = _round_up(Fv, bf_eff)
+                    t = moe_kernel_tiles(
+                        cfg.d_model, Fp, block_c=bc_eff, block_f=bf_eff
+                    )
+                    n_row_blocks = e_local * (Cp // bc_eff)
+                    grid.append({
+                        "block_c": bc_eff,
+                        "block_f": bf_eff,
+                        "padded_c": Cp,
+                        "pad_waste": Cp / C - 1.0,
+                        "compute_bound": t["compute_bound"],
+                        "fits_vmem": t["vmem_bytes_per_step"]
+                        <= VMEM_BUDGET_BYTES,
+                        "block_intensity": t["block_intensity"],
+                        "total_time_bound_s": n_row_blocks
+                        * t["row_block_time_bound_s"],
+                    })
+            feasible = [g for g in grid if g["fits_vmem"]]
+            frontier = sorted(
+                {(g["block_c"], g["block_f"])
+                 for g in feasible if g["compute_bound"]}
+            )
+            best = min(
+                feasible, key=lambda g: g["total_time_bound_s"]
+            ) if feasible else None
+            rows.append({
+                "arch": arch,
+                "shape": shape.name,
+                "e_local": e_local,
+                "capacity": C,
+                "d_model": cfg.d_model,
+                "f_virtual": Fv,
+                "configured": (cfg.pallas_block_c, cfg.pallas_block_f),
+                "best": best,
+                "compute_bound_frontier": frontier,
+                "grid": grid,
+            })
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
 
 
 def _tokens(shape_name: str, arch_cfg) -> int:
@@ -194,8 +308,25 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--moe-backend", default="einsum",
                     choices=("einsum", "pallas", "dense_ref"))
+    ap.add_argument("--sweep-blocks", action="store_true",
+                    help="sweep pallas_block_c/f over the per-shard "
+                    "(E_v/16, C, D) shapes and write "
+                    "results/pallas_autotune.json")
     ap.add_argument("--results", default="results/dryrun.json")
     args = ap.parse_args()
+    if args.sweep_blocks:
+        swept = sweep_pallas_blocks()
+        print("pallas block sweep (per-shard shapes, analytic roofline):")
+        for r in swept:
+            b = r["best"]
+            best_s = (f"best=({b['block_c']},{b['block_f']}) "
+                      f"pad={b['pad_waste']*100:.0f}% "
+                      f"t≥{b['total_time_bound_s']*1e6:.1f}us"
+                      if b else "no feasible tile")
+            print(f"  {r['arch']:22s} {r['shape']:12s} "
+                  f"E_l={r['e_local']:2d} C={r['capacity']:6d} {best_s} "
+                  f"frontier={len(r['compute_bound_frontier'])} tiles")
+        print("wrote results/pallas_autotune.json")
     if args.moe_backend == "pallas":
         # kernel-tile roofline for the MoE archs: is the configured tile
         # compute-bound, and does it fit VMEM?

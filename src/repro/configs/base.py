@@ -46,10 +46,12 @@ class ModelConfig:
     router_aux_coef: float = 0.01
     capacity_factor: float = 1.25
     decode_capacity_factor: float = 2.0
-    # --- MoE data-plane backend (see models/moe.py) ---
+    # --- MoE data-plane backend (see models/moe.py + models/dispatch.py) ---
     # "einsum": grouped-einsum reference path (default; GSPMD-partitionable)
     # "pallas": fused Pallas kernels (moe_ffn_pallas + topk_router_pallas);
-    #           interpret mode off-TPU, so the same config is CPU-testable
+    #           under a mesh they run per device shard inside shard_map on
+    #           the (E_v/16, C, D) slices — no mesh gate, no einsum
+    #           fallback; interpret mode off-TPU, so CPU-testable either way
     # "dense_ref": every expert on every token — the capacity-free oracle
     moe_backend: str = "einsum"
     # Pallas tile sizes: the row block feeding the MXU (capacity pads up to

@@ -4,19 +4,26 @@
   staircase GEM's Step-2 profiler samples).
 * ``topk_router`` — fused softmax + top-k + renorm routing.
 
-``compat`` resolves jax-version differences (``CompilerParams`` vs
-``TPUCompilerParams``) and the per-backend interpret default; ``ops`` wraps
-both kernels with that detection (interpret=True on CPU); ``ref`` holds the
-pure-jnp oracles the tests allclose against.
+``sharded`` holds the per-shard entry points — the same kernels run inside
+``shard_map`` over the (data, model) mesh so each device computes its local
+(E_v/16, C, D) shard; ``compat`` resolves jax-version differences
+(``CompilerParams`` vs ``TPUCompilerParams``, the ``shard_map`` home) and
+the per-backend interpret default; ``ops`` wraps both kernels with that
+detection (interpret=True on CPU); ``ref`` holds the pure-jnp oracles the
+tests allclose against.
 """
-from .compat import auto_interpret, pallas_compiler_params
+from .compat import auto_interpret, get_shard_map, pallas_compiler_params
 from .ops import moe_ffn, moe_ffn_ref, topk_router, topk_router_ref
+from .sharded import moe_ffn_sharded, topk_router_sharded
 
 __all__ = [
     "auto_interpret",
+    "get_shard_map",
     "pallas_compiler_params",
     "moe_ffn",
     "moe_ffn_ref",
+    "moe_ffn_sharded",
     "topk_router",
     "topk_router_ref",
+    "topk_router_sharded",
 ]

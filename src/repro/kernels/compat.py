@@ -23,7 +23,20 @@ __all__ = [
     "pallas_compiler_params",
     "auto_interpret",
     "resolve_interpret",
+    "get_shard_map",
+    "round_up",
 ]
+
+
+def round_up(n: int, m: int) -> int:
+    """n rounded up to the next multiple of m — THE tile-staircase helper.
+
+    Every pad-to-tile decision (capacity → block_c, F → block_f, ragged T →
+    block_t, and the analytic sweep modelling them) must share this one
+    definition or the sweep's model silently desynchronizes from the real
+    padding.
+    """
+    return -(-n // m) * m
 
 _SPELLINGS = ("CompilerParams", "TPUCompilerParams")
 
@@ -45,6 +58,21 @@ def pallas_compiler_params(dimension_semantics):
     return compiler_params_cls()(
         dimension_semantics=tuple(dimension_semantics)
     )
+
+
+def get_shard_map():
+    """``shard_map`` under whichever home this jax version gives it.
+
+    ``jax.experimental.shard_map.shard_map`` (≤ 0.4.x/0.5.x) graduated to
+    ``jax.shard_map`` (0.6+). Resolved at call time, like the compiler-params
+    spelling above, so a jax upgrade is picked up without re-import.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map
 
 
 def auto_interpret() -> bool:

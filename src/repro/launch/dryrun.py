@@ -66,11 +66,21 @@ def build_step_fn(config: ModelConfig, shape: ShapeSpec, policy):
     raise ValueError(shape.kind)
 
 
-def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             moe_backend: str | None = None) -> dict:
+    import dataclasses
+
     config = get_config(arch)
+    if moe_backend is not None and config.is_moe:
+        # lower the cell with the selected MoE data plane — with "pallas"
+        # the fused kernels trace per-shard inside shard_map on the
+        # production mesh (the path PR 2 wired; einsum fallback is gone)
+        config = dataclasses.replace(config, moe_backend=moe_backend)
     shape = SHAPES[shape_name]
     mesh_name = "2x16x16" if multi_pod else "16x16"
     cell: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if moe_backend is not None and config.is_moe:
+        cell["moe_backend"] = moe_backend
     ok, why = shape_applicable(config, shape)
     if not ok:
         cell.update(status="skipped", reason=why)
@@ -92,9 +102,16 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax ≤ 0.4.x: list of dicts
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_stats(hlo)
         walk = compute_stats(hlo)
+        # jaxlib ≤ 0.4.x has no peak_memory_in_bytes on CompiledMemoryStats;
+        # the temp size is the XLA heap proxy there (an upper bound on peak)
+        xla_peak = getattr(mem, "peak_memory_in_bytes", None)
+        if xla_peak is None:
+            xla_peak = mem.temp_size_in_bytes
         mem_d = {
             "argument_bytes": int(mem.argument_size_in_bytes),
             "output_bytes": int(mem.output_size_in_bytes),
@@ -104,9 +121,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
             "peak_bytes": int(
                 mem.argument_size_in_bytes
                 - mem.alias_size_in_bytes
-                + mem.peak_memory_in_bytes
+                + xla_peak
             ),
-            "xla_peak_bytes": int(mem.peak_memory_in_bytes),
+            "xla_peak_bytes": int(xla_peak),
         }
         cell.update(
             status="ok",
@@ -144,6 +161,10 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--moe-backend", default=None,
+                    choices=("einsum", "pallas", "dense_ref"),
+                    help="MoE data-plane backend for MoE archs (default: "
+                    "each config's own setting)")
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args(argv)
 
@@ -166,7 +187,10 @@ def main(argv=None) -> int:
     n_err = 0
     for arch, shape in cells:
         key = f"{arch}|{shape}|{'2x16x16' if args.multi_pod else '16x16'}"
-        cell = run_cell(arch, shape, multi_pod=args.multi_pod)
+        cell = run_cell(
+            arch, shape, multi_pod=args.multi_pod,
+            moe_backend=args.moe_backend,
+        )
         results[key] = cell
         status = cell["status"]
         extra = ""

@@ -8,24 +8,32 @@ init, smoke tests and benches see the real single device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5: explicit-sharding axis types exist; Auto keeps GSPMD
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: meshes are implicitly Auto
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_host_mesh", "policy_for"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (host-scale tests/examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def policy_for(mesh, *, step_kind: str, global_batch: int | None = None,

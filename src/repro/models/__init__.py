@@ -8,6 +8,7 @@ from .model import (
     loss_fn,
     prefill,
 )
+from .dispatch import DispatchPlan, MoEAux, RouterOutput
 from .moe import apply_placement, identity_placement, moe_layer, moe_layer_dense_ref
 from .ssm import SSMCache, ssm_decode, ssm_train
 
@@ -16,6 +17,7 @@ __all__ = [
     "cross_entropy_loss", "gated_mlp", "rms_norm",
     "decode_step", "forward_train", "init_decode_cache", "init_params",
     "loss_fn", "prefill",
+    "DispatchPlan", "MoEAux", "RouterOutput",
     "apply_placement", "identity_placement", "moe_layer", "moe_layer_dense_ref",
     "SSMCache", "ssm_decode", "ssm_train",
 ]

@@ -36,7 +36,7 @@ from .layers import (
     lm_logits,
     rms_norm,
 )
-from .moe import identity_placement, init_moe, moe_layer
+from .moe import MoEAux, identity_placement, init_moe, moe_layer
 from .ssm import SSMCache, init_ssm, ssm_decode, ssm_train
 
 __all__ = [
@@ -173,11 +173,11 @@ def _ssm_block_train(x, lp, config: ModelConfig, policy: ShardingPolicy,
 
 
 def _moe_aux_zero(config: ModelConfig):
-    return {
-        "expert_counts": jnp.zeros((config.num_experts,), jnp.int32),
-        "aux_loss": jnp.asarray(0.0, jnp.float32),
-        "dropped": jnp.asarray(0.0, jnp.float32),
-    }
+    return MoEAux(
+        expert_counts=jnp.zeros((config.num_experts,), jnp.int32),
+        aux_loss=jnp.asarray(0.0, jnp.float32),
+        dropped=jnp.asarray(0.0, jnp.float32),
+    )
 
 
 def _stack_forward(x, params, placements, config: ModelConfig,
@@ -298,9 +298,10 @@ def forward_train(params, batch, config: ModelConfig, policy: ShardingPolicy,
     logits = lm_logits(x, params, config, policy, mode="train")
     aux = {}
     if moe_aux is not None:
-        aux["expert_counts"] = moe_aux["expert_counts"]  # (L, E)
-        aux["aux_loss"] = jnp.mean(moe_aux["aux_loss"])
-        aux["dropped"] = jnp.mean(moe_aux["dropped"])
+        # moe_aux is the scan-stacked MoEAux struct: fields are (L, ...)
+        aux["expert_counts"] = moe_aux.expert_counts  # (L, E)
+        aux["aux_loss"] = jnp.mean(moe_aux.aux_loss)
+        aux["dropped"] = jnp.mean(moe_aux.dropped)
     return logits, aux
 
 

@@ -18,39 +18,51 @@ are permuted once at load time (`apply_placement`). Model outputs are
 invariant to the placement (property-tested); what changes is *which device*
 the hot experts' tokens land on — exactly the paper's lever.
 
-**Dispatch** is sort-based (no (N, E, C) one-hot): assignments are ranked
-within their slot via argsort + segment offsets, dropped beyond the static
-capacity, gathered into (E_v, C, D) buffers, FFN'd, and combined with a
-scatter-add. Per-real-expert token counts are returned for GEM's Step-1
-trace collection.
+**Staged dispatch plane.** :func:`moe_layer` is a thin composition of the
+four stages in :mod:`repro.models.dispatch` —
+``route → build_dispatch → expert_compute → combine`` — each passing small
+typed structs (``RouterOutput`` / ``DispatchPlan`` / ``MoEAux``). Dispatch
+is sort-based (no (N, E, C) one-hot): assignments are ranked within their
+slot via argsort + segment offsets, dropped beyond the static capacity,
+gathered into (E_v, C, D) buffers, FFN'd, and combined with a scatter-add.
+Per-real-expert token counts are returned for GEM's Step-1 trace collection.
 
-**Backends.** ``ModelConfig.moe_backend`` selects the data-plane compute:
+**Backends.** ``ModelConfig.moe_backend`` selects the expert-compute stage;
+all three route through the same staged structure:
 
-* ``"einsum"`` (default) — the grouped-einsum path below; fully
-  GSPMD-partitionable, the parity reference for the others.
+* ``"einsum"`` (default) — grouped-einsum FFN; fully GSPMD-partitionable,
+  the parity reference for the others.
 * ``"pallas"`` — router top-k and the grouped expert FFN run through the
-  fused Pallas kernels (``topk_router_pallas`` / ``moe_ffn_pallas``),
-  dispatched per data group. Capacity pads up to the kernel's ``block_c``
-  row tile — exactly the §3.3.2 latency staircase GEM's profiler samples.
-  Off-TPU the kernels run in interpret mode, so the backend is CPU-testable;
-  under a real mesh it falls back to einsum with a one-time warning until
-  per-shard shard_map dispatch lands (ROADMAP open item).
+  fused Pallas kernels (``topk_router_pallas`` / ``moe_ffn_pallas``). Under
+  a device mesh the kernels execute *per shard* inside ``shard_map``: each
+  device runs the FFN kernel on its local (E_v/16, C, D) weight and buffer
+  shard (the router on its data-axis logits slice), while the sort-based
+  scatter/gather stays outside in GSPMD land — no einsum fallback. Capacity
+  pads up to the kernel's ``block_c`` row tile — exactly the §3.3.2 latency
+  staircase GEM's profiler samples. The router kernel also emits the
+  load-balance aux statistics, so no duplicate (T, E) softmax pass runs.
+  Off-TPU the kernels run in interpret mode, so both the host path and the
+  shard_map path are CPU-testable.
 * ``"dense_ref"`` — every expert computed on every token (capacity-free
   oracle); router stats still flow so GEM's Step-1 hooks keep working.
 """
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import MOE_BACKENDS, ModelConfig
-from ..kernels.compat import auto_interpret
-from ..kernels.moe_gemm import moe_ffn_pallas
-from ..kernels.topk_router import topk_router_pallas
-from ..sharding.policy import ShardingPolicy
+from ..sharding.policy import ShardingPolicy, host_policy
+from .dispatch import (
+    MoEAux,
+    _warn_once,
+    build_dispatch,
+    combine,
+    dense_mix,
+    expert_compute,
+    route,
+)
 
 __all__ = [
     "init_moe",
@@ -59,31 +71,18 @@ __all__ = [
     "identity_placement",
     "moe_layer_dense_ref",
     "resolve_moe_backend",
+    "MoEAux",
 ]
-
-_WARNED: set = set()
-
-
-def _warn_once(key, msg: str) -> None:
-    if key not in _WARNED:
-        _WARNED.add(key)
-        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def resolve_moe_backend(
     backend: str | None, config: ModelConfig, policy: ShardingPolicy
 ) -> str:
-    """Effective backend for this call: explicit arg > config, mesh-gated."""
+    """Effective backend for this call: explicit arg > config."""
+    del policy  # kept in the signature for call-site stability
     backend = backend if backend is not None else config.moe_backend
     if backend not in MOE_BACKENDS:
         raise ValueError(f"moe_backend={backend!r} not in {MOE_BACKENDS}")
-    if backend == "pallas" and policy.mesh is not None:
-        _warn_once(
-            ("pallas_mesh",),
-            "moe_backend='pallas' under a device mesh falls back to 'einsum' "
-            "until per-shard shard_map kernel dispatch lands (ROADMAP)",
-        )
-        backend = "einsum"
     return backend
 
 
@@ -143,78 +142,6 @@ def apply_placement(moe_params, slot_to_expert):
     return out
 
 
-def _rank_in_group(slots, num_slots: int):
-    """Position of each assignment within its slot group (stable order).
-
-    slots: (A,) int32. Returns positions (A,) such that the i-th (in original
-    order) assignment of a slot gets position i.
-    """
-    A = slots.shape[0]
-    order = jnp.argsort(slots, stable=True)  # groups together, stable in index
-    sorted_slots = jnp.take(slots, order)
-    group_sizes = jax.ops.segment_sum(
-        jnp.ones((A,), jnp.int32), slots, num_segments=num_slots
-    )
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)[:-1]]
-    )
-    pos_sorted = jnp.arange(A, dtype=jnp.int32) - jnp.take(starts, sorted_slots)
-    inv = jnp.argsort(order, stable=True)
-    return jnp.take(pos_sorted, inv), group_sizes
-
-
-def _round_up(n: int, m: int) -> int:
-    return -(-n // m) * m
-
-
-def _expert_ffn_pallas(x_e, wg, wu, wd, *, block_c: int, block_f: int):
-    """(Gd, E_v, C, D) → (Gd, E_v, C, D) through the fused Pallas kernel.
-
-    Capacity rounds up to a ``block_c`` multiple — the pad rows are zeros
-    (they gather the zero pad token), FFN(0) = 0, and the rows are sliced
-    back off; that rounding is the tile staircase the paper profiles. F pads
-    with zero columns/rows, exact for silu(x@Wg)·(x@Wu)@Wd. The data-group
-    loop is static (Gd is a trace-time constant, 1 on hosts).
-    """
-    Gd, Ev, C, D = x_e.shape
-    F = wg.shape[-1]
-    bc = min(block_c, _round_up(C, 8))
-    Cp = _round_up(C, bc)
-    bf = min(block_f, _round_up(F, 128))
-    Fp = _round_up(F, bf)
-    if Cp != C:
-        x_e = jnp.pad(x_e, ((0, 0), (0, 0), (0, Cp - C), (0, 0)))
-    if Fp != F:
-        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, Fp - F)))
-        wu = jnp.pad(wu, ((0, 0), (0, 0), (0, Fp - F)))
-        wd = jnp.pad(wd, ((0, 0), (0, Fp - F), (0, 0)))
-    interpret = auto_interpret()
-    y = jnp.stack(
-        [
-            moe_ffn_pallas(
-                x_e[g], wg, wu, wd, block_c=bc, block_f=bf,
-                interpret=interpret,
-            )
-            for g in range(Gd)
-        ]
-    )
-    return y[:, :, :C, :]
-
-
-def _dense_mix(xf, p, gates, ids, config: ModelConfig):
-    """Capacity-free expert mix: xf (N, D), gates/ids (N, k) → (N, D)."""
-    E, tp = config.num_experts, config.expert_tp
-    h_gate = jnp.einsum("nd,edf->nef", xf, p["w_gate"])
-    h_up = jnp.einsum("nd,edf->nef", xf, p["w_up"])
-    h = jax.nn.silu(h_gate) * h_up
-    y_all = jnp.einsum("nef,efd->ned", h, p["w_down"])  # (N, E_v, D)
-    y_real = y_all.reshape(xf.shape[0], E, tp, -1).sum(axis=2)  # (N, E, D)
-    sel = jax.nn.one_hot(ids, E, dtype=y_real.dtype) * gates[..., None].astype(
-        y_real.dtype
-    )
-    return jnp.einsum("nke,ned->nd", sel, y_real)
-
-
 def moe_layer(
     x,
     p,
@@ -226,22 +153,23 @@ def moe_layer(
     seq_sharded_out: bool = False,
     backend: str | None = None,
 ):
-    """x (B, S, D) replicated over model → (y (B,S,D), aux dict).
+    """x (B, S, D) replicated over model → (y (B,S,D), :class:`MoEAux`).
 
     aux: ``expert_counts`` (E,) tokens routed per *real* expert this call
     (GEM Step-1 hook), ``aux_loss`` load-balance loss (train), ``dropped``
     fraction of assignments dropped at capacity.
 
     ``backend`` overrides ``config.moe_backend`` for this call (see the
-    module docstring for the three backends).
+    module docstring for the three backends). The body is a pure
+    composition of the :mod:`repro.models.dispatch` stages.
     """
     backend = resolve_moe_backend(backend, config, policy)
     B, S, D = x.shape
-    E = config.num_experts
-    tp = config.expert_tp
-    Ev = E * tp
-    k = config.experts_per_token
-    cf = capacity_factor or config.capacity_factor
+    # `is None`, not falsy-or: an explicit 0.0 means "minimum capacity"
+    cf = (
+        capacity_factor if capacity_factor is not None
+        else config.capacity_factor
+    )
     # Dispatch is *grouped by data shard*: tokens of one data-parallel group
     # dispatch among themselves, so the (Gd, E_v, C, D) expert buffers shard
     # over data AND model. A global (E_v, C_global, D) formulation has no
@@ -259,136 +187,31 @@ def moe_layer(
         )
         Gd = 1
     N = B * S
-    Ng = N // Gd
-    xg = x.reshape(Gd, Ng, D)
+    xg = x.reshape(Gd, N // Gd, D)
     xg = policy.constrain(xg, policy.batch, None, None)
 
-    # ---- router (over real experts) ----
-    logits = jnp.einsum("gnd,de->gne", xg, p["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)  # aux loss needs full probs
-    if backend == "pallas":
-        # fused softmax + top-k + renorm; same selection as lax.top_k on
-        # probs (softmax is monotone in the logits, ties break low-id)
-        gates, ids = topk_router_pallas(
-            logits.reshape(Gd * Ng, E), k, interpret=auto_interpret()
-        )
-        gates = gates.reshape(Gd, Ng, k)
-        ids = ids.reshape(Gd, Ng, k)
-    else:
-        gate_vals, ids = jax.lax.top_k(probs, k)  # (Gd, Ng, k)
-        gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
-
-    # Switch-style load-balance aux loss (used by training only).
-    density = jnp.mean(
-        jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(axis=2), axis=(0, 1)
-    )
-    aux_loss = E * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
-    expert_counts = jax.ops.segment_sum(
-        jnp.ones_like(ids.reshape(-1), dtype=jnp.int32),
-        ids.reshape(-1),
-        num_segments=E,
-    )
+    router = route(xg, p["router"], config, policy, backend=backend)
 
     if backend == "dense_ref":
-        # capacity-free oracle: skip dispatch entirely, keep the aux stats.
-        # The stacked weights live in *slot* order (physical placement);
-        # gather them back to virtual-expert order so the oracle stays
-        # placement-invariant like the dispatch path.
-        pv = dict(p)
-        for name in ("w_gate", "w_up", "w_down"):
-            pv[name] = jnp.take(p[name], expert_to_slot, axis=0)
-        y = _dense_mix(
-            xg.reshape(N, D), pv, gates.reshape(N, k), ids.reshape(N, k),
-            config,
-        ).reshape(B, S, D)
+        # capacity-free oracle: skip dispatch entirely, keep the aux stats
+        y = dense_mix(xg, p, router, expert_to_slot, config).reshape(B, S, D)
         y = policy.act_seq_sharded(y) if seq_sharded_out else policy.act_bsd(y)
-        aux = {
-            "expert_counts": expert_counts,
-            "aux_loss": aux_loss,
-            "dropped": jnp.asarray(0.0, jnp.float32),
-        }
-        return y, aux
-
-    # ---- virtual assignments → physical slots (ranked per data group) ----
-    vids = ids[..., None] * tp + jnp.arange(tp, dtype=ids.dtype)  # (Gd,Ng,k,tp)
-    slots = jnp.take(expert_to_slot, vids.reshape(Gd, -1))  # (Gd, Ag)
-    Ag = Ng * k * tp
-    group_of = jnp.repeat(jnp.arange(Gd, dtype=jnp.int32), Ag)
-    keyed = (group_of * Ev + slots.reshape(-1)).astype(jnp.int32)
-    pos, _ = _rank_in_group(keyed, Gd * Ev)
-    pos = pos.reshape(Gd, Ag)
-    tok_idx = jnp.tile(
-        jnp.repeat(jnp.arange(Ng, dtype=jnp.int32), k * tp), (Gd, 1)
-    )
-    a_gates = jnp.repeat(gates.reshape(Gd, -1), tp, axis=1)
-
-    C = int(np.ceil(Ng * k / E * cf))
-    C = max(C, 1)
-    keep = pos < C
-    # dropped assignments scatter out of bounds (mode="drop")
-    slot_safe = jnp.where(keep, slots, Ev)
-    gidx = jnp.broadcast_to(jnp.arange(Gd, dtype=jnp.int32)[:, None], slots.shape)
-    dispatch_idx = jnp.full((Gd, Ev, C), Ng, dtype=jnp.int32)  # Ng → pad row
-    dispatch_idx = dispatch_idx.at[gidx, slot_safe, pos].set(
-        tok_idx, mode="drop"
-    )
-    dispatch_gate = jnp.zeros((Gd, Ev, C), dtype=jnp.float32)
-    dispatch_gate = dispatch_gate.at[gidx, slot_safe, pos].set(
-        a_gates, mode="drop"
-    )
-    b, m = policy.batch, policy.model_axis
-    dispatch_idx = policy.constrain(dispatch_idx, b, m, None)
-    dispatch_gate = policy.constrain(dispatch_gate, b, m, None)
-
-    # ---- expert FFN over (Gd, E_v, C, D) buffers: data × expert sharded ----
-    x_pad = jnp.concatenate(
-        [xg, jnp.zeros((Gd, 1, D), xg.dtype)], axis=1
-    )
-    flat_idx = dispatch_idx.reshape(Gd, Ev * C)
-    x_e = jnp.take_along_axis(
-        x_pad, flat_idx[:, :, None], axis=1
-    ).reshape(Gd, Ev, C, D)
-    x_e = policy.constrain(x_e, b, m, None, None)
-    if backend == "pallas":
-        y_e = _expert_ffn_pallas(
-            x_e, p["w_gate"], p["w_up"], p["w_down"],
-            block_c=config.pallas_block_c, block_f=config.pallas_block_f,
+        return y, MoEAux(
+            expert_counts=router.expert_counts,
+            aux_loss=router.aux_loss,
+            dropped=jnp.asarray(0.0, jnp.float32),
         )
-    else:
-        h_gate = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])
-        h_up = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
-        h = jax.nn.silu(h_gate) * h_up
-        h = policy.constrain(h, b, m, None, None)
-        y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
-    y_e = y_e * dispatch_gate[..., None].astype(y_e.dtype)
-    y_e = policy.constrain(y_e, b, m, None, None)
 
-    # ---- combine: per-group scatter-add back to tokens ----
-    # batched scatter: the group dim must be a *batching* dimension (vmap),
-    # not an explicit index array — GSPMD shards batched scatters over the
-    # batch axis but falls back to replicate + global all-reduce for the
-    # index-array form (measured: 2×6.4 GB/layer ARs)
-    y = jax.vmap(
-        lambda idx_g, upd_g: jnp.zeros((Ng + 1, D), y_e.dtype)
-        .at[idx_g]
-        .add(upd_g, mode="drop")
-    )(flat_idx, y_e.reshape(Gd, -1, D))
-    y = policy.constrain(y, b, m if seq_sharded_out else None, None)
-    y = y[:, :Ng].reshape(B, S, D)
-    if seq_sharded_out:
-        # land sequence-sharded: the combine's cross-model sum becomes a
-        # reduce-scatter instead of all-reduce-then-slice
-        y = policy.act_seq_sharded(y)
-    else:
-        y = policy.act_bsd(y)
-
-    dropped = 1.0 - jnp.sum(keep) / (Gd * Ag)
-    aux = {
-        "expert_counts": expert_counts,
-        "aux_loss": aux_loss,
-        "dropped": dropped,
-    }
-    return y, aux
+    plan = build_dispatch(
+        router, expert_to_slot, config, policy, capacity_factor=cf
+    )
+    y_e = expert_compute(xg, plan, p, config, policy, backend=backend)
+    y = combine(y_e, plan, (B, S, D), policy, seq_sharded_out=seq_sharded_out)
+    return y, MoEAux(
+        expert_counts=router.expert_counts,
+        aux_loss=router.aux_loss,
+        dropped=plan.dropped,
+    )
 
 
 def moe_layer_dense_ref(x, p, config: ModelConfig):
@@ -398,10 +221,8 @@ def moe_layer_dense_ref(x, p, config: ModelConfig):
     dispatch path (with generous capacity the two must agree).
     """
     B, S, D = x.shape
-    k = config.experts_per_token
-    xf = x.reshape(-1, D)
-    logits = jnp.einsum("nd,de->ne", xf, p["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, ids = jax.lax.top_k(probs, k)
-    gates = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
-    return _dense_mix(xf, p, gates, ids, config).reshape(B, S, D)
+    xg = x.reshape(1, B * S, D)
+    policy = host_policy()
+    router = route(xg, p["router"], config, policy, backend="einsum")
+    table = identity_placement(config, 1)[0]
+    return dense_mix(xg, p, router, table, config).reshape(B, S, D)

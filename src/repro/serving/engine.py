@@ -270,10 +270,11 @@ class ServingEngine:
                    key=jax.random.PRNGKey(self.step_count))
         )
 
-        # GEM Step-1: per-layer expert counts from the router
+        # GEM Step-1: per-layer expert counts from the staged dispatch
+        # plane's MoEAux struct (scan-stacked RouterOutput.expert_counts)
         sim_latency = self.ecfg.other_time_per_step
         if moe_aux is not None and self.planner is not None:
-            counts = np.asarray(moe_aux["expert_counts"])  # (L, E)
+            counts = np.asarray(moe_aux.expert_counts)  # (L, E)
             for layer in range(self.config.num_layers):
                 virt = np.repeat(counts[layer], self.config.expert_tp)
                 self.planner.observe_step(layer, virt)

@@ -104,6 +104,29 @@ class ShardingPolicy:
             return None
         return NamedSharding(self.mesh, P(*parts))
 
+    # ---- per-shard kernel dispatch (shard_map) ----------------------------
+    def moe_shard_spec(self, Gd: int, Ev: int) -> tuple:
+        """(data_spec, expert_spec) for the shard_map'd MoE kernels.
+
+        ``data_spec`` shards the leading dispatch-group dim of the
+        (Gd, E_v, C, D) expert buffers / (Gd, Ng, E) router logits over the
+        batch axes — ``None`` (replicate) when the batch collapsed to a
+        single group (B didn't divide the data extent) or there are no batch
+        axes (replicated-activation decode). ``expert_spec`` shards E_v over
+        the model axis — ``None`` when E_v doesn't divide the model extent,
+        in which case every device redundantly computes all experts (the
+        caller warns once; correct, just unsharded).
+        """
+        if self.mesh is None:
+            return None, None
+        data_spec = (
+            self.batch if (Gd > 1 and Gd == self.data_axis_size) else None
+        )
+        expert_spec = (
+            self.model_axis if Ev % self.model_axis_size == 0 else None
+        )
+        return data_spec, expert_spec
+
     # ---- activation constraints -------------------------------------------
     def constrain(self, x, *parts):
         """with_sharding_constraint when a mesh is present, no-op otherwise."""

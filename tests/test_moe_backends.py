@@ -162,30 +162,72 @@ def test_pallas_capacity_staircase_padding(setup):
     assert float(aux["dropped"]) == float(aux_ref["dropped"])
 
 
-def test_mesh_falls_back_to_einsum():
-    """Under a real mesh the pallas backend downgrades (shard_map dispatch
-    is a ROADMAP follow-on) with a one-time warning."""
+def test_mesh_keeps_pallas():
+    """Under a real mesh the pallas backend stays pallas — the per-shard
+    shard_map dispatch landed; no einsum downgrade, no warning."""
     from jax.sharding import Mesh
-    from repro.models import moe as moe_mod
     from repro.sharding.policy import ShardingPolicy
 
     cfg = get_smoke_config("mixtral-8x7b")
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     policy = ShardingPolicy(mesh=mesh)
-    moe_mod._WARNED.discard(("pallas_mesh",))
-    with pytest.warns(RuntimeWarning, match="shard_map"):
-        assert resolve_moe_backend("pallas", cfg, policy) == "einsum"
-    # second resolve is silent (one-time warning)
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert resolve_moe_backend("pallas", cfg, policy) == "einsum"
+        assert resolve_moe_backend("pallas", cfg, policy) == "pallas"
+
+
+def test_pallas_runs_under_mesh():
+    """moe_layer with backend='pallas' executes the shard_map kernel path
+    under a (1, 1) host mesh and matches einsum."""
+    from jax.sharding import Mesh
+    from repro.sharding.policy import ShardingPolicy
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), capacity_factor=8.0
+    )
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    policy = ShardingPolicy(mesh=mesh)
+    params, _ = init_moe(
+        jax.random.PRNGKey(0), cfg, num_layers=1, dtype=jnp.float32,
+        policy=policy,
+    )
+    lp = jax.tree.map(lambda t: t[0], params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    table = identity_placement(cfg, 1)[0]
+    with mesh:
+        y_ref, aux_ref = moe_layer(x, lp, table, cfg, policy, backend="einsum")
+        y, aux = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(aux["expert_counts"]), np.asarray(aux_ref["expert_counts"])
+    )
+
+
+def test_pallas_gradients_match_einsum(setup):
+    """The pallas kernels are differentiable (custom_vjp with reference-math
+    backward): grads of a scalar loss through moe_layer match einsum."""
+    cfg, policy, lp, x = setup
+    table = identity_placement(cfg, 1)[0]
+
+    def loss(params, backend):
+        y, aux = moe_layer(x, params, table, cfg, policy, backend=backend)
+        return jnp.sum(y * y) + aux["aux_loss"]
+
+    g_ref = jax.grad(lambda p: loss(p, "einsum"))(lp)
+    g = jax.grad(lambda p: loss(p, "pallas"))(lp)
+    for name in ("router", "w_gate", "w_up", "w_down"):
+        np.testing.assert_allclose(
+            np.asarray(g[name]), np.asarray(g_ref[name]),
+            rtol=2e-4, atol=2e-4, err_msg=name,
+        )
 
 
 def test_gd_collapse_warns_once():
     """B % data_axis_size != 0 collapses grouping with a one-time warning
     naming the shapes."""
     from jax.sharding import Mesh
-    from repro.models import moe as moe_mod
     from repro.sharding.policy import ShardingPolicy
 
     cfg = dataclasses.replace(
@@ -207,7 +249,7 @@ def test_gd_collapse_warns_once():
             return 2
 
     policy2 = TwoWide(mesh=mesh)
-    moe_mod._WARNED.discard(("gd_collapse", 3, 2))
+    # (_WARNED starts empty each test: autouse fixture in conftest.py)
     with pytest.warns(RuntimeWarning, match=r"B=3.*Gd=2"):
         moe_layer(x, lp, identity_placement(cfg, 1)[0], cfg, policy2)
     with warnings.catch_warnings():

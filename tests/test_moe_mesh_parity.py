@@ -1,0 +1,191 @@
+"""Mesh parity: einsum vs per-shard shard_map pallas on a multi-device mesh.
+
+These tests need a forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m pytest tests/test_moe_mesh_parity.py
+
+(CI runs them as a dedicated job.) In the ordinary single-device tier-1 run
+they skip — the device count is locked at first JAX init, so it cannot be
+forced from inside the suite.
+
+What they pin down: with a real (data, model) mesh present,
+``resolve_moe_backend("pallas", …)`` no longer downgrades to einsum, and the
+fused kernels running *inside shard_map on the per-device (E_v/mm, C, D)
+shards* produce the same outputs and identical ``expert_counts`` as the
+GSPMD einsum path — including a granite-style config where E_v exceeds the
+device count (80/16 = 5 experts per device, scaled down to 20/4).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.moe import (
+    identity_placement,
+    init_moe,
+    moe_layer,
+    resolve_moe_backend,
+)
+from repro.sharding.policy import ShardingPolicy
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _mesh_policy(data: int = 2, model: int = 4):
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data, model)
+    return mesh, ShardingPolicy(mesh=mesh)
+
+
+def _setup(cfg, policy, *, B=4, S=8, seed=0):
+    params, _ = init_moe(
+        jax.random.PRNGKey(seed), cfg, num_layers=1, dtype=jnp.float32,
+        policy=policy,
+    )
+    lp = jax.tree.map(lambda t: t[0], params)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, cfg.d_model))
+    table = identity_placement(cfg, 1)[0]
+    return lp, x, table
+
+
+def test_resolve_keeps_pallas_under_mesh():
+    """Acceptance: no einsum fallback, no warning, under a real 2×4 mesh."""
+    mesh, policy = _mesh_policy()
+    cfg = get_smoke_config("mixtral-8x7b")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_moe_backend("pallas", cfg, policy) == "pallas"
+
+
+def test_mesh_parity_mixtral():
+    """einsum vs per-shard pallas agree on a 2×4 host mesh (E_v = devices)."""
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), capacity_factor=8.0
+    )
+    lp, x, table = _setup(cfg, policy)
+    with mesh:
+        y_ref, aux_ref = moe_layer(x, lp, table, cfg, policy, backend="einsum")
+        y, aux = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(aux["expert_counts"]), np.asarray(aux_ref["expert_counts"])
+    )
+    np.testing.assert_allclose(
+        float(aux["aux_loss"]), float(aux_ref["aux_loss"]), rtol=1e-5
+    )
+    assert float(aux["dropped"]) == float(aux_ref["dropped"])
+
+
+def test_mesh_parity_granite_ratio():
+    """E_v > devices: granite-style 80/16 ratio scaled to 20 virtual experts
+    on a 4-wide model axis (5 per device), expert_tp=2 partial sums."""
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("granite-moe-3b-a800m"),
+        num_experts=10, expert_tp=2, experts_per_token=4,
+        expert_d_ff=64, capacity_factor=8.0,
+    )
+    assert cfg.num_experts * cfg.expert_tp == 20  # 20/4 = 5 per device
+    lp, x, table = _setup(cfg, policy, seed=7)
+    with mesh:
+        y_ref, aux_ref = moe_layer(x, lp, table, cfg, policy, backend="einsum")
+        y, aux = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(aux["expert_counts"]), np.asarray(aux_ref["expert_counts"])
+    )
+
+
+def test_mesh_parity_indivisible_experts_replicates():
+    """E_v % model-axis ≠ 0 stays correct (expert dim replicated — every
+    backend pays it) and warns once on the first call, whatever the
+    backend."""
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("granite-moe-3b-a800m"),
+        num_experts=6, experts_per_token=2, capacity_factor=8.0,
+    )
+    assert (cfg.num_experts * cfg.expert_tp) % 4 != 0
+    lp, x, table = _setup(cfg, policy, seed=3)
+    with mesh:
+        with pytest.warns(RuntimeWarning, match="replicates the expert dim"):
+            y_ref, _ = moe_layer(x, lp, table, cfg, policy, backend="einsum")
+        # one-time: the pallas call reuses the key silently
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            y, _ = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_mesh_gradients_match_einsum():
+    """Training viability on the mesh: grads through the shard_map'd
+    kernels (custom_vjp reference backward) match the einsum path."""
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), capacity_factor=8.0
+    )
+    lp, x, table = _setup(cfg, policy)
+
+    def loss(params, backend):
+        y, aux = moe_layer(x, params, table, cfg, policy, backend=backend)
+        return jnp.sum(y * y) + aux["aux_loss"]
+
+    with mesh:
+        g_ref = jax.grad(lambda p: loss(p, "einsum"))(lp)
+        g = jax.grad(lambda p: loss(p, "pallas"))(lp)
+    for name in ("router", "w_gate", "w_up", "w_down"):
+        np.testing.assert_allclose(
+            np.asarray(g[name]), np.asarray(g_ref[name]),
+            rtol=2e-4, atol=2e-4, err_msg=name,
+        )
+
+
+def test_mesh_parity_under_placement():
+    """The shard_map path stays placement-invariant on the mesh — GEM's
+    expert swap is a pure permutation of the data plane."""
+    from repro.core import Placement
+    from repro.models.moe import apply_placement
+
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), capacity_factor=8.0
+    )
+    lp, x, table = _setup(cfg, policy)
+    Ev = cfg.num_experts * cfg.expert_tp
+    rng = np.random.default_rng(23)
+    e2d = rng.permutation(np.repeat(np.arange(4), -(-Ev // 4))[:Ev]).astype(
+        np.int32
+    )
+    placement = Placement(e2d, 4)
+    s2e = jnp.asarray(placement.slot_to_expert()[None])
+    lp_perm = jax.tree.map(
+        lambda t: t[0],
+        apply_placement(jax.tree.map(lambda t: t[None], lp), s2e),
+    )
+    lp_perm["router"] = lp["router"]
+    e2s = jnp.asarray(placement.expert_to_slot())
+    with mesh:
+        y0, aux0 = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+        y1, aux1 = moe_layer(x, lp_perm, e2s, cfg, policy, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(y0), np.asarray(y1), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(aux0["expert_counts"]), np.asarray(aux1["expert_counts"])
+    )
