@@ -4,6 +4,11 @@ trace collection, placement search and in-deployment expert swap.
 
     PYTHONPATH=src python examples/serve_moe.py [--policy gem|eplb|linear]
                                                 [--requests 24] [--arch ...]
+
+``--online`` switches the engine to the online adaptation plane (drift-
+triggered replans, budgeted partial expert migration); ``--slowdown-at N``
+then injects a mid-run power cap on the fastest device at engine step N so
+the variability-drift detector has something to catch.
 """
 import argparse
 import dataclasses
@@ -37,6 +42,11 @@ def main():
                     choices=("high", "moderate", "low"))
     ap.add_argument("--moe-backend", default="einsum",
                     choices=("einsum", "pallas", "dense_ref"))
+    ap.add_argument("--online", action="store_true",
+                    help="drift-triggered replans + budgeted migration")
+    ap.add_argument("--slowdown-at", type=int, default=0,
+                    help="(online) inject a 2x power cap on the fastest "
+                         "device at this engine step (0 = never)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -45,13 +55,17 @@ def main():
     policy = host_policy()
     params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
 
-    # emulated 4-device fleet + Step-2 profile
-    fleet = DeviceFleet.from_speeds(
-        setup_speeds(args.variability, 4), tile=8, tile_time=40e-6
-    )
-    profile = profile_fleet(
-        simulator_measure_fn(fleet), 4, max_tokens=512, tile=8, repeats=5
-    ).profile
+    # emulated 4-device fleet + Step-2 profile (tile=1 so the smoke model's
+    # small per-step counts still differentiate placements)
+    speeds = setup_speeds(args.variability, 4)
+
+    def fleet_profile(sp):
+        fleet = DeviceFleet.from_speeds(sp, tile=1, tile_time=40e-6)
+        return profile_fleet(
+            simulator_measure_fn(fleet), 4, max_tokens=512, tile=1, repeats=5
+        ).profile
+
+    profile = fleet_profile(speeds)
 
     eng = ServingEngine(
         params, cfg, policy,
@@ -61,6 +75,7 @@ def main():
             placement_policy=args.policy,
             other_time_per_step=2e-4,
             moe_backend=args.moe_backend,
+            online=args.online,
         ),
         profile=profile, num_devices=4,
     )
@@ -71,14 +86,36 @@ def main():
         eng.submit(prompt, max_new_tokens=args.max_new_tokens)
 
     t0 = time.perf_counter()
-    done = eng.run()
+    if args.online and args.slowdown_at > 0:
+        slow = speeds.copy()
+        slow[int(np.argmax(slow))] /= 2.0
+        slow_profile = fleet_profile(slow)
+        steps = 0
+        while eng.scheduler.has_work() and steps < 10_000:
+            if steps == args.slowdown_at:
+                eng.set_true_profile(slow_profile)
+                print(f"[step {steps}] injected 2x slowdown on device "
+                      f"{int(np.argmax(speeds))}")
+            eng.step()
+            steps += 1
+        done = eng.finished
+    else:
+        done = eng.run()
     wall = time.perf_counter() - t0
     report = eng.latency_report()
     print(f"policy={args.policy} variability={args.variability} "
-          f"moe_backend={args.moe_backend}")
+          f"moe_backend={args.moe_backend} online={args.online}")
     print(f"served {len(done)} requests in {eng.step_count} engine steps "
           f"({wall:.1f}s wall on this host)")
     print(f"placement re-plan applied: {eng.placement_applied}")
+    if eng.controller is not None:
+        for r in eng.controller.replans:
+            print(f"  replan @step {r['step']}: {r['reason']} "
+                  f"moves={r['moves']} applied={r['applied']}")
+        print(f"  migration charged: "
+              f"{eng.controller.total_migration_cost*1e3:.3f} ms over "
+              f"{eng.controller.total_moves} expert moves "
+              f"(max {eng.controller.max_moves_in_step}/step)")
     print("simulated fleet latency (the paper's figure of merit):")
     for k in ("mean_tpot", "p90_tpot", "p99_tpot", "mean_e2e"):
         if k in report:

@@ -5,6 +5,13 @@ top-8 [hf:ibm-granite/granite-3.0-*-base family].
 
 GEM applies: 40 routed experts per layer. expert_tp=2 → 80 virtual experts,
 exactly 5 per device on the 16-wide model axis (see models/moe.py).
+
+Pallas tiles come from the ``roofline.py --sweep-blocks`` frontier
+(``results/pallas_autotune.json``): block_c=1024 / block_f=128 minimises the
+roofline time bound for the train/prefill per-shard shapes (granite's tiny
+F_v=256 makes the fp32-accumulator write dominate — the bigger row block
+amortises it); decode's tiny capacities clamp block_c down to
+``round_up(C, 8)`` inside the kernel, matching the sweep's decode optimum.
 """
 from .base import ModelConfig
 
@@ -22,6 +29,8 @@ CONFIG = ModelConfig(
     expert_d_ff=512,
     expert_tp=2,
     tie_embeddings=True,
+    pallas_block_c=1024,
+    pallas_block_f=128,
 )
 
 

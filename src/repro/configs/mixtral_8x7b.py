@@ -6,6 +6,12 @@
 
 expert_tp=2 → 16 virtual experts, exactly 1 per device on the 16-wide model
 axis (EP=8 × expert-TP=2, expressed in a single mesh axis).
+
+Pallas tiles come from the ``roofline.py --sweep-blocks`` frontier
+(``results/pallas_autotune.json``): block_c=256 / block_f=128 is the
+compute-bound optimum for the train/prefill per-shard shapes; decode's tiny
+capacities clamp block_c down to ``round_up(C, 8)`` inside the kernel, which
+is exactly the sweep's decode optimum, so one config serves every cell.
 """
 from .base import ModelConfig
 
@@ -24,6 +30,8 @@ CONFIG = ModelConfig(
     expert_tp=2,
     sliding_window=4096,
     rope_theta=1_000_000.0,
+    pallas_block_c=256,
+    pallas_block_f=128,
 )
 
 

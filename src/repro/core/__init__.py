@@ -21,6 +21,7 @@ from .eplb import PeriodicEPLB, eplb_placement, linear_placement
 from .gem import GEMPlan, GEMPlanner
 from .latency_model import (
     DeviceFleet,
+    MigrationCostModel,
     StaircaseLatencyModel,
     dense_grid,
     tile_boundary_grid,
@@ -32,7 +33,13 @@ from .profiling import (
     profiling_cost_seconds,
     simulator_measure_fn,
 )
-from .score import IncrementalScorer, per_step_latency, score
+from .score import (
+    IncrementalScorer,
+    migration_net_benefit,
+    per_step_latency,
+    score,
+    step_cost_matrix,
+)
 from .search import SearchResult, gem_place, initial_mapping, refine
 from .simulate import SimulationResult, latency_reduction, simulate_serving
 from .trace import TraceCollector
@@ -58,8 +65,10 @@ __all__ = [
     "profiling_cost_seconds", "simulator_measure_fn",
     "StaircaseLatencyModel", "DeviceFleet", "tile_boundary_grid", "dense_grid",
     # step 3
-    "IncrementalScorer", "score", "per_step_latency",
+    "IncrementalScorer", "score", "per_step_latency", "step_cost_matrix",
     "SearchResult", "gem_place", "initial_mapping", "refine",
+    # online adaptation hooks
+    "MigrationCostModel", "migration_net_benefit",
     # step 4 / orchestration
     "GEMPlan", "GEMPlanner",
     # baselines

@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "StaircaseLatencyModel",
     "DeviceFleet",
+    "MigrationCostModel",
     "tile_boundary_grid",
     "dense_grid",
 ]
@@ -111,6 +112,43 @@ class DeviceFleet:
     def latency_matrix(self, token_grid: np.ndarray) -> np.ndarray:
         """(G, S) noiseless latencies over a token grid."""
         return np.stack([m.latency(token_grid) for m in self.models])
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationCostModel:
+    """Prices an in-deployment expert-weight migration (online plane).
+
+    Moving one expert means shipping its stacked FFN weights
+    (w_gate + w_up + w_down rows, ``expert_bytes`` total) over the
+    interconnect; a batch of ``n`` moves applied between two decode steps
+    costs
+
+        cost(n) = base_overhead + n * expert_bytes / bandwidth
+
+    and is *charged to that step's latency* by the serving engine / replay
+    simulator, so migration is never free. ``base_overhead`` covers the
+    collective launch + router-table swap, paid once per non-empty batch.
+    """
+
+    expert_bytes: float  # bytes to move one (virtual) expert's weights
+    bandwidth: float = 50e9  # interconnect bytes/s (NVLink-class default)
+    base_overhead: float = 20e-6  # per-batch launch overhead (s)
+
+    def cost(self, num_moves: int) -> float:
+        if num_moves <= 0:
+            return 0.0
+        return self.base_overhead + num_moves * self.expert_bytes / self.bandwidth
+
+    @staticmethod
+    def for_expert_dims(d_model: int, expert_d_ff: int, *,
+                        bytes_per_param: int = 2,
+                        bandwidth: float = 50e9,
+                        base_overhead: float = 20e-6) -> "MigrationCostModel":
+        """Cost model from expert dims: 3 D·F matrices (gate/up/down)."""
+        return MigrationCostModel(
+            expert_bytes=float(3 * d_model * expert_d_ff * bytes_per_param),
+            bandwidth=bandwidth, base_overhead=base_overhead,
+        )
 
 
 def tile_boundary_grid(

@@ -17,7 +17,13 @@ import numpy as np
 
 from .types import ExpertTrace, Placement, VariabilityProfile
 
-__all__ = ["score", "per_step_latency", "IncrementalScorer"]
+__all__ = [
+    "score",
+    "per_step_latency",
+    "step_cost_matrix",
+    "migration_net_benefit",
+    "IncrementalScorer",
+]
 
 
 def per_step_latency(
@@ -34,6 +40,52 @@ def score(
 ) -> float:
     """S(M): summed straggler latency over the trace (Eq. 1)."""
     return float(per_step_latency(trace, profile, placement).sum())
+
+
+def step_cost_matrix(
+    counts: np.ndarray,
+    profile: VariabilityProfile,
+    placements: list[Placement],
+) -> np.ndarray:
+    """One engine step's (L, G) per-layer per-device MoE latencies.
+
+    ``counts`` (L, E): per-layer per-expert token counts of a single step.
+    The straggler step latency is ``mat.max(axis=1).sum()``; the per-device
+    column sums feed the online plane's variability-drift detector (observed
+    vs predicted device time under the same placement).
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    L = counts.shape[0]
+    if L != len(placements):
+        raise ValueError("need one placement per MoE layer")
+    G = profile.num_devices
+    tokens = np.empty((L, G), dtype=np.float64)
+    for layer, placement in enumerate(placements):
+        tokens[layer] = np.bincount(
+            placement.expert_to_device, weights=counts[layer], minlength=G
+        )
+    return profile.cost_all(tokens)
+
+
+def migration_net_benefit(
+    current_score: float,
+    target_score: float,
+    window_steps: int,
+    horizon_steps: int,
+    migration_cost: float,
+) -> float:
+    """Expected latency saved (s) by migrating, net of the migration cost.
+
+    ``current_score``/``target_score`` are Eq.-1 scores of the two placements
+    over the same ``window_steps``-step trace; the per-step saving is assumed
+    to persist for ``horizon_steps`` future steps. Positive ⇒ the migration
+    pays for itself — the online controller's go/no-go hook, so a drift
+    replan whose improvement can't amortise the weight traffic is skipped.
+    """
+    if window_steps <= 0:
+        raise ValueError("window_steps must be positive")
+    per_step_gain = (current_score - target_score) / window_steps
+    return per_step_gain * horizon_steps - migration_cost
 
 
 class IncrementalScorer:

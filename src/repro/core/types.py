@@ -97,6 +97,51 @@ class Placement:
         e2d[e_a], e2d[e_b] = e2d[e_b], e2d[e_a]
         return Placement(e2d, self.num_devices)
 
+    # -- plan diffing (online adaptation plane) ------------------------------
+    @staticmethod
+    def slot_relative_permutation(
+        cur_s2e: np.ndarray, tgt_s2e: np.ndarray
+    ) -> np.ndarray:
+        """(S,) ``rel`` between two raw slot→expert layouts: the row ending
+        up in slot ``s`` currently lives in slot ``rel[s]``.
+
+        Shared by :meth:`relative_slot_permutation` (canonical placements)
+        and :func:`repro.online.migration.plan_migration` (live *physical*
+        layouts, which mid-migration are not canonical)."""
+        cur_s2e = np.asarray(cur_s2e, dtype=np.int32)
+        tgt_s2e = np.asarray(tgt_s2e, dtype=np.int32)
+        if cur_s2e.shape != tgt_s2e.shape:
+            raise ValueError("layouts must cover the same slots")
+        cur_e2s = np.empty_like(cur_s2e)
+        cur_e2s[cur_s2e] = np.arange(len(cur_s2e), dtype=np.int32)
+        # slot s must hold expert tgt_s2e[s], which currently sits in slot
+        # cur_e2s[that expert]
+        return cur_e2s[tgt_s2e]
+
+    def relative_slot_permutation(self, target: "Placement") -> np.ndarray:
+        """(E,) ``rel`` such that permuting the *current* physical weight rows
+        with ``rel`` realises ``target``: the row ending up in slot ``s``
+        currently lives in slot ``rel[s]``.
+
+        This is the in-deployment migration primitive — ``rel`` is what an
+        incremental planner decomposes into budgeted swap batches
+        (:mod:`repro.online.migration`).
+        """
+        if target.num_experts != self.num_experts:
+            raise ValueError("placements must cover the same experts")
+        return Placement.slot_relative_permutation(
+            self.slot_to_expert(), target.slot_to_expert()
+        )
+
+    def moved_slots(self, target: "Placement") -> np.ndarray:
+        """Slot ids whose resident expert changes going to ``target``.
+
+        ``len(moved_slots)`` is the number of expert-weight rows a migration
+        must rewrite — the quantity the migration cost model prices.
+        """
+        rel = self.relative_slot_permutation(target)
+        return np.nonzero(rel != np.arange(len(rel)))[0].astype(np.int32)
+
     def to_json(self) -> str:
         return json.dumps(
             {

@@ -57,6 +57,7 @@ def _shard_map(f, mesh, in_specs, out_specs):
 def moe_ffn_sharded(
     x_e, w_gate, w_up, w_down, *, mesh, data_spec, expert_spec,
     block_c: int = 128, block_f: int = 256, interpret: bool = False,
+    pad_expert_to: int | None = None,
 ):
     """(Gd, E_v, C, D) expert buffers → (Gd, E_v, C, D) FFN outputs.
 
@@ -65,6 +66,13 @@ def moe_ffn_sharded(
     back off; that rounding is the §3.3.2 tile staircase the paper profiles.
     F pads with zero columns/rows, exact for silu(x@Wg)·(x@Wu)@Wd.
 
+    ``pad_expert_to`` (from :meth:`ShardingPolicy.moe_expert_pad`) handles
+    E_v that doesn't divide the model axis: the expert dim of the buffers
+    *and* weights pads with zero rows — dead slots whose FFN output is
+    exactly zero — up to the axis multiple, ``expert_spec`` shards the
+    padded dim, and the dead rows are sliced back off. Every device then
+    computes only its shard instead of redundantly holding all experts.
+
     With a mesh, the kernel runs inside ``shard_map``: each device sees its
     local (Gd/data, E_v/model, C_pad, D) buffer shard and (E_v/model, D, F)
     weight shards and loops its (static, usually 1) local data groups.
@@ -72,6 +80,14 @@ def moe_ffn_sharded(
     """
     Gd, Ev, C, D = x_e.shape
     F = w_gate.shape[-1]
+    Ev_real = Ev
+    if pad_expert_to is not None and pad_expert_to > Ev:
+        ep = pad_expert_to - Ev
+        x_e = jnp.pad(x_e, ((0, 0), (0, ep), (0, 0), (0, 0)))
+        w_gate = jnp.pad(w_gate, ((0, ep), (0, 0), (0, 0)))
+        w_up = jnp.pad(w_up, ((0, ep), (0, 0), (0, 0)))
+        w_down = jnp.pad(w_down, ((0, ep), (0, 0), (0, 0)))
+        Ev = pad_expert_to
     bc = min(block_c, _round_up(C, 8))
     Cp = _round_up(C, bc)
     bf = min(block_f, _round_up(F, 128))
@@ -139,7 +155,7 @@ def moe_ffn_sharded(
 
     call.defvjp(call_fwd, call_bwd)
     y = call(x_e, w_gate, w_up, w_down)
-    return y[:, :, :C, :]
+    return y[:, :Ev_real, :C, :]
 
 
 def topk_router_sharded(

@@ -297,10 +297,13 @@ def expert_compute(
         x_pad, plan.flat_idx[:, :, None], axis=1
     ).reshape(Gd, Ev, plan.capacity, D)
     x_e = policy.constrain(x_e, b, expert_spec, None, None)
-    if policy.mesh is not None and expert_spec is None \
-            and policy.model_axis_size > 1:
-        # every backend pays this replication, not just pallas: the expert
-        # buffers/FFN stay unsharded on the model axis
+    indivisible = (
+        policy.mesh is not None and expert_spec is None
+        and policy.model_axis_size > 1
+    )
+    if indivisible and backend != "pallas":
+        # the GSPMD einsum path replicates the expert dim; the pallas path
+        # below pads it to the axis with dead slots and shards instead
         _warn_once(
             ("moe_expert_replicated", Ev, policy.model_axis_size),
             f"moe_layer: E_v={Ev} does not divide the model-axis size "
@@ -308,11 +311,27 @@ def expert_compute(
             "expert dim across the model axis (correct but unsharded)",
         )
     if backend == "pallas":
+        # the padded spec applies only inside the kernel's shard_map; the
+        # surrounding constraints stay on the real (indivisible) E_v
+        pad_to, kernel_expert_spec = None, expert_spec
+        if indivisible:
+            Ev_pad, pad_spec = policy.moe_expert_pad(Ev)
+            if pad_spec is not None:
+                pad_to, kernel_expert_spec = Ev_pad, pad_spec
+                _warn_once(
+                    ("moe_expert_padded", Ev, policy.model_axis_size),
+                    f"moe_layer: E_v={Ev} does not divide the model-axis "
+                    f"size {policy.model_axis_size}; padding the expert dim "
+                    f"to {Ev_pad} with dead slots so the per-shard kernels "
+                    "stay sharded (pad rows compute zeros and are sliced "
+                    "off)",
+                )
         y_e = moe_ffn_sharded(
             x_e, p["w_gate"], p["w_up"], p["w_down"],
-            mesh=policy.mesh, data_spec=data_spec, expert_spec=expert_spec,
+            mesh=policy.mesh, data_spec=data_spec,
+            expert_spec=kernel_expert_spec,
             block_c=config.pallas_block_c, block_f=config.pallas_block_f,
-            interpret=auto_interpret(),
+            interpret=auto_interpret(), pad_expert_to=pad_to,
         )
     else:
         h_gate = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])

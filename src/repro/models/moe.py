@@ -68,6 +68,7 @@ __all__ = [
     "init_moe",
     "moe_layer",
     "apply_placement",
+    "apply_layer_permutation",
     "identity_placement",
     "moe_layer_dense_ref",
     "resolve_moe_backend",
@@ -139,6 +140,24 @@ def apply_placement(moe_params, slot_to_expert):
     out = dict(moe_params)
     for name in ("w_gate", "w_up", "w_down"):
         out[name] = permute(moe_params[name])
+    return out
+
+
+def apply_layer_permutation(moe_params, layer: int, perm):
+    """Permute ONE layer's stacked expert rows: row ``s`` ← old row
+    ``perm[s]`` (online plane's partial placement application, applied
+    between decode steps).
+
+    Unlike :func:`apply_placement` this touches a single layer and an
+    arbitrary (typically near-identity) permutation — the data-plane half of
+    a budgeted migration batch; the caller swaps the matching router remap
+    table row in the same engine step so weights and routing never disagree.
+    """
+    perm = jnp.asarray(perm, dtype=jnp.int32)
+    out = dict(moe_params)
+    for name in ("w_gate", "w_up", "w_down"):
+        w = moe_params[name]
+        out[name] = w.at[layer].set(jnp.take(w[layer], perm, axis=0))
     return out
 
 

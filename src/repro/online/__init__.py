@@ -1,0 +1,54 @@
+"""Online adaptation plane: drift → plan-diff → budgeted-swap pipeline.
+
+GEM's Step-1 trace and Step-2 profile go stale in production — the task mix
+shifts and devices slow down mid-run — so this subsystem closes the loop
+around the placement instead of planning once:
+
+  * :mod:`repro.online.drift` — EWMA load-distribution divergence (KL/χ²)
+    against the planning-time trace, and per-device observed-vs-profiled
+    latency ratios that both detect a drifting device and repair its curve.
+  * :mod:`repro.online.migration` — diffs the live placement against a
+    fresh plan, decomposes the delta's slot permutation into two-slot swaps
+    (cycle decomposition), and packs them into per-step batches bounded by
+    ``max_moves_per_step``, each priced by the interconnect cost model.
+  * :mod:`repro.online.controller` — the per-step control loop gluing the
+    two to the :class:`~repro.core.gem.GEMPlanner`: warm-up plan when the
+    collectors fill, drift-triggered (never timer-triggered) replans after
+    that, a net-benefit go/no-go per migration, and one swap batch emitted
+    per engine step for the data plane to mirror.
+  * :mod:`repro.online.replay` — the closed-loop shift-scenario harness the
+    ``fig20_online`` benchmark and regression tests replay traces through.
+
+The serving engine's ``online`` mode drives the same controller against the
+real JAX data plane, applying each batch as a partial per-layer expert-
+weight permutation between decode steps.
+"""
+from .controller import OnlineConfig, OnlineController, StepDecision
+from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
+from .migration import (
+    MigrationConfig,
+    MigrationSchedule,
+    MigrationStep,
+    SlotSwap,
+    plan_migration,
+    swap_permutation,
+)
+from .replay import ReplayResult, ShiftScenario, replay_online
+
+__all__ = [
+    "DriftConfig",
+    "LoadDriftDetector",
+    "VariabilityDriftDetector",
+    "MigrationConfig",
+    "MigrationSchedule",
+    "MigrationStep",
+    "SlotSwap",
+    "plan_migration",
+    "swap_permutation",
+    "OnlineConfig",
+    "OnlineController",
+    "StepDecision",
+    "ShiftScenario",
+    "ReplayResult",
+    "replay_online",
+]

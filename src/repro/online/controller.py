@@ -1,0 +1,350 @@
+"""Online adaptation controller: drift → plan diff → budgeted swap pipeline.
+
+:class:`OnlineController` is the control loop both the serving engine and
+the trace-replay benchmark drive, one call per engine step:
+
+    decision = controller.observe_step(counts, observed_device_latency)
+
+Each call (1) feeds the step's per-layer router counts into the
+:class:`~repro.core.gem.GEMPlanner` trace collectors and the
+:class:`~repro.online.drift.LoadDriftDetector`; (2) compares the observed
+per-device MoE time against the profile's prediction via the
+:class:`~repro.online.drift.VariabilityDriftDetector`, rescaling the
+believed profile's curves in place when a device departs them; (3) replans
+when warranted — the *first* plan once the collectors fill (warm-up), then
+drift-triggered replans, never on a step counter; (4) diffs the fresh plan
+against the live placement, prices the delta with the migration cost model,
+skips it when :func:`~repro.core.score.migration_net_benefit` says the
+improvement cannot amortise the weight traffic, and otherwise drains the
+budgeted :class:`~repro.online.migration.MigrationSchedule` one
+:class:`~repro.online.migration.MigrationStep` per call.
+
+The returned :class:`StepDecision` carries everything the data plane must
+mirror: the swap batch to apply to the stacked weights + router tables and
+the migration cost to charge to this step's latency. The controller never
+touches jax — it is host-side numpy, like the rest of the control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from ..core.eplb import eplb_placement, linear_placement
+from ..core.gem import GEMPlanner
+from ..core.latency_model import MigrationCostModel
+from ..core.score import migration_net_benefit, score, step_cost_matrix
+from ..core.search import refine
+from ..core.types import ExpertTrace, Placement, VariabilityProfile
+from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
+from .migration import MigrationConfig, MigrationStep, plan_migration
+
+__all__ = ["OnlineConfig", "StepDecision", "OnlineController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Policy + cadence of the online adaptation plane."""
+
+    policy: str = "gem"  # gem | eplb | linear (replan policy)
+    online: bool = True  # False ⇒ plan exactly once (one-shot baseline)
+    drift: DriftConfig = DriftConfig()
+    migration: MigrationConfig = MigrationConfig()
+    replan_cooldown: int = 32  # min steps between drift replans
+    payback_horizon: int = 1024  # steps a migration's gain must amortise over
+    unbudgeted_first_swap: bool = False  # True ⇒ one-shot semantics for the
+    # warm-up plan: the whole delta lands in one step (still priced),
+    # matching the pre-online engine's single apply_placement. The online
+    # mode keeps it False so *every* batch honours the budget.
+
+    def __post_init__(self):
+        if self.policy not in ("gem", "eplb", "linear"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+
+@dataclasses.dataclass
+class StepDecision:
+    """What the data plane must do after this engine step."""
+
+    replanned: bool = False
+    reason: str | None = None  # "warmup" | "load-drift" | "variability-drift"
+    migration_step: MigrationStep | None = None
+    migration_cost: float = 0.0
+    migration_skipped: bool = False  # replan happened but didn't pay back
+    profile_rescaled: bool = False
+
+
+class OnlineController:
+    """Drives drift detection, replanning, and budgeted migration."""
+
+    def __init__(
+        self,
+        planner: GEMPlanner,
+        cost_model: MigrationCostModel,
+        config: OnlineConfig = OnlineConfig(),
+        *,
+        initial_placements: list[Placement] | None = None,
+    ):
+        if planner.profile is None:
+            raise ValueError("planner must have a profile (set_profile)")
+        self.planner = planner
+        self.cost_model = cost_model
+        self.config = config
+        L, Ev, G = planner.num_layers, planner.num_experts, planner.num_devices
+        initial = (
+            list(initial_placements)
+            if initial_placements is not None
+            else [linear_placement(Ev, G) for _ in range(L)]
+        )
+        # physical slot→expert layout per layer — the ground truth the data
+        # plane mirrors; mid-migration it is NOT canonical (Placement sorts
+        # experts within a device), so Placement is derived, never authoritative
+        self.slot_layouts: list[np.ndarray] = [
+            p.slot_to_expert() for p in initial
+        ]
+        self.current_placements: list[Placement] = initial
+        self.load_detector = LoadDriftDetector(L, Ev, config.drift)
+        self.var_detector = VariabilityDriftDetector(G, config.drift)
+        self._pending: deque[MigrationStep] = deque()
+        self._pending_unbudgeted = False
+        self._step = 0
+        self._last_plan_step: int | None = None
+        self._deferred_replan_step: int | None = None  # drift fires schedule
+        # the replan instead of running it inline: load drift waits one
+        # trace window so the plan fits purely post-shift steps; variability
+        # drift waits (at most) for the cooldown — it must not be dropped,
+        # because the rescale resets the detector and it will never re-fire
+        self._deferred_reason = ""
+        self.planned = False
+        # observability
+        self.replans: list[dict] = []
+        self.total_migration_cost = 0.0
+        self.total_moves = 0
+        self.max_moves_in_step = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def profile(self) -> VariabilityProfile:
+        assert self.planner.profile is not None
+        return self.planner.profile
+
+    @property
+    def migrating(self) -> bool:
+        return bool(self._pending)
+
+    def expert_to_slot_tables(self) -> np.ndarray:
+        """(L, E_v) router remap tables matching the physical slot layouts —
+        what the data plane's router gather must use after mirroring a
+        migration batch."""
+        L = self.planner.num_layers
+        Ev = self.planner.num_experts
+        out = np.empty((L, Ev), dtype=np.int32)
+        for layer, layout in enumerate(self.slot_layouts):
+            out[layer, layout] = np.arange(Ev, dtype=np.int32)
+        return out
+
+    def predicted_device_latency(self, counts: np.ndarray) -> np.ndarray:
+        """(G,) per-device MoE time this step *should* take per the believed
+        profile, under the live placement — the drift detector's baseline."""
+        mat = step_cost_matrix(counts, self.profile, self.current_placements)
+        return mat.sum(axis=0)
+
+    # ------------------------------------------------------------------
+    def observe_step(
+        self,
+        counts: np.ndarray,
+        observed_device_latency: np.ndarray | None = None,
+    ) -> StepDecision:
+        """Feed one engine step; returns the data-plane actions to mirror.
+
+        ``counts`` (L, E_v): per-layer per-virtual-expert token counts.
+        ``observed_device_latency`` (G,), optional: measured per-device MoE
+        time of this step (wall-clock on hardware; the true-fleet simulation
+        here). ``None`` disables variability-drift detection for the step.
+        """
+        counts = np.asarray(counts)
+        decision = StepDecision()
+        for layer in range(self.planner.num_layers):
+            self.planner.observe_step(layer, counts[layer])
+
+        reason: str | None = None
+        if (
+            self.config.online
+            and self.planned
+            and observed_device_latency is not None
+            and not self.migrating
+        ):
+            predicted = self.predicted_device_latency(counts)
+            if self.var_detector.update(observed_device_latency, predicted):
+                self._rescale_profile()
+                decision.profile_rescaled = True
+                reason = "variability-drift"
+        if self.config.online and self.planned and not self.migrating:
+            if self.load_detector.update(counts) and reason is None:
+                reason = "load-drift"
+
+        self._step += 1
+
+        if self.migrating:
+            self._emit_migration_step(decision)
+            return decision
+
+        if not self.planned:
+            if self.planner.ready():
+                self._replan(decision, "warmup")
+                self._emit_migration_step(decision)
+            return decision
+
+        if reason == "variability-drift" and self._deferred_replan_step is None:
+            # the workload window is still valid — only the curves changed —
+            # so replan as soon as the cooldown allows (possibly right now).
+            # This fire cannot be dropped: the rescale above reset the
+            # detector, and with the belief repaired it never re-fires.
+            self._deferred_reason = reason
+            self._deferred_replan_step = (
+                self._step
+                if self._cooldown_elapsed()
+                else self._last_plan_step + self.config.replan_cooldown
+            )
+        elif (
+            reason == "load-drift"
+            and self._deferred_replan_step is None
+            and self._cooldown_elapsed()
+        ):
+            # defer: let a clean post-shift window fill before planning on it
+            self._deferred_reason = reason
+            self._deferred_replan_step = (
+                self._step + self.planner.config.trace_length
+            )
+        if (
+            self._deferred_replan_step is not None
+            and self._step >= self._deferred_replan_step
+        ):
+            self._deferred_replan_step = None
+            self._replan(decision, self._deferred_reason)
+            self._emit_migration_step(decision)
+        return decision
+
+    # ------------------------------------------------------------------
+    def _cooldown_elapsed(self) -> bool:
+        return (
+            self._last_plan_step is None
+            or self._step - self._last_plan_step >= self.config.replan_cooldown
+        )
+
+    def _rescale_profile(self) -> None:
+        """Repair the believed profile in place: scale each drifted device's
+        latency curve by its smoothed observed/predicted ratio."""
+        ratios = self.var_detector.ratios
+        profile = self.profile
+        new_lat = profile.latencies * ratios[:, None]
+        self.planner.set_profile(
+            VariabilityProfile(
+                token_counts=profile.token_counts.copy(),
+                latencies=new_lat,
+                tile_size=profile.tile_size,
+            )
+        )
+        self.var_detector.reset()
+
+    def _plan_placements(self, window: int) -> list[Placement]:
+        Ev, G = self.planner.num_experts, self.planner.num_devices
+        if self.config.policy == "linear":
+            return [linear_placement(Ev, G) for _ in self.planner.collectors]
+        if self.config.policy == "eplb":
+            return [
+                eplb_placement(c.trace(window), G)
+                for c in self.planner.collectors
+            ]
+        # GEM, warm-started: alongside the restart search, hill-climb from
+        # the *live* placement. The warm candidate is never worse than
+        # current on the window (refine only applies improving swaps) and
+        # usually closer to it, so migrations are cheaper; pick per layer.
+        gcfg = self.planner.config
+        out: list[Placement] = []
+        for layer, collector in enumerate(self.planner.collectors):
+            trace = collector.trace(window)
+            res = self.planner.plan_layer(layer)
+            warm_p, warm_s, _ = refine(
+                self.current_placements[layer], trace, self.profile,
+                tol=gcfg.convergence_tol, max_swaps=gcfg.max_swaps,
+            )
+            out.append(warm_p if warm_s <= res.score else res.placement)
+        return out
+
+    def _replan(self, decision: StepDecision, reason: str) -> None:
+        window = self.planner.config.trace_length
+        target = self._plan_placements(window)
+        traces = [c.trace(window) for c in self.planner.collectors]
+        schedule = plan_migration(
+            self.slot_layouts, target, self.config.migration
+        )
+        first_plan = not self.planned
+        self.planned = True
+        self._last_plan_step = self._step
+        decision.replanned = True
+        decision.reason = reason
+        record = {
+            "step": self._step, "reason": reason,
+            "moves": schedule.total_moves, "applied": True,
+        }
+        if schedule.total_moves == 0:
+            self.replans.append(record)
+            self._reset_reference(traces)
+            return
+        cur_score = sum(
+            score(t, self.profile, p)
+            for t, p in zip(traces, self.current_placements)
+        )
+        tgt_score = sum(
+            score(t, self.profile, p) for t, p in zip(traces, target)
+        )
+        net = migration_net_benefit(
+            cur_score, tgt_score, window, self.config.payback_horizon,
+            schedule.total_cost(self.cost_model),
+        )
+        record["net_benefit_s"] = net
+        if net <= 0.0:
+            record["applied"] = False
+            decision.migration_skipped = True
+            self.replans.append(record)
+            self._reset_reference(traces)
+            return
+        self.replans.append(record)
+        self._pending = deque(schedule.steps)
+        self._pending_unbudgeted = (
+            first_plan and self.config.unbudgeted_first_swap
+        )
+        self._reset_reference(traces)
+
+    def _reset_reference(self, traces: list[ExpertTrace]) -> None:
+        ref = np.stack([t.counts.sum(axis=0) for t in traces])
+        self.load_detector.set_reference(ref)
+        self.var_detector.reset()
+
+    def _emit_migration_step(self, decision: StepDecision) -> None:
+        if not self._pending:
+            return
+        if self._pending_unbudgeted:
+            # one-shot semantics: the whole remaining delta lands now
+            swaps = [s for st in self._pending for s in st.swaps]
+            step = MigrationStep(swaps)
+            self._pending.clear()
+            self._pending_unbudgeted = False
+        else:
+            step = self._pending.popleft()
+        touched = set()
+        for sw in step.swaps:
+            layout = self.slot_layouts[sw.layer]
+            layout[[sw.slot_a, sw.slot_b]] = layout[[sw.slot_b, sw.slot_a]]
+            touched.add(sw.layer)
+        for layer in touched:
+            self.current_placements[layer] = Placement.from_slots(
+                self.slot_layouts[layer], self.planner.num_devices
+            )
+        decision.migration_step = step
+        decision.migration_cost = self.cost_model.cost(step.num_moves)
+        self.total_migration_cost += decision.migration_cost
+        self.total_moves += step.num_moves
+        self.max_moves_in_step = max(self.max_moves_in_step, step.num_moves)

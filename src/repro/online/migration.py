@@ -1,0 +1,193 @@
+"""Budgeted expert migration: from plan delta to per-step swap batches.
+
+A fresh :class:`~repro.core.gem.GEMPlan` and the live placement differ by a
+per-layer *slot permutation* (``Placement.relative_slot_permutation``).
+Swapping the whole stacked weight array at once — what the one-shot engine
+does — stalls decode for the full weight transfer. The migration planner
+instead decomposes the delta into a sequence of **two-slot swaps** and packs
+them into per-step batches bounded by ``max_moves_per_step`` expert-weight
+rewrites, so the engine applies a small batch between consecutive decode
+steps and decode latency absorbs many small hits instead of one huge one.
+
+Why swaps: every intermediate state of a swap sequence is itself a valid
+slot permutation — each expert exists in exactly one slot, every device
+still hosts E/G experts, and the router remap table can be kept exactly
+consistent with the weights at every step. The decomposition is the cycle
+decomposition of the relative permutation: a cycle (s₀ s₁ … s_{c-1}) is
+realised by the transpositions (s₀,s₁), (s₁,s₂), …, (s_{c-2},s_{c-1}) in
+order — c−1 swaps, 2 weight-row rewrites each, the minimum possible for
+that cycle.
+
+Costing: each batch is priced by :class:`~repro.core.latency_model.
+MigrationCostModel` (expert-weight bytes over the interconnect plus a fixed
+batch overhead) and the engine/replay charges that cost to the step's
+simulated latency — migration is never free, and the controller's
+``migration_net_benefit`` go/no-go uses the same model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.latency_model import MigrationCostModel
+from ..core.types import Placement
+
+__all__ = [
+    "MigrationConfig",
+    "SlotSwap",
+    "MigrationStep",
+    "MigrationSchedule",
+    "plan_migration",
+    "swap_permutation",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    """Budget + interconnect parameters of the migration plane."""
+
+    max_moves_per_step: int = 2  # expert-weight rows rewritten per step (≥2)
+    bandwidth: float = 450e9  # interconnect bytes/s (NVLink4-class)
+    base_overhead: float = 20e-6  # per-batch launch overhead (s)
+
+    def __post_init__(self):
+        if self.max_moves_per_step < 2:
+            raise ValueError(
+                "max_moves_per_step must be ≥ 2 (one swap rewrites two rows)"
+            )
+
+    def cost_model(self, expert_bytes: float) -> MigrationCostModel:
+        return MigrationCostModel(
+            expert_bytes=expert_bytes, bandwidth=self.bandwidth,
+            base_overhead=self.base_overhead,
+        )
+
+    def cost_model_for_dims(
+        self, d_model: int, expert_d_ff: int, *, bytes_per_param: int = 2
+    ) -> MigrationCostModel:
+        """Cost model priced from expert dims — the one place the
+        3·D·F weight-size formula lives is ``for_expert_dims``."""
+        return MigrationCostModel.for_expert_dims(
+            d_model, expert_d_ff, bytes_per_param=bytes_per_param,
+            bandwidth=self.bandwidth, base_overhead=self.base_overhead,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSwap:
+    """Exchange the experts resident in two physical slots of one layer."""
+
+    layer: int
+    slot_a: int
+    slot_b: int
+
+
+@dataclasses.dataclass
+class MigrationStep:
+    """One engine step's worth of migration: ≤ budget weight-row rewrites."""
+
+    swaps: list[SlotSwap]
+
+    @property
+    def num_moves(self) -> int:
+        return 2 * len(self.swaps)
+
+    def swaps_by_layer(self) -> dict[int, list[tuple[int, int]]]:
+        out: dict[int, list[tuple[int, int]]] = {}
+        for s in self.swaps:
+            out.setdefault(s.layer, []).append((s.slot_a, s.slot_b))
+        return out
+
+
+@dataclasses.dataclass
+class MigrationSchedule:
+    steps: list[MigrationStep]
+
+    @property
+    def total_moves(self) -> int:
+        return sum(s.num_moves for s in self.steps)
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    def total_cost(self, cost_model: MigrationCostModel) -> float:
+        return sum(cost_model.cost(s.num_moves) for s in self.steps)
+
+
+def _cycle_swaps(rel: np.ndarray, layer: int) -> list[SlotSwap]:
+    """Transposition sequence realising one layer's relative permutation.
+
+    Order matters *within* a cycle (each transposition assumes the previous
+    ones were applied); the emitted sequence preserves that order, and the
+    packer below never reorders swaps.
+    """
+    n = len(rel)
+    seen = np.zeros(n, dtype=bool)
+    swaps: list[SlotSwap] = []
+    for start in range(n):
+        if seen[start] or rel[start] == start:
+            seen[start] = True
+            continue
+        cycle = [start]
+        seen[start] = True
+        nxt = int(rel[start])
+        while nxt != start:
+            cycle.append(nxt)
+            seen[nxt] = True
+            nxt = int(rel[nxt])
+        # (s0,s1),(s1,s2),…: after each swap, slot s_i holds its target row
+        for a, b in zip(cycle[:-1], cycle[1:]):
+            swaps.append(SlotSwap(layer, a, b))
+    return swaps
+
+
+def _as_slot_layout(p) -> np.ndarray:
+    """Physical slot→expert layout: a raw array passes through untouched; a
+    :class:`Placement` contributes its *canonical* layout (experts sorted
+    within each device). The distinction matters: mid-migration physical
+    layouts are not canonical, and a swap sequence addresses physical slots."""
+    if isinstance(p, Placement):
+        return p.slot_to_expert()
+    return np.asarray(p, dtype=np.int32)
+
+
+def plan_migration(
+    current: list,
+    target: list,
+    config: MigrationConfig = MigrationConfig(),
+) -> MigrationSchedule:
+    """Decompose the per-layer placement delta into budgeted swap batches.
+
+    ``current``/``target`` are per-layer slot layouts — either raw
+    slot→expert arrays (the live *physical* layout, which mid-migration is
+    not canonical) or :class:`Placement` objects (canonicalised). Returns a
+    schedule whose steps each rewrite at most ``config.max_moves_per_step``
+    expert-weight rows; applying every step in order transforms ``current``
+    into ``target`` exactly (bit-exact weight rows — a pure permutation).
+    An empty schedule means the layouts already agree.
+    """
+    if len(current) != len(target):
+        raise ValueError("need matching per-layer placement lists")
+    all_swaps: list[SlotSwap] = []
+    for layer, (cur, tgt) in enumerate(zip(current, target)):
+        rel = Placement.slot_relative_permutation(
+            _as_slot_layout(cur), _as_slot_layout(tgt)
+        )
+        all_swaps.extend(_cycle_swaps(rel, layer))
+    swaps_per_batch = config.max_moves_per_step // 2
+    steps = [
+        MigrationStep(all_swaps[i : i + swaps_per_batch])
+        for i in range(0, len(all_swaps), swaps_per_batch)
+    ]
+    return MigrationSchedule(steps)
+
+
+def swap_permutation(num_slots: int, swaps: list[tuple[int, int]]) -> np.ndarray:
+    """(S,) permutation ``p`` with ``new_rows = old_rows[p]`` after applying
+    ``swaps`` sequentially (the data-plane form of one layer's batch)."""
+    p = np.arange(num_slots, dtype=np.int32)
+    for a, b in swaps:
+        p[[a, b]] = p[[b, a]]
+    return p

@@ -1,0 +1,176 @@
+"""Shift-scenario trace replay: the online plane's evaluation harness.
+
+Extends :mod:`repro.core.simulate` from static placement replay to the
+*closed-loop* setting: each step's per-layer counts are (1) priced against
+the **true** fleet profile under the live placement — the true profile can
+change mid-run (an injected power cap) and may differ from what the
+controller believes — and (2) fed to an :class:`~repro.online.controller.
+OnlineController`, whose migration batches mutate the live placement and
+whose migration cost is charged to the very step that performs the swap.
+
+This is the harness behind ``benchmarks/fig20_online.py``'s two shift
+scenarios (task-mix change; mid-run device slowdown) and the regression
+tests; the serving engine runs the same controller against the real JAX
+data plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.gem import GEMPlanner
+from ..core.score import step_cost_matrix
+from ..core.types import GEMConfig, VariabilityProfile
+from .controller import OnlineConfig, OnlineController
+
+__all__ = ["ShiftScenario", "ReplayResult", "replay_online"]
+
+
+@dataclasses.dataclass
+class ShiftScenario:
+    """A serving run whose workload and/or fleet changes mid-run.
+
+    ``counts`` (T, L, E): per-step per-layer per-expert token counts (the
+    concatenation of the phases' traces). ``profiles`` maps a start step to
+    the *true* fleet profile from that step on (step 0 must be present);
+    the controller's believed profile starts as ``profiles[0]`` and only
+    changes if its variability-drift detector repairs it.
+    """
+
+    name: str
+    counts: np.ndarray
+    profiles: dict[int, VariabilityProfile]
+    other_time_per_step: float = 0.0
+
+    def __post_init__(self):
+        self.counts = np.asarray(self.counts, dtype=np.int64)
+        if self.counts.ndim != 3:
+            raise ValueError("counts must be (steps, layers, experts)")
+        if 0 not in self.profiles:
+            raise ValueError("profiles must define the step-0 true profile")
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.counts.shape[0])
+
+    def true_profile_at(self, step: int) -> VariabilityProfile:
+        start = max(s for s in self.profiles if s <= step)
+        return self.profiles[start]
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    policy: str
+    step_latencies: np.ndarray  # (T,) seconds, migration cost included
+    migration_costs: np.ndarray  # (T,) seconds, the charged component
+    moves_per_step: np.ndarray  # (T,) expert-weight rows rewritten
+    replans: list[dict]
+    total_migration_cost: float
+
+    @property
+    def total_time(self) -> float:
+        return float(self.step_latencies.sum())
+
+    @property
+    def mean_tpot(self) -> float:
+        return float(self.step_latencies.mean())
+
+    def tpot_percentile(self, q: float) -> float:
+        return float(np.quantile(self.step_latencies, q))
+
+    def e2e_latencies(
+        self,
+        output_lengths: np.ndarray,
+        arrival_steps: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Per-request e2e seconds: request ``r`` decodes for
+        ``output_lengths[r]`` steps starting at ``arrival_steps[r]``
+        (default 0 — the Fig. 15 fixed-batch accounting). Staggered arrivals
+        model a continuously loaded fleet, so a mid-run shift is felt by the
+        requests that actually live through it."""
+        T = len(self.step_latencies)
+        cum = np.concatenate([[0.0], np.cumsum(self.step_latencies)])
+        lengths = np.asarray(output_lengths, dtype=np.int64)
+        starts = (
+            np.zeros_like(lengths)
+            if arrival_steps is None
+            else np.asarray(arrival_steps, dtype=np.int64)
+        )
+        starts = np.clip(starts, 0, T - 1)
+        ends = np.clip(starts + np.maximum(lengths, 1), 1, T)
+        return cum[ends] - cum[starts]
+
+    def mean_e2e(
+        self,
+        output_lengths: np.ndarray,
+        arrival_steps: np.ndarray | None = None,
+    ) -> float:
+        return float(self.e2e_latencies(output_lengths, arrival_steps).mean())
+
+    def summary(
+        self,
+        output_lengths: np.ndarray,
+        arrival_steps: np.ndarray | None = None,
+    ) -> dict:
+        return {
+            "policy": self.policy,
+            "total_s": self.total_time,
+            "mean_e2e_s": self.mean_e2e(output_lengths, arrival_steps),
+            "mean_tpot_s": self.mean_tpot,
+            "p99_tpot_s": self.tpot_percentile(0.99),
+            "migration_s": self.total_migration_cost,
+            "max_moves_per_step": int(self.moves_per_step.max(initial=0)),
+            "replans": len(self.replans),
+        }
+
+
+def replay_online(
+    scenario: ShiftScenario,
+    believed_profile: VariabilityProfile,
+    gem_config: GEMConfig,
+    online_config: OnlineConfig,
+    *,
+    expert_bytes: float,
+) -> ReplayResult:
+    """Run one policy through a shift scenario, closed-loop.
+
+    Per step: price the step with the scenario's *true* profile under the
+    live placement, hand the counts + observed per-device times to the
+    controller, mirror its migration batch onto the live placement list, and
+    charge its migration cost to the step.
+    """
+    T, L, E = scenario.counts.shape
+    G = believed_profile.num_devices
+    planner = GEMPlanner(E, G, L, gem_config)
+    planner.set_profile(believed_profile)
+    controller = OnlineController(
+        planner,
+        online_config.migration.cost_model(expert_bytes),
+        online_config,
+    )
+    step_lat = np.zeros(T)
+    mig_cost = np.zeros(T)
+    moves = np.zeros(T, dtype=np.int64)
+    for t in range(T):
+        counts = scenario.counts[t]
+        true_profile = scenario.true_profile_at(t)
+        mat = step_cost_matrix(
+            counts, true_profile, controller.current_placements
+        )
+        observed = mat.sum(axis=0)  # (G,) per-device time, summed over layers
+        lat = float(mat.max(axis=1).sum()) + scenario.other_time_per_step
+        decision = controller.observe_step(counts, observed)
+        if decision.migration_step is not None:
+            lat += decision.migration_cost
+            mig_cost[t] = decision.migration_cost
+            moves[t] = decision.migration_step.num_moves
+        step_lat[t] = lat
+    return ReplayResult(
+        policy=online_config.policy,
+        step_latencies=step_lat,
+        migration_costs=mig_cost,
+        moves_per_step=moves,
+        replans=controller.replans,
+        total_migration_cost=controller.total_migration_cost,
+    )

@@ -14,6 +14,20 @@ fixed slot pool) and the full GEM control plane:
     (`apply_placement`) and swaps the router remap tables — the same
     in-deployment expert swap vLLM's EPLB performs.
 
+**Online mode** (``EngineConfig.online=True``) replaces the one-shot
+step-counter replan with the :mod:`repro.online` adaptation plane: an
+:class:`~repro.online.controller.OnlineController` watches the same Step-1
+counts for task-mix drift and the per-device latencies for variability
+drift, replans when either fires, and hands back budgeted migration
+batches. The engine mirrors each batch as a *partial per-layer* expert-row
+permutation (:func:`~repro.models.moe.apply_layer_permutation`) between
+decode steps — router tables swap in the same step, so weights and routing
+never disagree — and charges the batch's migration cost to that step's
+simulated latency. ``set_true_profile`` lets a harness inject a mid-run
+fleet change (e.g. a power cap) the believed profile doesn't know about;
+the controller's variability detector then repairs the belief from the
+observed/predicted ratio, exactly as wall-clock timers would on hardware.
+
 Because wall-clock on this CPU container is meaningless for TPU latency
 claims, the engine also replays every step's observed expert counts through
 the fleet latency model, accumulating the *simulated* step latency that the
@@ -23,7 +37,6 @@ On real hardware the same counters would be wall-clock timestamps.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
 
 import jax
@@ -32,10 +45,21 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.gem import GEMPlanner
-from ..core.score import per_step_latency
-from ..core.types import ExpertTrace, GEMConfig, Placement, VariabilityProfile
+from ..core.score import step_cost_matrix
+from ..core.types import GEMConfig, Placement, VariabilityProfile
 from ..models.model import decode_step, init_decode_cache, prefill
-from ..models.moe import apply_placement, identity_placement
+from ..models.moe import (
+    apply_layer_permutation,
+    apply_placement,
+    identity_placement,
+)
+from ..online import (
+    DriftConfig,
+    MigrationConfig,
+    OnlineConfig,
+    OnlineController,
+)
+from ..online.migration import swap_permutation
 from ..sharding.policy import ShardingPolicy
 from .sampling import sample
 from .scheduler import Request, Scheduler
@@ -55,6 +79,13 @@ class EngineConfig:
     other_time_per_step: float = 0.0  # simulated non-MoE per-step latency
     moe_backend: str | None = None  # override ModelConfig.moe_backend for
     # the engine's data plane (einsum | pallas | dense_ref)
+    # --- online adaptation plane (repro.online) ---
+    online: bool = False  # drift-triggered replans + budgeted partial swaps
+    # instead of the one-shot step-counter replan above
+    drift: DriftConfig = DriftConfig()
+    migration: MigrationConfig = MigrationConfig()
+    replan_cooldown: int = 32  # min steps between drift replans
+    payback_horizon: int = 1024  # steps a migration's gain must amortise over
 
 
 class ServingEngine:
@@ -72,6 +103,12 @@ class ServingEngine:
             config = dataclasses.replace(
                 config, moe_backend=engine_config.moe_backend
             )
+        if engine_config.online and (profile is None or not config.is_moe):
+            raise ValueError(
+                "EngineConfig(online=True) needs a MoE config and an attached "
+                "VariabilityProfile — without them no adaptation plane can "
+                "run and the engine would silently never replan"
+            )
         self.params = params
         self.config = config
         self.policy = policy
@@ -83,10 +120,20 @@ class ServingEngine:
 
         # GEM control plane (MoE archs only)
         self.profile = profile
+        self.true_profile: VariabilityProfile | None = None  # harness-injected
+        # ground truth when it departs the believed profile (set_true_profile)
         self.planner: GEMPlanner | None = None
+        self.controller: OnlineController | None = None
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
+        if profile is not None:
+            # Scheduler admission tracks the profiled fleet: the slowest
+            # device's relative throughput scales the prefill token budget
+            # so admission bursts don't amplify the straggler.
+            self.scheduler.set_slow_device_factor(
+                float(profile.relative_speed().min())
+            )
         if config.is_moe:
             nd = num_devices or (profile.num_devices if profile else 4)
             self.planner = GEMPlanner(
@@ -102,6 +149,28 @@ class ServingEngine:
             self.current_placements = [
                 Placement.linear(Ev, nd) for _ in range(config.num_layers)
             ]
+            # one cost model for both replan paths: the online plane prices
+            # its batches with it, and the one-shot swap charges the same
+            # model so the two modes' latency reports stay comparable
+            dtype_bytes = jax.tree.leaves(params)[0].dtype.itemsize
+            Fv = config.expert_d_ff // config.expert_tp
+            self._cost_model = engine_config.migration.cost_model_for_dims(
+                config.d_model, Fv, bytes_per_param=dtype_bytes
+            )
+            if engine_config.online and profile is not None:
+                self.controller = OnlineController(
+                    self.planner,
+                    self._cost_model,
+                    OnlineConfig(
+                        policy=engine_config.placement_policy,
+                        online=True,
+                        drift=engine_config.drift,
+                        migration=engine_config.migration,
+                        replan_cooldown=engine_config.replan_cooldown,
+                        payback_horizon=engine_config.payback_horizon,
+                    ),
+                    initial_placements=self.current_placements,
+                )
 
         # simulated latency accounting
         self.sim_step_latencies: list[float] = []
@@ -186,21 +255,31 @@ class ServingEngine:
         req.start_step = self.step_count
 
     # ------------------------------------------------------------------
-    def _simulate_step_latency(self, counts: np.ndarray) -> float:
-        """counts (L, E_real) → simulated straggler latency of this step."""
-        if self.profile is None or self.current_placements is None:
-            return 0.0
-        tp = self.config.expert_tp
-        total = 0.0
-        for layer, placement in enumerate(self.current_placements):
-            virt = np.repeat(counts[layer], tp)  # per virtual expert
-            trace = ExpertTrace(virt[None, :])
-            total += float(per_step_latency(trace, self.profile, placement)[0])
-        return total + self.ecfg.other_time_per_step
+    def set_true_profile(self, profile: VariabilityProfile | None) -> None:
+        """Inject the *actual* fleet behaviour when it departs the believed
+        profile (mid-run power cap, thermal throttling). Simulated latencies
+        come from this ground truth; the control plane keeps planning on its
+        belief until its variability-drift detector repairs it — on real
+        hardware the same gap appears between wall-clock and the stale
+        profile with no injection needed."""
+        self.true_profile = profile
+
+    @property
+    def _sim_profile(self) -> VariabilityProfile | None:
+        return self.true_profile if self.true_profile is not None else self.profile
+
+    def _step_cost_matrix(self, counts_virt: np.ndarray) -> np.ndarray | None:
+        """(L, G) per-layer per-device latencies of this step, ground truth."""
+        if self._sim_profile is None or self.current_placements is None:
+            return None
+        return step_cost_matrix(
+            counts_virt, self._sim_profile, self.current_placements
+        )
 
     def _maybe_replan(self) -> None:
         if (
             self.planner is None
+            or self.controller is not None  # online mode: drift, not a timer
             or self.placement_applied
             or self.profile is None
         ):
@@ -243,9 +322,65 @@ class ServingEngine:
             self.params["blocks"]["moe"], slot_to_expert
         )
         self.params = {**self.params, "blocks": new_blocks}
+        # the one-shot swap moves weights too: charge it to the step that
+        # performs it (unbudgeted, one batch), with the same cost model the
+        # online mode pays per batch — otherwise comparing the two modes'
+        # latency reports silently favours one-shot
+        moves = sum(
+            len(cur.moved_slots(new))
+            for cur, new in zip(self.current_placements, placements)
+        )
+        swap_cost = self._cost_model.cost(moves)
+        if self.sim_step_latencies:
+            self.sim_step_latencies[-1] += swap_cost
+        self.sim_time += swap_cost
         self.placements = expert_to_slot
         self.current_placements = placements
         self.placement_applied = True
+
+    # ------------------------------------------------------------------
+    def _online_step(
+        self, counts_virt: np.ndarray, cost_mx: np.ndarray | None
+    ) -> float:
+        """Drive the online controller for one step; returns the migration
+        cost to charge to this step's simulated latency.
+
+        The controller sees the (L, E_v) counts plus the per-device observed
+        MoE time (ground truth — the wall-clock proxy); any migration batch
+        it emits is mirrored onto the stacked weights as partial per-layer
+        permutations with the router tables swapped in the same step.
+        """
+        assert self.controller is not None
+        observed = cost_mx.sum(axis=0) if cost_mx is not None else None
+        decision = self.controller.observe_step(counts_virt, observed)
+        if decision.migration_step is not None:
+            new_blocks = dict(self.params["blocks"])
+            moe = dict(new_blocks["moe"])
+            for layer, swaps in decision.migration_step.swaps_by_layer().items():
+                Ev = self.config.num_experts * self.config.expert_tp
+                moe = apply_layer_permutation(
+                    moe, layer, swap_permutation(Ev, swaps)
+                )
+            new_blocks["moe"] = moe
+            self.params = {**self.params, "blocks": new_blocks}
+            # router remap tables follow the physical layout atomically
+            self.placements = jnp.asarray(
+                self.controller.expert_to_slot_tables()
+            )
+            self.current_placements = list(self.controller.current_placements)
+        if decision.profile_rescaled:
+            self.profile = self.controller.profile
+            self.scheduler.set_slow_device_factor(
+                float(self.profile.relative_speed().min())
+            )
+        # "applied" must mean a planned placement actually reached the data
+        # plane (a 0-move schedule counts: the plan IS the live placement) —
+        # not merely that a plan existed and its migration was gate-skipped
+        if self.controller.planned and any(
+            r["applied"] for r in self.controller.replans
+        ):
+            self.placement_applied = True
+        return decision.migration_cost
 
     # ------------------------------------------------------------------
     def step(self) -> dict[str, Any]:
@@ -275,10 +410,15 @@ class ServingEngine:
         sim_latency = self.ecfg.other_time_per_step
         if moe_aux is not None and self.planner is not None:
             counts = np.asarray(moe_aux.expert_counts)  # (L, E)
-            for layer in range(self.config.num_layers):
-                virt = np.repeat(counts[layer], self.config.expert_tp)
-                self.planner.observe_step(layer, virt)
-            sim_latency = self._simulate_step_latency(counts)
+            counts_virt = np.repeat(counts, self.config.expert_tp, axis=1)
+            cost_mx = self._step_cost_matrix(counts_virt)
+            if cost_mx is not None:
+                sim_latency += float(cost_mx.max(axis=1).sum())
+            if self.controller is not None:
+                sim_latency += self._online_step(counts_virt, cost_mx)
+            else:
+                for layer in range(self.config.num_layers):
+                    self.planner.observe_step(layer, counts_virt[layer])
         self.sim_step_latencies.append(sim_latency)
         self.sim_time += sim_latency
 
@@ -329,4 +469,10 @@ class ServingEngine:
             )
         if len(e2e):
             out["mean_e2e"] = float(e2e.mean())
+        if self.controller is not None:
+            out.update(
+                replans=float(len(self.controller.replans)),
+                migration_s=self.controller.total_migration_cost,
+                max_moves_per_step=float(self.controller.max_moves_in_step),
+            )
         return out

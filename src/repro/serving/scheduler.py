@@ -50,6 +50,18 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot → request
 
+    def set_slow_device_factor(self, factor: float) -> None:
+        """Tighten/relax the prefill budget to the fleet's slowest device.
+
+        The engine wires this from the attached
+        :class:`~repro.core.types.VariabilityProfile` (slowest device's
+        relative throughput) and re-wires it when the online plane repairs
+        the profile mid-run, so admission bursts track the *current* fleet.
+        """
+        if not 0.0 < factor:
+            raise ValueError("slow_device_factor must be positive")
+        self.slow_device_factor = float(min(factor, 1.0))
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 

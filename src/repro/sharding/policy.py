@@ -127,6 +127,22 @@ class ShardingPolicy:
         )
         return data_spec, expert_spec
 
+    def moe_expert_pad(self, Ev: int) -> tuple[int, Any]:
+        """(padded E_v, expert spec) for the per-shard kernels when ``Ev``
+        doesn't divide the model-axis extent.
+
+        Pads the expert dim up to the next multiple of the model axis with
+        *dead slots* — zero weight rows and zero dispatch buffers whose FFN
+        output is exactly zero and is sliced back off — so oddball expert
+        counts still shard over the full axis instead of replicating
+        (``moe_ffn_sharded`` consumes this via ``pad_expert_to``). Returns
+        ``(Ev, None)`` with no mesh or a 1-wide model axis (nothing to
+        shard)."""
+        if self.mesh is None or self.model_axis_size <= 1:
+            return Ev, None
+        pad = (-Ev) % self.model_axis_size
+        return Ev + pad, self.model_axis
+
     # ---- activation constraints -------------------------------------------
     def constrain(self, x, *parts):
         """with_sharding_constraint when a mesh is present, no-op otherwise."""

@@ -1,0 +1,58 @@
+"""The arch configs' Pallas tiles must match the autotune sweep frontier.
+
+``benchmarks/roofline.py --sweep-blocks`` writes the per-(arch × shape)
+optimal ``(block_c, block_f)`` to ``results/pallas_autotune.json``; the
+configs feed those tiles back via ``pallas_block_c/f``. The kernel clamps
+the configured tile per call (``block_c`` to ``round_up(C, 8)``, ``block_f``
+to ``round_up(F, 128)``), so a single configured pair must land on the
+sweep's ``best`` for *every* cell — train/prefill pick the configured value,
+decode's tiny capacities clamp down to the sweep's decode optimum.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.compat import round_up
+
+RESULTS = pathlib.Path(__file__).parent.parent / "results" / "pallas_autotune.json"
+
+
+def _cells():
+    if not RESULTS.exists():
+        pytest.skip("no autotune sweep results checked in")
+    return json.loads(RESULTS.read_text())
+
+
+def test_configs_match_sweep_frontier():
+    cells = _cells()
+    assert cells, "autotune sweep file is empty"
+    seen_archs = set()
+    for cell in cells:
+        cfg = get_config(cell["arch"])
+        seen_archs.add(cell["arch"])
+        C, F = cell["capacity"], cell["f_virtual"]
+        # the kernel's per-call clamp (kernels/sharded.py::moe_ffn_sharded)
+        eff_bc = min(cfg.pallas_block_c, round_up(C, 8))
+        eff_bf = min(cfg.pallas_block_f, round_up(F, 128))
+        best = cell["best"]
+        assert eff_bc == best["block_c"], (
+            f"{cell['arch']}/{cell['shape']}: configured block_c="
+            f"{cfg.pallas_block_c} clamps to {eff_bc}, sweep best is "
+            f"{best['block_c']}"
+        )
+        assert eff_bf == best["block_f"], (
+            f"{cell['arch']}/{cell['shape']}: configured block_f="
+            f"{cfg.pallas_block_f} clamps to {eff_bf}, sweep best is "
+            f"{best['block_f']}"
+        )
+    assert {"mixtral-8x7b", "granite-moe-3b-a800m"} <= seen_archs
+
+
+def test_sweep_covers_train_and_decode_regimes():
+    """The frontier feedback is only meaningful if the sweep spans both the
+    large-capacity (train/prefill) and clamped (decode) regimes."""
+    cells = _cells()
+    caps = {cell["capacity"] for cell in cells}
+    assert any(c >= 1024 for c in caps) and any(c <= 8 for c in caps)

@@ -110,10 +110,11 @@ def test_mesh_parity_granite_ratio():
     )
 
 
-def test_mesh_parity_indivisible_experts_replicates():
-    """E_v % model-axis ≠ 0 stays correct (expert dim replicated — every
-    backend pays it) and warns once on the first call, whatever the
-    backend."""
+def test_mesh_parity_indivisible_experts_pads_dead_slots():
+    """E_v % model-axis ≠ 0: the einsum path replicates the expert dim
+    (warned); the pallas path now *pads E_v to the axis with dead slots*
+    (its own one-time warning) so the per-shard kernels stay sharded —
+    and both still agree bit-for-bit with each other."""
     mesh, policy = _mesh_policy()
     cfg = dataclasses.replace(
         get_smoke_config("granite-moe-3b-a800m"),
@@ -124,13 +125,41 @@ def test_mesh_parity_indivisible_experts_replicates():
     with mesh:
         with pytest.warns(RuntimeWarning, match="replicates the expert dim"):
             y_ref, _ = moe_layer(x, lp, table, cfg, policy, backend="einsum")
-        # one-time: the pallas call reuses the key silently
+        with pytest.warns(RuntimeWarning, match="padding the expert dim"):
+            y, _ = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+        # both warnings are one-time: a second pallas call stays silent
         with warnings.catch_warnings():
             warnings.simplefilter("error")
-            y, _ = moe_layer(x, lp, table, cfg, policy, backend="pallas")
+            y2, _ = moe_layer(x, lp, table, cfg, policy, backend="pallas")
     np.testing.assert_allclose(
         np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4
     )
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+def test_mesh_gradients_indivisible_experts_padded_path():
+    """Grad parity through the dead-slot-padded per-shard kernels: the pad
+    rows carry zero weights/buffers, so gradients must match einsum exactly
+    (within kernel tolerance) and the padded rows must receive none."""
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("granite-moe-3b-a800m"),
+        num_experts=6, experts_per_token=2, capacity_factor=8.0,
+    )
+    lp, x, table = _setup(cfg, policy, seed=5)
+
+    def loss(params, backend):
+        y, aux = moe_layer(x, params, table, cfg, policy, backend=backend)
+        return jnp.sum(y * y) + aux["aux_loss"]
+
+    with mesh:
+        g_ref = jax.grad(lambda p: loss(p, "einsum"))(lp)
+        g = jax.grad(lambda p: loss(p, "pallas"))(lp)
+    for name in ("router", "w_gate", "w_up", "w_down"):
+        np.testing.assert_allclose(
+            np.asarray(g[name]), np.asarray(g_ref[name]),
+            rtol=2e-4, atol=2e-4, err_msg=name,
+        )
 
 
 def test_mesh_gradients_match_einsum():

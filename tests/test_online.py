@@ -1,0 +1,558 @@
+"""Online adaptation plane: drift detection, budgeted migration, the
+controller's drift → plan-diff → budgeted-swap pipeline, the shift-scenario
+replay invariants, and the serving engine's online mode."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceFleet,
+    GEMConfig,
+    GEMPlanner,
+    MigrationCostModel,
+    Placement,
+    WorkloadSpec,
+    generate_layer_traces,
+    migration_net_benefit,
+    profile_fleet,
+    setup_speeds,
+    simulator_measure_fn,
+    step_cost_matrix,
+)
+from repro.online import (
+    DriftConfig,
+    LoadDriftDetector,
+    MigrationConfig,
+    OnlineConfig,
+    OnlineController,
+    ShiftScenario,
+    VariabilityDriftDetector,
+    plan_migration,
+    replay_online,
+    swap_permutation,
+)
+
+E, G, L = 8, 4, 4
+
+
+def _profile(speeds, *, tile=64, tile_time=300e-6):
+    fleet = DeviceFleet.from_speeds(
+        speeds, tile=tile, tile_time=tile_time, base=tile_time * 0.25
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet), len(speeds), max_tokens=512, tile=tile,
+        repeats=3,
+    ).profile
+
+
+def _spec():
+    return WorkloadSpec(
+        num_experts=E, top_k=2, tokens_per_step=128, num_consistent=2,
+        num_temporal_groups=2, temporal_group_size=2,
+        background="lognormal", skew_sigma=0.5,
+    )
+
+
+def _counts(num_steps, *, seed=1, identity_seed=11):
+    traces = generate_layer_traces(
+        _spec(), L, num_steps, seed=seed, identity_seed=identity_seed
+    )
+    return np.stack([t.counts for t in traces], axis=1)  # (T, L, E)
+
+
+# ---------------------------------------------------------------------------
+# drift detectors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric,threshold", [("kl", 3.0), ("chi2", 1.0)])
+def test_load_drift_fires_on_identity_shift_not_stationary(metric, threshold):
+    # thresholds sit ≥1.5× above each metric's stationary band for this
+    # bursty spec (χ² is the bounded triangular form, hence the lower value)
+    cfg = DriftConfig(metric=metric, threshold=threshold, min_steps=4)
+    det = LoadDriftDetector(L, E, cfg)
+    a = _counts(128, identity_seed=11)
+    det.set_reference(a[:16].sum(axis=0))
+    fired_stationary = any(det.update(a[t]) for t in range(16, 128))
+    assert not fired_stationary, "stationary workload must not fire"
+    b = _counts(64, seed=2, identity_seed=77)  # hot experts move
+    fired_after = [det.update(b[t]) for t in range(64)]
+    assert any(fired_after), "task-mix shift must fire"
+
+
+def test_load_drift_requires_reference_and_warmup():
+    det = LoadDriftDetector(L, E, DriftConfig(min_steps=8))
+    a = _counts(16)
+    assert not det.armed
+    assert det.update(a[0]) is False  # unarmed: never fires
+    det.set_reference(a.sum(axis=0))
+    for t in range(6):  # inside the EWMA warm-up window
+        assert det.update(a[t] * 50) is False
+
+
+def test_variability_drift_fires_on_slowdown_and_reports_ratio():
+    det = VariabilityDriftDetector(G, DriftConfig(var_threshold=0.25,
+                                                  min_steps=4))
+    predicted = np.asarray([1e-3, 1e-3, 1e-3, 1e-3])
+    observed = predicted.copy()
+    for _ in range(20):
+        assert det.update(observed, predicted) is False
+    observed_slow = predicted.copy()
+    observed_slow[2] *= 2.0  # device 2 halves its speed
+    fired = False
+    for _ in range(20):
+        fired = det.update(observed_slow, predicted) or fired
+    assert fired
+    assert det.drifted_devices().tolist() == [2]
+    # the smoothed ratio is the profile repair factor: ≈ 2 for a 2× slowdown
+    assert 1.7 < det.ratios[2] < 2.1
+    assert np.allclose(det.ratios[[0, 1, 3]], 1.0, atol=0.05)
+
+
+def test_variability_drift_ignores_idle_devices():
+    det = VariabilityDriftDetector(G, DriftConfig(min_steps=2))
+    predicted = np.asarray([1e-3, 0.0, 1e-3, 1e-3])  # device 1 got no tokens
+    observed = np.asarray([1e-3, 0.0, 1e-3, 1e-3])
+    for _ in range(10):
+        assert det.update(observed, predicted) is False
+    assert det.ratios[1] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# migration planner + cost model
+# ---------------------------------------------------------------------------
+
+def test_plan_migration_budget_and_exactness():
+    rng = np.random.default_rng(0)
+    Ev = 16
+    for _ in range(20):
+        cur = [
+            Placement(
+                rng.permutation(np.repeat(np.arange(G), Ev // G)).astype(
+                    np.int32
+                ),
+                G,
+            )
+            for _ in range(L)
+        ]
+        tgt = [
+            Placement(
+                rng.permutation(np.repeat(np.arange(G), Ev // G)).astype(
+                    np.int32
+                ),
+                G,
+            )
+            for _ in range(L)
+        ]
+        sched = plan_migration(cur, tgt, MigrationConfig(max_moves_per_step=4))
+        layouts = [p.slot_to_expert() for p in cur]
+        for step in sched.steps:
+            assert step.num_moves <= 4
+            for sw in step.swaps:
+                lay = layouts[sw.layer]
+                lay[[sw.slot_a, sw.slot_b]] = lay[[sw.slot_b, sw.slot_a]]
+        for layer in range(L):
+            np.testing.assert_array_equal(
+                layouts[layer], tgt[layer].slot_to_expert()
+            )
+
+
+def test_placement_diff_hooks():
+    cur = Placement(np.asarray([0, 0, 1, 1, 2, 2, 3, 3], np.int32), G)
+    # expert 1 ↔ expert 6 keeps each device's canonical expert order, so
+    # the diff is exactly the two swapped rows
+    tgt = cur.swap(1, 6)
+    rel = cur.relative_slot_permutation(tgt)
+    # applying rel to cur's rows realises tgt
+    np.testing.assert_array_equal(cur.slot_to_expert()[rel],
+                                  tgt.slot_to_expert())
+    moved = cur.moved_slots(tgt)
+    assert len(moved) == 2
+    np.testing.assert_array_equal(cur.moved_slots(cur), [])
+
+
+def test_plan_migration_noop_when_equal():
+    p = [Placement.linear(16, G) for _ in range(L)]
+    sched = plan_migration(p, p)
+    assert sched.total_moves == 0 and sched.num_steps == 0
+
+
+def test_plan_migration_respects_physical_layouts():
+    """Raw (non-canonical) slot layouts must migrate exactly — the live
+    layout mid-migration is not Placement-canonical."""
+    layout = np.asarray([1, 0, 3, 2, 5, 4, 7, 6], dtype=np.int32)  # swapped
+    tgt = Placement.linear(8, 4)
+    sched = plan_migration([layout], [tgt], MigrationConfig(2))
+    lay = layout.copy()
+    for step in sched.steps:
+        for sw in step.swaps:
+            lay[[sw.slot_a, sw.slot_b]] = lay[[sw.slot_b, sw.slot_a]]
+    np.testing.assert_array_equal(lay, tgt.slot_to_expert())
+
+
+def test_swap_permutation_composes_in_order():
+    perm = swap_permutation(4, [(0, 1), (1, 2)])
+    # rows: after (0,1): [1,0,2,3]; after (1,2): [1,2,0,3]
+    np.testing.assert_array_equal(perm, [1, 2, 0, 3])
+
+
+def test_migration_cost_model_prices_moves():
+    cm = MigrationCostModel(expert_bytes=100e6, bandwidth=50e9,
+                            base_overhead=1e-5)
+    assert cm.cost(0) == 0.0
+    assert cm.cost(2) == pytest.approx(1e-5 + 2 * 100e6 / 50e9)
+    assert cm.cost(4) > cm.cost(2)
+    per_dims = MigrationCostModel.for_expert_dims(4096, 14336)
+    assert per_dims.expert_bytes == pytest.approx(3 * 4096 * 14336 * 2)
+
+
+def test_migration_net_benefit_sign():
+    # 1 ms/step gain over 100 steps vs a 50 ms migration: pays back
+    assert migration_net_benefit(1.6, 1.584, 16, 100, 0.05) > 0
+    # same gain vs a 150 ms migration: does not
+    assert migration_net_benefit(1.6, 1.584, 16, 100, 0.15) < 0
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+def _controller(profile, *, online=True, policy="gem", **kw):
+    planner = GEMPlanner(E, G, L, GEMConfig(trace_length=16, num_restarts=4))
+    planner.set_profile(profile)
+    ocfg = OnlineConfig(
+        policy=policy, online=online,
+        drift=DriftConfig(threshold=3.0, min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=2), **kw,
+    )
+    return OnlineController(
+        planner, ocfg.migration.cost_model(1e6), ocfg
+    )
+
+
+def test_controller_warmup_plan_budgeted_and_bounded():
+    profile = _profile(setup_speeds("high", G))
+    ctl = _controller(profile)
+    counts = _counts(96)
+    for t in range(96):
+        mat = step_cost_matrix(counts[t], profile, ctl.current_placements)
+        ctl.observe_step(counts[t], mat.sum(axis=0))
+    assert ctl.planned
+    assert ctl.replans[0]["reason"] == "warmup"
+    assert ctl.max_moves_in_step <= 2
+    if ctl.total_moves:
+        assert ctl.total_migration_cost > 0.0
+
+
+def test_controller_physical_layout_matches_router_tables():
+    profile = _profile(setup_speeds("high", G))
+    ctl = _controller(profile)
+    counts = _counts(64)
+    for t in range(64):
+        ctl.observe_step(counts[t])
+    tables = ctl.expert_to_slot_tables()
+    for layer, layout in enumerate(ctl.slot_layouts):
+        np.testing.assert_array_equal(tables[layer][layout], np.arange(E))
+        # derived Placement agrees with the physical layout's device map
+        per = E // G
+        for s, e in enumerate(layout):
+            assert ctl.current_placements[layer].expert_to_device[e] == s // per
+
+
+def test_controller_oneshot_does_not_replan_on_drift():
+    profile = _profile(setup_speeds("high", G))
+    ctl = _controller(profile, online=False, unbudgeted_first_swap=True)
+    a, b = _counts(48), _counts(96, seed=2, identity_seed=77)
+    for t in range(48):
+        ctl.observe_step(a[t])
+    assert [r["reason"] for r in ctl.replans] == ["warmup"]
+    for t in range(96):
+        ctl.observe_step(b[t])
+    assert [r["reason"] for r in ctl.replans] == ["warmup"]
+
+
+def test_controller_replans_on_load_drift_with_clean_window():
+    profile = _profile(setup_speeds("high", G))
+    ctl = _controller(profile)
+    a, b = _counts(48), _counts(96, seed=2, identity_seed=77)
+    for t in range(48):
+        ctl.observe_step(a[t])
+    for t in range(96):
+        ctl.observe_step(b[t])
+    reasons = [r["reason"] for r in ctl.replans]
+    assert reasons[0] == "warmup" and "load-drift" in reasons
+    assert ctl.max_moves_in_step <= 2
+
+
+def test_controller_variability_drift_rescales_profile():
+    profile = _profile(setup_speeds("moderate", G))
+    slow_speeds = setup_speeds("moderate", G)
+    victim = int(np.argmax(slow_speeds))
+    slow_speeds[victim] /= 2.0
+    true_slow = _profile(slow_speeds)
+    ctl = _controller(profile)
+    counts = _counts(160)
+    rescaled = False
+    for t in range(160):
+        true_prof = profile if t < 64 else true_slow
+        mat = step_cost_matrix(counts[t], true_prof, ctl.current_placements)
+        decision = ctl.observe_step(counts[t], mat.sum(axis=0))
+        rescaled = rescaled or decision.profile_rescaled
+    assert rescaled
+    assert "variability-drift" in [r["reason"] for r in ctl.replans]
+    # the believed curve of the slowed device roughly doubled
+    ratio = ctl.profile.latencies[victim] / profile.latencies[victim]
+    assert 1.5 < float(np.median(ratio)) < 2.5
+
+
+def test_controller_variability_fire_inside_cooldown_still_replans():
+    """Regression: a variability fire during the replan cooldown rescales
+    the profile and resets the detector, so it never re-fires — the replan
+    must be deferred to cooldown expiry, not dropped forever."""
+    profile = _profile(setup_speeds("moderate", G))
+    slow_speeds = setup_speeds("moderate", G)
+    slow_speeds[int(np.argmax(slow_speeds))] /= 2.0
+    true_slow = _profile(slow_speeds)
+    ctl = _controller(profile, replan_cooldown=64)  # fire lands inside this
+    counts = _counts(200)
+    for t in range(200):
+        true_prof = profile if t < 20 else true_slow
+        mat = step_cost_matrix(counts[t], true_prof, ctl.current_placements)
+        ctl.observe_step(counts[t], mat.sum(axis=0))
+    reasons = [r["reason"] for r in ctl.replans]
+    assert "variability-drift" in reasons
+
+
+def test_engine_oneshot_replan_charges_migration_cost():
+    """The legacy one-shot swap must charge its weight movement to the step
+    that performs it, with the same cost model online mode pays — otherwise
+    the two modes' latency reports aren't comparable."""
+    eng, cfg, _ = _engine(False)  # one-shot gem
+    Ev = cfg.num_experts * cfg.expert_tp
+    # fill every collector with a skewed stationary load so the plan moves
+    rng = np.random.default_rng(9)
+    base = rng.integers(1, 64, size=Ev)
+    for _ in range(eng.ecfg.gem.trace_length):
+        counts = base + rng.integers(0, 4, size=Ev)
+        for layer in range(cfg.num_layers):
+            eng.planner.observe_step(layer, counts)
+    eng.ecfg = dataclasses.replace(eng.ecfg, replan_after=0)
+    before_placements = list(eng.current_placements)
+    sim_before = eng.sim_time
+    eng._maybe_replan()
+    assert eng.placement_applied
+    moves = sum(
+        len(cur.moved_slots(new))
+        for cur, new in zip(before_placements, eng.current_placements)
+    )
+    assert eng.sim_time - sim_before == pytest.approx(
+        eng._cost_model.cost(moves)
+    )
+    if moves:
+        assert eng.sim_time > sim_before
+
+
+# ---------------------------------------------------------------------------
+# replay invariants (the fig20 acceptance criteria, small)
+# ---------------------------------------------------------------------------
+
+def _replay_setup():
+    profile = _profile(setup_speeds("high", G))
+    a = _counts(96, seed=1, identity_seed=11)
+    b = _counts(192, seed=2, identity_seed=77)
+    scen = ShiftScenario(
+        "task_shift", np.concatenate([a, b]), {0: profile},
+        other_time_per_step=1e-4,
+    )
+    gcfg = GEMConfig(trace_length=16, num_restarts=6)
+    return scen, profile, gcfg
+
+
+def _run(scen, profile, gcfg, ocfg):
+    return replay_online(
+        scen, profile, gcfg, ocfg, expert_bytes=3 * 4096 * 14336 * 2.0
+    )
+
+
+def test_replay_online_beats_oneshot_and_respects_budget():
+    scen, profile, gcfg = _replay_setup()
+    drift = DriftConfig(threshold=3.0)
+    mig = MigrationConfig(max_moves_per_step=2)
+    online = _run(scen, profile, gcfg, OnlineConfig(
+        policy="gem", online=True, drift=drift, migration=mig))
+    oneshot = _run(scen, profile, gcfg, OnlineConfig(
+        policy="gem", online=False, unbudgeted_first_swap=True, migration=mig))
+    rng = np.random.default_rng(3)
+    lengths = np.clip(rng.geometric(1.0 / 96, size=64), 8, 192)
+    arrivals = rng.integers(0, scen.num_steps - 8, size=64)
+    assert online.mean_e2e(lengths, arrivals) <= oneshot.mean_e2e(
+        lengths, arrivals
+    )
+    assert int(online.moves_per_step.max()) <= 2
+    # migration is charged to the very steps that move weights
+    moved = online.moves_per_step > 0
+    assert moved.any()
+    assert (online.migration_costs[moved] > 0).all()
+    assert (online.migration_costs[~moved] == 0).all()
+    # and the one-shot swap is priced too, in a single unbudgeted step
+    assert oneshot.total_migration_cost > 0
+    assert (oneshot.moves_per_step > 0).sum() == 1
+
+
+def test_replay_linear_policy_never_migrates():
+    scen, profile, gcfg = _replay_setup()
+    r = _run(scen, profile, gcfg, OnlineConfig(policy="linear", online=False))
+    assert r.total_migration_cost == 0.0
+    assert int(r.moves_per_step.max()) == 0
+
+
+def test_scenario_profile_schedule():
+    profile = _profile(setup_speeds("moderate", G))
+    slow = _profile(setup_speeds("moderate", G) * 0.5)
+    scen = ShiftScenario(
+        "s", _counts(32), {0: profile, 16: slow}
+    )
+    assert scen.true_profile_at(0) is profile
+    assert scen.true_profile_at(15) is profile
+    assert scen.true_profile_at(16) is slow
+    with pytest.raises(ValueError, match="step-0"):
+        ShiftScenario("bad", _counts(4), {4: profile})
+
+
+# ---------------------------------------------------------------------------
+# serving engine online mode (real data plane)
+# ---------------------------------------------------------------------------
+
+def _engine(online, policy_name="gem"):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.sharding import host_policy
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    # tile=1 so sub-tile count differences register in the staircase model
+    # (the smoke model's ~uniform router would otherwise make every
+    # placement identical and the net-benefit gate skip all migrations)
+    profile = _profile(setup_speeds("high", 4), tile=1, tile_time=50e-6)
+    ecfg = EngineConfig(
+        max_batch=4, max_len=120,
+        gem=GEMConfig(trace_length=8, num_restarts=4),
+        other_time_per_step=1e-4, placement_policy=policy_name,
+        online=online,
+        drift=DriftConfig(min_steps=4, threshold=3.0),
+        migration=MigrationConfig(max_moves_per_step=2, base_overhead=0.0),
+        replan_cooldown=8, payback_horizon=100_000,
+    )
+    eng = ServingEngine(params, cfg, policy, ecfg, profile=profile,
+                        num_devices=4)
+    return eng, cfg, profile
+
+
+def test_engine_wires_slow_device_factor_from_profile():
+    eng, _, profile = _engine(False)
+    expected = float(profile.relative_speed().min())
+    assert eng.scheduler.slow_device_factor == pytest.approx(expected)
+    assert eng.scheduler.slow_device_factor < 1.0  # "high" has a straggler
+
+
+def test_engine_online_migrates_and_tokens_match_linear():
+    """The engine's online mode must replan under injected drift, honour
+    the per-step move budget, and — because every partial swap keeps router
+    tables and weights consistent — generate exactly the tokens the static
+    linear engine does."""
+    eng, cfg, _ = _engine(True)
+    lin, _, _ = _engine(False, "linear")
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=10) for _ in range(6)]
+    for e in (eng, lin):
+        for p in prompts:
+            e.submit(p, max_new_tokens=40)
+    slow = setup_speeds("high", 4)
+    slow[3] = 0.5  # a believed-fast device throttles mid-run
+    slow_prof = _profile(slow, tile=1, tile_time=50e-6)
+    steps = 0
+    while eng.scheduler.has_work() and steps < 200:
+        if steps == 25:
+            eng.set_true_profile(slow_prof)
+        eng.step()
+        steps += 1
+    lin.run(max_steps=200)
+
+    assert eng.controller is not None
+    reasons = [r["reason"] for r in eng.controller.replans]
+    assert "warmup" in reasons and "variability-drift" in reasons
+    applied = [r for r in eng.controller.replans if r["applied"]]
+    assert applied, "at least one migration must actually run"
+    assert eng.controller.max_moves_in_step <= 2
+    assert eng.controller.total_migration_cost > 0.0
+    report = eng.latency_report()
+    assert report["replans"] >= 2 and report["max_moves_per_step"] <= 2
+    # placements actually moved off linear…
+    moved = any(
+        not np.array_equal(
+            p.expert_to_device, Placement.linear(4, 4).expert_to_device
+        )
+        for p in eng.current_placements
+    )
+    assert moved
+    # …and the data plane never noticed: bit-identical generations
+    by_uid = {r.uid: r for r in lin.finished}
+    assert len(eng.finished) == 6
+    for r in eng.finished:
+        assert r.generated == by_uid[r.uid].generated
+
+
+def test_engine_online_without_profile_raises():
+    """online=True with nothing to adapt must fail loudly, not silently
+    disable every replan path."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.sharding import host_policy
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    with pytest.raises(ValueError, match="online"):
+        ServingEngine(params, cfg, policy, EngineConfig(online=True))
+
+
+def test_engine_online_placement_applied_tracks_applied_migrations():
+    """A gate-skipped migration must not report placement_applied."""
+    eng, cfg, _ = _engine(True)
+    # make every migration unaffordable so the gate always skips
+    eng.controller.config = dataclasses.replace(
+        eng.controller.config, payback_horizon=1
+    )
+    eng.controller.cost_model = dataclasses.replace(
+        eng.controller.cost_model, expert_bytes=1e15
+    )
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), max_new_tokens=30)
+    eng.run(max_steps=120)
+    assert eng.controller.planned
+    if not any(r["applied"] for r in eng.controller.replans):
+        assert not eng.placement_applied
+
+
+def test_engine_online_mode_skips_step_counter_replan():
+    """Online mode must not run the legacy one-shot replan path."""
+    eng, cfg, _ = _engine(True)
+    assert eng.controller is not None
+    rng = np.random.default_rng(5)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=6), max_new_tokens=4)
+    eng.run(max_steps=30)
+    # the legacy path would have set placement_applied via _maybe_replan
+    # before the collectors fill; online leaves it to the controller
+    assert eng.planner is not None
