@@ -77,7 +77,7 @@ class Placement:
         """vLLM default: expert ``i`` on device ``i // (E/G)`` (paper §4.3)."""
         per = num_experts // num_devices
         if per * num_devices != num_experts:
-            raise ValueError("num_experts must divide num_devices evenly")
+            raise ValueError("num_devices must divide num_experts evenly")
         return Placement(
             np.repeat(np.arange(num_devices, dtype=np.int32), per), num_devices
         )

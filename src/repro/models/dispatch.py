@@ -17,6 +17,21 @@ placement-aware scatter/gather around it:
   slot, capacity drop, and the (Gd, E_v, C) scatter indices/gates. Pure
   integer/index work: always plain GSPMD-partitioned jnp, shared by every
   backend.
+
+  **Replica splitting** (:mod:`repro.replication`): when the placement
+  table is 2-D — an (E_v, P) ``replica_table`` instead of the (E_v,)
+  single-slot map — the slot lookup goes through an extra deterministic
+  split stage. Each assignment is first ranked *within its (group, virtual
+  expert)* by the same stable sort used for capacity ranking, and rank
+  ``r`` lands on physical slot ``table[e, r % P]``. The table interleaves a
+  replicated expert's copies in proportion to their speed-proportional
+  token shares (Bresenham apportionment, baked in by the planner), so hot
+  experts' tokens fan out across their copies — more to faster devices —
+  while gates, capacity semantics, and the combine are untouched: only
+  *where* the expert compute lands changes. Copies are just extra slots in
+  the (Gd, S, C, D) buffers (``num_slots`` ≥ E_v), so neither the kernels
+  nor the scatter/gather grow any replication-specific code; a 1-D table
+  takes the original path, bit-for-bit.
 * :func:`expert_compute` — gather tokens into the (Gd, E_v, C, D) buffers
   and run the expert FFN. ``einsum`` uses grouped einsums; ``pallas`` runs
   ``moe_ffn_pallas`` *per device shard* via ``shard_map`` over the
@@ -119,6 +134,11 @@ class DispatchPlan:
         return self.dispatch_idx.shape[-1]
 
     @property
+    def num_slots(self) -> int:
+        """Physical slot count S (= E_v single-copy; > E_v with replicas)."""
+        return self.dispatch_idx.shape[1]
+
+    @property
     def flat_idx(self) -> jax.Array:
         """(Gd, E_v·C) gather/scatter index view shared by stages 3 and 4."""
         Gd = self.dispatch_idx.shape[0]
@@ -218,6 +238,7 @@ def build_dispatch(
     policy: ShardingPolicy,
     *,
     capacity_factor: float,
+    num_slots: int | None = None,
 ) -> DispatchPlan:
     """Routing decision → scatter plan. Backend-independent index work.
 
@@ -225,19 +246,36 @@ def build_dispatch(
     rank within their (group, slot) via the stable sort, and drop beyond the
     static capacity C = ⌈Ng·k/E · cf⌉ (dropped assignments scatter out of
     bounds, ``mode="drop"``).
+
+    ``expert_to_slot`` is either the (E_v,) single-slot map or an (E_v, P)
+    replica-split table (see the module docstring); ``num_slots`` is the
+    physical slot count S of the weight pool (default E_v — required when
+    the pool carries replica slots, since table contents are traced values).
     """
     Gd, Ng, k = router.ids.shape
     E = config.num_experts
     tp = config.expert_tp
     Ev = E * tp
+    S = num_slots if num_slots is not None else Ev
     ids = router.ids
     # virtual assignments → physical slots (ranked per data group)
     vids = ids[..., None] * tp + jnp.arange(tp, dtype=ids.dtype)  # (Gd,Ng,k,tp)
-    slots = jnp.take(expert_to_slot, vids.reshape(Gd, -1))  # (Gd, Ag)
     Ag = Ng * k * tp
+    vids_flat = vids.reshape(Gd, Ag)
+    table = jnp.asarray(expert_to_slot)
     group_of = jnp.repeat(jnp.arange(Gd, dtype=jnp.int32), Ag)
-    keyed = (group_of * Ev + slots.reshape(-1)).astype(jnp.int32)
-    pos, _ = _rank_in_group(keyed, Gd * Ev)
+    if table.ndim == 2:
+        # replica split: rank within (group, virtual expert) first, then
+        # rank%P picks the copy — deterministic, speed-proportional via the
+        # table's share-interleaved columns
+        P = table.shape[1]
+        vkeyed = (group_of * Ev + vids_flat.reshape(-1)).astype(jnp.int32)
+        vpos, _ = _rank_in_group(vkeyed, Gd * Ev)
+        slots = table[vids_flat, vpos.reshape(Gd, Ag) % P]  # (Gd, Ag)
+    else:
+        slots = jnp.take(table, vids_flat)  # (Gd, Ag)
+    keyed = (group_of * S + slots.reshape(-1)).astype(jnp.int32)
+    pos, _ = _rank_in_group(keyed, Gd * S)
     pos = pos.reshape(Gd, Ag)
     tok_idx = jnp.tile(
         jnp.repeat(jnp.arange(Ng, dtype=jnp.int32), k * tp), (Gd, 1)
@@ -247,15 +285,15 @@ def build_dispatch(
     C = int(np.ceil(Ng * k / E * capacity_factor))
     C = max(C, 1)
     keep = pos < C
-    slot_safe = jnp.where(keep, slots, Ev)
+    slot_safe = jnp.where(keep, slots, S)
     gidx = jnp.broadcast_to(
         jnp.arange(Gd, dtype=jnp.int32)[:, None], slots.shape
     )
-    dispatch_idx = jnp.full((Gd, Ev, C), Ng, dtype=jnp.int32)  # Ng → pad row
+    dispatch_idx = jnp.full((Gd, S, C), Ng, dtype=jnp.int32)  # Ng → pad row
     dispatch_idx = dispatch_idx.at[gidx, slot_safe, pos].set(
         tok_idx, mode="drop"
     )
-    dispatch_gate = jnp.zeros((Gd, Ev, C), dtype=jnp.float32)
+    dispatch_gate = jnp.zeros((Gd, S, C), dtype=jnp.float32)
     dispatch_gate = dispatch_gate.at[gidx, slot_safe, pos].set(
         a_gates, mode="drop"
     )
@@ -263,7 +301,7 @@ def build_dispatch(
     # model axis — a hard divisibility error from with_sharding_constraint
     # otherwise
     b = policy.batch
-    _, es = policy.moe_shard_spec(Gd, Ev)
+    _, es = policy.moe_shard_spec(Gd, S)
     dispatch_idx = policy.constrain(dispatch_idx, b, es, None)
     dispatch_gate = policy.constrain(dispatch_gate, b, es, None)
     dropped = 1.0 - jnp.sum(keep) / (Gd * Ag)
@@ -289,7 +327,7 @@ def expert_compute(
     gate-weighted (Gd, E_v, C, D) expert outputs for :func:`combine`.
     """
     Gd, Ng, D = xg.shape
-    Ev = config.num_experts * config.expert_tp
+    Ev = plan.num_slots  # physical slots: E_v, or more under replication
     b = policy.batch
     data_spec, expert_spec = policy.moe_shard_spec(Gd, Ev)
     x_pad = jnp.concatenate([xg, jnp.zeros((Gd, 1, D), xg.dtype)], axis=1)
@@ -301,15 +339,6 @@ def expert_compute(
         policy.mesh is not None and expert_spec is None
         and policy.model_axis_size > 1
     )
-    if indivisible and backend != "pallas":
-        # the GSPMD einsum path replicates the expert dim; the pallas path
-        # below pads it to the axis with dead slots and shards instead
-        _warn_once(
-            ("moe_expert_replicated", Ev, policy.model_axis_size),
-            f"moe_layer: E_v={Ev} does not divide the model-axis size "
-            f"{policy.model_axis_size}; the expert FFN replicates the "
-            "expert dim across the model axis (correct but unsharded)",
-        )
     if backend == "pallas":
         # the padded spec applies only inside the kernel's shard_map; the
         # surrounding constraints stay on the real (indivisible) E_v
@@ -334,11 +363,37 @@ def expert_compute(
             interpret=auto_interpret(), pad_expert_to=pad_to,
         )
     else:
-        h_gate = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"])
-        h_up = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"])
+        w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+        xe = x_e
+        pad_spec, Ev_pad = None, Ev
+        if indivisible:
+            # mirror the pallas dead-slot path: pad the expert dim to the
+            # model axis with zero rows so the GSPMD einsums shard instead
+            # of replicating (pad rows compute zeros and are sliced off)
+            Ev_pad, pad_spec = policy.moe_expert_pad(Ev)
+            if pad_spec is not None:
+                pad = Ev_pad - Ev
+                _warn_once(
+                    ("moe_expert_padded_einsum", Ev, policy.model_axis_size),
+                    f"moe_layer: E_v={Ev} does not divide the model-axis "
+                    f"size {policy.model_axis_size}; padding the expert dim "
+                    f"to {Ev_pad} with dead slots so the GSPMD einsums stay "
+                    "sharded (pad rows compute zeros and are sliced off)",
+                )
+                xe = jnp.pad(x_e, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                xe = policy.constrain(xe, b, pad_spec, None, None)
+                w_gate = jnp.pad(w_gate, ((0, pad), (0, 0), (0, 0)))
+                w_up = jnp.pad(w_up, ((0, pad), (0, 0), (0, 0)))
+                w_down = jnp.pad(w_down, ((0, pad), (0, 0), (0, 0)))
+        h_gate = jnp.einsum("gecd,edf->gecf", xe, w_gate)
+        h_up = jnp.einsum("gecd,edf->gecf", xe, w_up)
         h = jax.nn.silu(h_gate) * h_up
-        h = policy.constrain(h, b, expert_spec, None, None)
-        y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+        h = policy.constrain(
+            h, b, pad_spec if pad_spec is not None else expert_spec, None, None
+        )
+        y_e = jnp.einsum("gecf,efd->gecd", h, w_down)
+        if pad_spec is not None:
+            y_e = y_e[:, :Ev]
     y_e = y_e * plan.dispatch_gate[..., None].astype(y_e.dtype)
     return policy.constrain(y_e, b, expert_spec, None, None)
 
@@ -383,14 +438,19 @@ def dense_mix(xg, p, router: RouterOutput, expert_to_slot,
     Every expert computed on every token, mixed by the routing decision.
     The stacked weights live in *slot* order (physical placement); gather
     them back to virtual-expert order so the oracle stays
-    placement-invariant like the dispatch path. Returns (Gd, Ng, D).
+    placement-invariant like the dispatch path. Under replication (2-D
+    table) any copy serves — copies are bit-identical rows, so the first
+    column suffices. Returns (Gd, Ng, D).
     """
     Gd, Ng, D = xg.shape
     E, tp = config.num_experts, config.expert_tp
     k = config.experts_per_token
+    table = jnp.asarray(expert_to_slot)
+    if table.ndim == 2:
+        table = table[:, 0]
     pv = dict(p)
     for name in ("w_gate", "w_up", "w_down"):
-        pv[name] = jnp.take(p[name], expert_to_slot, axis=0)
+        pv[name] = jnp.take(p[name], table, axis=0)
     xf = xg.reshape(Gd * Ng, D)
     gates = router.gates.reshape(Gd * Ng, k)
     ids = router.ids.reshape(Gd * Ng, k)

@@ -181,6 +181,12 @@ def moe_layer(
     ``backend`` overrides ``config.moe_backend`` for this call (see the
     module docstring for the three backends). The body is a pure
     composition of the :mod:`repro.models.dispatch` stages.
+
+    ``expert_to_slot`` is either the (E_v,) router remap table or, under
+    the replication plane, an (E_v, P) replica-split table paired with a
+    weight pool ``p`` whose expert rows carry the replica copies — the
+    physical slot count is read off the stacked weights, so the same layer
+    code serves single-copy and replicated pools.
     """
     backend = resolve_moe_backend(backend, config, policy)
     B, S, D = x.shape
@@ -222,7 +228,8 @@ def moe_layer(
         )
 
     plan = build_dispatch(
-        router, expert_to_slot, config, policy, capacity_factor=cf
+        router, expert_to_slot, config, policy, capacity_factor=cf,
+        num_slots=int(p["w_gate"].shape[0]),
     )
     y_e = expert_compute(xg, plan, p, config, policy, backend=backend)
     y = combine(y_e, plan, (B, S, D), policy, seq_sharded_out=seq_sharded_out)

@@ -11,6 +11,13 @@ around the placement instead of planning once:
     fresh plan, decomposes the delta's slot permutation into two-slot swaps
     (cycle decomposition), and packs them into per-step batches bounded by
     ``max_moves_per_step``, each priced by the interconnect cost model.
+    Replicated layouts migrate with *one-row broadcast* moves instead
+    (``plan_replica_migration``): a copy instantiation writes one weight
+    row — cheaper than a swap cycle — so replica add/drop are first-class
+    budgeted moves and the controller can grow/shrink replicas under drift.
+    ``migration_cycles`` exposes the permutation delta per cycle for the
+    controller's budget-aware truncation (migrate only the profitable
+    prefix of a gate-rejected plan).
   * :mod:`repro.online.controller` — the per-step control loop gluing the
     two to the :class:`~repro.core.gem.GEMPlanner`: warm-up plan when the
     collectors fill, drift-triggered (never timer-triggered) replans after
@@ -27,10 +34,17 @@ from .controller import OnlineConfig, OnlineController, StepDecision
 from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
 from .migration import (
     MigrationConfig,
+    MigrationCycle,
     MigrationSchedule,
     MigrationStep,
+    ReplicaMigrationSchedule,
+    ReplicaMigrationStep,
+    ReplicaMove,
     SlotSwap,
+    migration_cycles,
     plan_migration,
+    plan_replica_migration,
+    replica_source_permutation,
     swap_permutation,
 )
 from .replay import ReplayResult, ShiftScenario, replay_online
@@ -40,10 +54,17 @@ __all__ = [
     "LoadDriftDetector",
     "VariabilityDriftDetector",
     "MigrationConfig",
+    "MigrationCycle",
     "MigrationSchedule",
     "MigrationStep",
+    "ReplicaMigrationSchedule",
+    "ReplicaMigrationStep",
+    "ReplicaMove",
     "SlotSwap",
+    "migration_cycles",
     "plan_migration",
+    "plan_replica_migration",
+    "replica_source_permutation",
     "swap_permutation",
     "OnlineConfig",
     "OnlineController",

@@ -37,8 +37,24 @@ from ..core.latency_model import MigrationCostModel
 from ..core.score import migration_net_benefit, score, step_cost_matrix
 from ..core.search import refine
 from ..core.types import ExpertTrace, Placement, VariabilityProfile
+from ..replication import (
+    ReplicatedPlacement,
+    ReplicationConfig,
+    plan_replicated,
+    replicated_score,
+    replicated_step_cost_matrix,
+)
 from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
-from .migration import MigrationConfig, MigrationStep, plan_migration
+from .migration import (
+    MigrationConfig,
+    MigrationStep,
+    ReplicaMigrationStep,
+    ReplicaMove,
+    migration_cycles,
+    plan_migration,
+    plan_replica_migration,
+    replica_source_permutation,
+)
 
 __all__ = ["OnlineConfig", "StepDecision", "OnlineController"]
 
@@ -51,16 +67,27 @@ class OnlineConfig:
     online: bool = True  # False ⇒ plan exactly once (one-shot baseline)
     drift: DriftConfig = DriftConfig()
     migration: MigrationConfig = MigrationConfig()
+    replication: ReplicationConfig = ReplicationConfig()  # replica_slots>0
+    # ⇒ replans produce ReplicatedPlacements and migrations are one-row
+    # broadcast batches (replica add/drop as first-class moves)
     replan_cooldown: int = 32  # min steps between drift replans
     payback_horizon: int = 1024  # steps a migration's gain must amortise over
     unbudgeted_first_swap: bool = False  # True ⇒ one-shot semantics for the
     # warm-up plan: the whole delta lands in one step (still priced),
     # matching the pre-online engine's single apply_placement. The online
     # mode keeps it False so *every* batch honours the budget.
+    truncate_rejected: bool = True  # when the net-benefit gate rejects a
+    # full migration, score its cycles individually and migrate the
+    # profitable prefix instead of dropping the whole plan
 
     def __post_init__(self):
         if self.policy not in ("gem", "eplb", "linear"):
             raise ValueError(f"unknown policy {self.policy!r}")
+        if self.replication.replica_slots > 0 and self.policy != "gem":
+            raise ValueError(
+                "expert replication needs the gem policy (linear/eplb have "
+                "no replication-aware search)"
+            )
 
 
 @dataclasses.dataclass
@@ -69,9 +96,11 @@ class StepDecision:
 
     replanned: bool = False
     reason: str | None = None  # "warmup" | "load-drift" | "variability-drift"
-    migration_step: MigrationStep | None = None
+    migration_step: MigrationStep | ReplicaMigrationStep | None = None
     migration_cost: float = 0.0
     migration_skipped: bool = False  # replan happened but didn't pay back
+    migration_truncated: bool = False  # gate rejected the full plan; only
+    # the profitable cycle prefix migrated
     profile_rescaled: bool = False
 
 
@@ -85,6 +114,7 @@ class OnlineController:
         config: OnlineConfig = OnlineConfig(),
         *,
         initial_placements: list[Placement] | None = None,
+        initial_rplacements: list[ReplicatedPlacement] | None = None,
     ):
         if planner.profile is None:
             raise ValueError("planner must have a profile (set_profile)")
@@ -92,18 +122,39 @@ class OnlineController:
         self.cost_model = cost_model
         self.config = config
         L, Ev, G = planner.num_layers, planner.num_experts, planner.num_devices
-        initial = (
-            list(initial_placements)
-            if initial_placements is not None
-            else [linear_placement(Ev, G) for _ in range(L)]
-        )
-        # physical slot→expert layout per layer — the ground truth the data
-        # plane mirrors; mid-migration it is NOT canonical (Placement sorts
-        # experts within a device), so Placement is derived, never authoritative
-        self.slot_layouts: list[np.ndarray] = [
-            p.slot_to_expert() for p in initial
-        ]
-        self.current_placements: list[Placement] = initial
+        self.replicated = config.replication.replica_slots > 0
+        if self.replicated:
+            # replicated mode: the pool carries Ev + G·replica_slots slots
+            # from the start, so migrations never change the slot count
+            rinitial = (
+                list(initial_rplacements)
+                if initial_rplacements is not None
+                else [
+                    ReplicatedPlacement.linear(
+                        Ev, G, config.replication.replica_slots,
+                        profile=planner.profile, config=config.replication,
+                    )
+                    for _ in range(L)
+                ]
+            )
+            self.current_rplacements: list[ReplicatedPlacement] = rinitial
+            self.slot_layouts: list[np.ndarray] = [
+                rp.slot_layout() for rp in rinitial
+            ]
+            self.current_placements: list[Placement] = []
+        else:
+            initial = (
+                list(initial_placements)
+                if initial_placements is not None
+                else [linear_placement(Ev, G) for _ in range(L)]
+            )
+            # physical slot→expert layout per layer — the ground truth the
+            # data plane mirrors; mid-migration it is NOT canonical
+            # (Placement sorts experts within a device), so Placement is
+            # derived, never authoritative
+            self.slot_layouts = [p.slot_to_expert() for p in initial]
+            self.current_placements = initial
+            self.current_rplacements = []
         self.load_detector = LoadDriftDetector(L, Ev, config.drift)
         self.var_detector = VariabilityDriftDetector(G, config.drift)
         self._pending: deque[MigrationStep] = deque()
@@ -133,22 +184,43 @@ class OnlineController:
     def migrating(self) -> bool:
         return bool(self._pending)
 
+    @property
+    def num_slots(self) -> int:
+        """Physical slots per layer (E_v, plus the replica budget)."""
+        return int(len(self.slot_layouts[0]))
+
     def expert_to_slot_tables(self) -> np.ndarray:
-        """(L, E_v) router remap tables matching the physical slot layouts —
-        what the data plane's router gather must use after mirroring a
-        migration batch."""
+        """Router remap tables matching the physical slot layouts — what
+        the data plane's router gather must use after mirroring a migration
+        batch: (L, E_v) single-slot maps, or (L, E_v, P) replica-split
+        tables in replicated mode."""
         L = self.planner.num_layers
         Ev = self.planner.num_experts
+        if self.replicated:
+            P = self.config.replication.pattern_period
+            return np.stack(
+                [rp.replica_table(P) for rp in self.current_rplacements]
+            )
         out = np.empty((L, Ev), dtype=np.int32)
         for layer, layout in enumerate(self.slot_layouts):
             out[layer, layout] = np.arange(Ev, dtype=np.int32)
         return out
 
+    def cost_matrix(
+        self, counts: np.ndarray, profile: VariabilityProfile
+    ) -> np.ndarray:
+        """(L, G) per-layer per-device MoE latencies of one step's counts
+        under the live placements — replica-split aware."""
+        if self.replicated:
+            return replicated_step_cost_matrix(
+                counts, profile, self.current_rplacements
+            )
+        return step_cost_matrix(counts, profile, self.current_placements)
+
     def predicted_device_latency(self, counts: np.ndarray) -> np.ndarray:
         """(G,) per-device MoE time this step *should* take per the believed
         profile, under the live placement — the drift detector's baseline."""
-        mat = step_cost_matrix(counts, self.profile, self.current_placements)
-        return mat.sum(axis=0)
+        return self.cost_matrix(counts, self.profile).sum(axis=0)
 
     # ------------------------------------------------------------------
     def observe_step(
@@ -247,6 +319,26 @@ class OnlineController:
             )
         )
         self.var_detector.reset()
+        if self.replicated:
+            # the split follows the belief: repaired speeds reshape every
+            # replicated expert's token shares immediately (the replan that
+            # follows may then also move the copies themselves)
+            for rp in self.current_rplacements:
+                rp.compute_speed_shares(
+                    self.profile, config=self.config.replication
+                )
+
+    def _plan_rplacements(self, window: int) -> list[ReplicatedPlacement]:
+        """Replicated-mode replan: per-layer copy selection + expanded GEM
+        search + speed-aware refinement (see repro.replication.planner)."""
+        out: list[ReplicatedPlacement] = []
+        for collector in self.planner.collectors:
+            res = plan_replicated(
+                collector.trace(window), self.profile, self.planner.config,
+                self.config.replication,
+            )
+            out.append(res.placement)
+        return out
 
     def _plan_placements(self, window: int) -> list[Placement]:
         Ev, G = self.planner.num_experts, self.planner.num_devices
@@ -275,11 +367,34 @@ class OnlineController:
 
     def _replan(self, decision: StepDecision, reason: str) -> None:
         window = self.planner.config.trace_length
-        target = self._plan_placements(window)
         traces = [c.trace(window) for c in self.planner.collectors]
-        schedule = plan_migration(
-            self.slot_layouts, target, self.config.migration
-        )
+        if self.replicated:
+            rtarget = self._plan_rplacements(window)
+            target_layouts = [rp.slot_layout() for rp in rtarget]
+            schedule = plan_replica_migration(
+                self.slot_layouts, target_layouts, self.config.migration
+            )
+            spd = self.num_slots // self.planner.num_devices
+            cur_score = sum(
+                replicated_score(t, self.profile, rp)
+                for t, rp in zip(traces, self.current_rplacements)
+            )
+            tgt_score = sum(
+                replicated_score(t, self.profile, rp)
+                for t, rp in zip(traces, rtarget)
+            )
+        else:
+            target = self._plan_placements(window)
+            schedule = plan_migration(
+                self.slot_layouts, target, self.config.migration
+            )
+            cur_score = sum(
+                score(t, self.profile, p)
+                for t, p in zip(traces, self.current_placements)
+            )
+            tgt_score = sum(
+                score(t, self.profile, p) for t, p in zip(traces, target)
+            )
         first_plan = not self.planned
         self.planned = True
         self._last_plan_step = self._step
@@ -293,30 +408,89 @@ class OnlineController:
             self.replans.append(record)
             self._reset_reference(traces)
             return
-        cur_score = sum(
-            score(t, self.profile, p)
-            for t, p in zip(traces, self.current_placements)
-        )
-        tgt_score = sum(
-            score(t, self.profile, p) for t, p in zip(traces, target)
+        schedule_cost = (
+            schedule.total_cost(self.cost_model, spd)
+            if self.replicated
+            else schedule.total_cost(self.cost_model)
         )
         net = migration_net_benefit(
             cur_score, tgt_score, window, self.config.payback_horizon,
-            schedule.total_cost(self.cost_model),
+            schedule_cost,
         )
         record["net_benefit_s"] = net
         if net <= 0.0:
-            record["applied"] = False
-            decision.migration_skipped = True
-            self.replans.append(record)
-            self._reset_reference(traces)
-            return
+            truncated = None
+            if self.config.truncate_rejected and not self.replicated:
+                truncated = self._truncate_schedule(
+                    target, traces, window, record
+                )
+            if truncated is None:
+                record["applied"] = False
+                decision.migration_skipped = True
+                self.replans.append(record)
+                self._reset_reference(traces)
+                return
+            schedule = truncated
+            decision.migration_truncated = True
+            record["truncated"] = True
+            record["moves"] = schedule.total_moves
         self.replans.append(record)
         self._pending = deque(schedule.steps)
         self._pending_unbudgeted = (
             first_plan and self.config.unbudgeted_first_swap
         )
         self._reset_reference(traces)
+
+    def _truncate_schedule(
+        self,
+        target: list[Placement],
+        traces: list[ExpertTrace],
+        window: int,
+        record: dict,
+    ):
+        """Budget-aware plan truncation: when the full migration cannot
+        amortise its weight traffic, score the delta's permutation cycles
+        *individually* (each cycle is independently applicable) and migrate
+        only the profitable ones. Returns a schedule or ``None`` when no
+        cycle pays for itself."""
+        cycles = migration_cycles(self.slot_layouts, target)
+        horizon = self.config.payback_horizon
+        spb = max(self.config.migration.max_moves_per_step // 2, 1)
+        keep: list = []
+        for cyc in cycles:
+            layout = self.slot_layouts[cyc.layer].copy()
+            for sw in cyc.swaps:
+                layout[[sw.slot_a, sw.slot_b]] = layout[[sw.slot_b, sw.slot_a]]
+            before = score(
+                traces[cyc.layer], self.profile,
+                self.current_placements[cyc.layer],
+            )
+            after = score(
+                traces[cyc.layer], self.profile,
+                Placement.from_slots(layout, self.planner.num_devices),
+            )
+            # the cycle's swaps land in ⌈swaps/per-batch⌉ priced batches
+            batches = -(-len(cyc.swaps) // spb)
+            cost = batches * self.cost_model.cost(
+                min(spb, len(cyc.swaps)) * 2
+            )
+            net = migration_net_benefit(before, after, window, horizon, cost)
+            if net > 0.0:
+                keep.append((net, cyc))
+        if not keep:
+            return None
+        keep.sort(key=lambda x: -x[0])
+        partial = [lay.copy() for lay in self.slot_layouts]
+        for _, cyc in keep:
+            for sw in cyc.swaps:
+                partial[cyc.layer][[sw.slot_a, sw.slot_b]] = (
+                    partial[cyc.layer][[sw.slot_b, sw.slot_a]]
+                )
+        record["cycles_kept"] = len(keep)
+        record["cycles_total"] = len(cycles)
+        return plan_migration(
+            self.slot_layouts, partial, self.config.migration
+        )
 
     def _reset_reference(self, traces: list[ExpertTrace]) -> None:
         ref = np.stack([t.counts.sum(axis=0) for t in traces])
@@ -326,6 +500,23 @@ class OnlineController:
     def _emit_migration_step(self, decision: StepDecision) -> None:
         if not self._pending:
             return
+        if self.replicated:
+            step = self._emit_replica_step()
+            # price only the rows that cross the interconnect — a replica
+            # sourced from a same-device row is a local HBM copy, exactly
+            # as the one-shot path's replica_fetch_rows accounts it
+            spd = self.num_slots // self.planner.num_devices
+            priced = step.cross_device_moves(spd)
+        else:
+            step = self._emit_swap_step()
+            priced = step.num_moves
+        decision.migration_step = step
+        decision.migration_cost = self.cost_model.cost(priced)
+        self.total_migration_cost += decision.migration_cost
+        self.total_moves += step.num_moves
+        self.max_moves_in_step = max(self.max_moves_in_step, step.num_moves)
+
+    def _emit_swap_step(self) -> MigrationStep:
         if self._pending_unbudgeted:
             # one-shot semantics: the whole remaining delta lands now
             swaps = [s for st in self._pending for s in st.swaps]
@@ -343,8 +534,45 @@ class OnlineController:
             self.current_placements[layer] = Placement.from_slots(
                 self.slot_layouts[layer], self.planner.num_devices
             )
-        decision.migration_step = step
-        decision.migration_cost = self.cost_model.cost(step.num_moves)
-        self.total_migration_cost += decision.migration_cost
-        self.total_moves += step.num_moves
-        self.max_moves_in_step = max(self.max_moves_in_step, step.num_moves)
+        return step
+
+    def _emit_replica_step(self) -> ReplicaMigrationStep:
+        if self._pending_unbudgeted:
+            # one-shot semantics: replay the remaining batches onto a copy
+            # of the live layouts, then emit the whole delta as a single
+            # parallel source map per layer (batch-internal ordering
+            # collapses — the final row sources come from the live pool)
+            final = [lay.copy() for lay in self.slot_layouts]
+            S = self.num_slots
+            for st in self._pending:
+                snap = [lay.copy() for lay in final]
+                for layer, src in st.sources_by_layer(S).items():
+                    final[layer] = snap[layer][src]
+            moves = []
+            for layer, (cur, tgt) in enumerate(zip(self.slot_layouts, final)):
+                src = replica_source_permutation(cur, tgt)
+                for s in np.nonzero(src != np.arange(len(src)))[0]:
+                    moves.append(ReplicaMove(layer, int(s), int(src[s])))
+            step = ReplicaMigrationStep(moves)
+            self._pending.clear()
+            self._pending_unbudgeted = False
+        else:
+            step = self._pending.popleft()
+        # parallel batch semantics: all sources read the pre-batch layout
+        S = self.num_slots
+        touched = set()
+        sources = step.sources_by_layer(S)
+        for layer, src in sources.items():
+            self.slot_layouts[layer] = self.slot_layouts[layer][src]
+            touched.add(layer)
+        for layer in touched:
+            rp = ReplicatedPlacement(
+                self.slot_layouts[layer].copy(),
+                self.planner.num_devices,
+                self.planner.num_experts,
+            )
+            rp.compute_speed_shares(
+                self.profile, config=self.config.replication
+            )
+            self.current_rplacements[layer] = rp
+        return step

@@ -47,10 +47,22 @@ class DriftConfig:
 
     metric: str = "kl"  # "kl" | "chi2" load-divergence metric
     ewma_alpha: float = 0.1  # smoothing of the live load distribution
-    threshold: float = 1.0  # layer-mean divergence that fires a replan
-    # (≥2× the stationary band of the repro.core.workload generators; a hot-
-    # expert identity change lands 2.2–6 nats — raise it for burstier mixes)
+    threshold: float | None = 1.0  # layer-mean divergence that fires a
+    # replan (≥2× the stationary band of the repro.core.workload generators;
+    # a hot-expert identity change lands 2.2–6 nats — raise it for burstier
+    # mixes). ``None`` ⇒ auto-calibrate: after each (re)plan the detector
+    # measures its own stationary band over ``calib_steps`` warm-up steps
+    # and sets the threshold to ``calib_margin × the calib_quantile`` of the
+    # observed layer-mean divergences — no per-workload constant needed.
     min_steps: int = 8  # EWMA warm-up steps after each (re)plan
+    calib_steps: int = 24  # auto-calibration window (threshold=None)
+    calib_quantile: float = 0.95  # stationary-band quantile to anchor on
+    calib_margin: float = 3.0  # threshold = margin × quantile. The margin
+    # covers two gaps measured on the repro.core.workload generators: the
+    # long-run stationary *max* sits ~2× above the warm-up window's q95
+    # (rare burst regimes arrive late), while a hot-expert identity change
+    # drives the level ~4× above it — 3× separates the two.
+    threshold_floor: float = 0.05  # auto threshold never below this
     var_alpha: float = 0.2  # smoothing of observed/predicted latency ratios
     var_threshold: float = 0.25  # relative curve departure that fires
 
@@ -59,6 +71,15 @@ class DriftConfig:
             raise ValueError(f"metric={self.metric!r} not in ('kl', 'chi2')")
         if not 0.0 < self.ewma_alpha <= 1.0:
             raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.threshold is None:
+            if self.calib_steps < 2:
+                raise ValueError(
+                    "auto-calibration needs calib_steps >= 2"
+                )
+            if self.calib_margin <= 1.0:
+                raise ValueError(
+                    "calib_margin must exceed 1 (threshold above the band)"
+                )
 
 
 def _normalize(counts: np.ndarray) -> np.ndarray:
@@ -79,10 +100,15 @@ class LoadDriftDetector:
         self._ewma: np.ndarray | None = None  # (L, E) distributions
         self._steps_since_ref = 0
         self.last_divergence = np.zeros(num_layers)
+        self._calib_samples: list[float] = []
+        self._auto_threshold: float | None = None
 
     def set_reference(self, counts: np.ndarray) -> None:
         """Anchor the reference to the (L, E) summed/mean counts the current
-        placement was planned from; resets the EWMA onto it."""
+        placement was planned from; resets the EWMA onto it (and, under
+        auto-calibration, restarts the stationary-band measurement — the
+        replan may have been triggered by a workload change, so the old
+        band is stale)."""
         counts = np.asarray(counts, dtype=np.float64)
         if counts.shape != (self.num_layers, self.num_experts):
             raise ValueError(
@@ -93,6 +119,16 @@ class LoadDriftDetector:
         self._ewma = self._ref.copy()
         self._steps_since_ref = 0
         self.last_divergence = np.zeros(self.num_layers)
+        self._calib_samples = []
+        self._auto_threshold = None
+
+    @property
+    def effective_threshold(self) -> float | None:
+        """The firing threshold in force: the configured constant, or the
+        auto-calibrated one (``None`` while still calibrating)."""
+        if self.config.threshold is not None:
+            return self.config.threshold
+        return self._auto_threshold
 
     @property
     def armed(self) -> bool:
@@ -121,9 +157,28 @@ class LoadDriftDetector:
         self.last_divergence = self.divergence()
         if self._steps_since_ref < self.config.min_steps:
             return False
+        level = float(self.last_divergence.mean())
+        threshold = self.effective_threshold
+        if threshold is None:
+            # auto-calibration: the post-warm-up window is assumed
+            # stationary (the controller just planned on it), so its
+            # divergences *are* the stationary band — estimate the
+            # threshold from their upper quantile
+            self._calib_samples.append(level)
+            if len(self._calib_samples) >= self.config.calib_steps:
+                band = float(
+                    np.quantile(
+                        self._calib_samples, self.config.calib_quantile
+                    )
+                )
+                self._auto_threshold = max(
+                    self.config.calib_margin * band,
+                    self.config.threshold_floor,
+                )
+            return False
         # fire on the layer *mean*: bursts are layer-independent, a task-mix
         # change is common-mode across layers
-        return bool(self.last_divergence.mean() > self.config.threshold)
+        return bool(level > threshold)
 
 
 class VariabilityDriftDetector:

@@ -23,6 +23,26 @@ MigrationCostModel` (expert-weight bytes over the interconnect plus a fixed
 batch overhead) and the engine/replay charges that cost to the step's
 simulated latency — migration is never free, and the controller's
 ``migration_net_benefit`` go/no-go uses the same model.
+
+**Replicated layouts** (:mod:`repro.replication`) change the move algebra:
+two replicated layouts over the same slot count differ by an arbitrary
+*reassignment*, not a permutation — copy counts grow and shrink, so a slot's
+new expert may have to be **broadcast** from another slot (one weight-row
+rewrite — cheaper than a swap's two) rather than exchanged.
+:func:`plan_replica_migration` schedules these one-row copies into budgeted
+batches with two invariants: within a batch every source row is read from
+the *pre-batch* pool (the data plane applies a batch as one parallel row
+gather), and at every batch boundary every virtual expert still has at
+least one live copy — mid-migration the layout is always a valid
+:class:`~repro.replication.types.ReplicatedPlacement` the router tables can
+be rebuilt from. Pure relocation cycles that exceed the per-batch budget
+fall back to the transposition trick above.
+
+**Budget-aware truncation**: when the controller's net-benefit gate rejects
+a *full* migration, :func:`migration_cycles` exposes the delta's per-cycle
+structure so the controller can score each cycle's contribution
+independently and migrate only the profitable prefix (see
+``OnlineController._replan``).
 """
 from __future__ import annotations
 
@@ -38,7 +58,14 @@ __all__ = [
     "SlotSwap",
     "MigrationStep",
     "MigrationSchedule",
+    "MigrationCycle",
+    "ReplicaMove",
+    "ReplicaMigrationStep",
+    "ReplicaMigrationSchedule",
     "plan_migration",
+    "migration_cycles",
+    "plan_replica_migration",
+    "replica_source_permutation",
     "swap_permutation",
 ]
 
@@ -99,6 +126,17 @@ class MigrationStep:
             out.setdefault(s.layer, []).append((s.slot_a, s.slot_b))
         return out
 
+    def sources_by_layer(self, num_slots: int) -> dict[int, np.ndarray]:
+        """Per-layer (S,) row-source maps: ``new_rows = old_rows[src]``.
+
+        The uniform data-plane interface shared with
+        :class:`ReplicaMigrationStep` — the engine mirrors any batch type
+        as one parallel row gather per touched layer."""
+        return {
+            layer: swap_permutation(num_slots, swaps)
+            for layer, swaps in self.swaps_by_layer().items()
+        }
+
 
 @dataclasses.dataclass
 class MigrationSchedule:
@@ -116,16 +154,32 @@ class MigrationSchedule:
         return sum(cost_model.cost(s.num_moves) for s in self.steps)
 
 
-def _cycle_swaps(rel: np.ndarray, layer: int) -> list[SlotSwap]:
-    """Transposition sequence realising one layer's relative permutation.
+@dataclasses.dataclass(frozen=True)
+class MigrationCycle:
+    """One cycle of a layer's relative slot permutation.
 
-    Order matters *within* a cycle (each transposition assumes the previous
-    ones were applied); the emitted sequence preserves that order, and the
-    packer below never reorders swaps.
+    ``slots`` is the cycle in traversal order; ``swaps`` the transposition
+    sequence realising it (``len(slots) − 1`` swaps, 2 row rewrites each).
+    Cycles are the natural unit of budget-aware truncation: each is
+    independently applicable (applying any subset of a permutation's cycles
+    yields a valid slot layout), so a rejected full migration can fall back
+    to its profitable prefix.
     """
+
+    layer: int
+    slots: tuple[int, ...]
+    swaps: tuple[SlotSwap, ...]
+
+    @property
+    def num_moves(self) -> int:
+        return 2 * len(self.swaps)
+
+
+def _rel_cycles(rel: np.ndarray, layer: int) -> list[MigrationCycle]:
+    """Cycle decomposition of one layer's relative permutation."""
     n = len(rel)
     seen = np.zeros(n, dtype=bool)
-    swaps: list[SlotSwap] = []
+    cycles: list[MigrationCycle] = []
     for start in range(n):
         if seen[start] or rel[start] == start:
             seen[start] = True
@@ -138,9 +192,40 @@ def _cycle_swaps(rel: np.ndarray, layer: int) -> list[SlotSwap]:
             seen[nxt] = True
             nxt = int(rel[nxt])
         # (s0,s1),(s1,s2),…: after each swap, slot s_i holds its target row
-        for a, b in zip(cycle[:-1], cycle[1:]):
-            swaps.append(SlotSwap(layer, a, b))
-    return swaps
+        swaps = tuple(
+            SlotSwap(layer, a, b) for a, b in zip(cycle[:-1], cycle[1:])
+        )
+        cycles.append(MigrationCycle(layer, tuple(cycle), swaps))
+    return cycles
+
+
+def _cycle_swaps(rel: np.ndarray, layer: int) -> list[SlotSwap]:
+    """Transposition sequence realising one layer's relative permutation.
+
+    Order matters *within* a cycle (each transposition assumes the previous
+    ones were applied); the emitted sequence preserves that order, and the
+    packer below never reorders swaps.
+    """
+    return [s for c in _rel_cycles(rel, layer) for s in c.swaps]
+
+
+def migration_cycles(current: list, target: list) -> list[MigrationCycle]:
+    """Per-layer cycle decomposition of the migration delta.
+
+    ``current``/``target`` as in :func:`plan_migration`. The controller's
+    budget-aware truncation scores these independently: a cycle's swaps
+    applied to the live layout move exactly the cycle's slots and leave
+    every other slot untouched.
+    """
+    if len(current) != len(target):
+        raise ValueError("need matching per-layer placement lists")
+    out: list[MigrationCycle] = []
+    for layer, (cur, tgt) in enumerate(zip(current, target)):
+        rel = Placement.slot_relative_permutation(
+            _as_slot_layout(cur), _as_slot_layout(tgt)
+        )
+        out.extend(_rel_cycles(rel, layer))
+    return out
 
 
 def _as_slot_layout(p) -> np.ndarray:
@@ -191,3 +276,278 @@ def swap_permutation(num_slots: int, swaps: list[tuple[int, int]]) -> np.ndarray
     for a, b in swaps:
         p[[a, b]] = p[[b, a]]
     return p
+
+
+# ---------------------------------------------------------------------------
+# Replicated layouts: add/drop/relocate copies with one-row broadcast moves
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaMove:
+    """Overwrite one layer's slot ``dst_slot`` with the row at ``src_slot``.
+
+    One expert-weight row rewrite — a replica *add* (instantiate a copy) or
+    *drop* (retarget a replica slot to a different expert) costs one move,
+    half a swap's price."""
+
+    layer: int
+    dst_slot: int
+    src_slot: int
+
+
+@dataclasses.dataclass
+class ReplicaMigrationStep:
+    """One engine step's batch of row broadcasts (parallel semantics).
+
+    Every ``src_slot`` refers to the pool *before* the batch: the data
+    plane applies the batch as one row gather per layer, so moves within a
+    batch never observe each other — which also makes a two-move entry
+    ``{a←b, b←a}`` an atomic in-batch swap."""
+
+    moves: list[ReplicaMove]
+
+    @property
+    def num_moves(self) -> int:
+        return len(self.moves)
+
+    def cross_device_moves(self, slots_per_device: int) -> int:
+        """Moves whose source row lives on a different device than the
+        destination slot — the only ones that ship bytes over the
+        interconnect (a same-device source is a local HBM row copy)."""
+        return sum(
+            1
+            for m in self.moves
+            if m.dst_slot // slots_per_device != m.src_slot // slots_per_device
+        )
+
+    def sources_by_layer(self, num_slots: int) -> dict[int, np.ndarray]:
+        """Per-layer (S,) row-source maps: ``new_rows = old_rows[src]``."""
+        out: dict[int, np.ndarray] = {}
+        for m in self.moves:
+            arr = out.setdefault(
+                m.layer, np.arange(num_slots, dtype=np.int32)
+            )
+            arr[m.dst_slot] = m.src_slot
+        return out
+
+
+@dataclasses.dataclass
+class ReplicaMigrationSchedule:
+    steps: list[ReplicaMigrationStep]
+
+    @property
+    def total_moves(self) -> int:
+        return sum(s.num_moves for s in self.steps)
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    def total_cost(
+        self,
+        cost_model: MigrationCostModel,
+        slots_per_device: int | None = None,
+    ) -> float:
+        """Interconnect cost of the schedule. With ``slots_per_device``,
+        only cross-device moves are priced (same-device row copies are
+        local HBM traffic) — matching ``replica_fetch_rows``' one-shot
+        pricing so online and one-shot replicated migrations stay
+        comparable. Without it, every move is priced (upper bound)."""
+        if slots_per_device is None:
+            return sum(cost_model.cost(s.num_moves) for s in self.steps)
+        return sum(
+            cost_model.cost(s.cross_device_moves(slots_per_device))
+            for s in self.steps
+        )
+
+
+def _as_layout(p) -> np.ndarray:
+    """Slot→expert layout from a raw array or a (Replicated)Placement."""
+    if hasattr(p, "slot_layout"):
+        return p.slot_layout()
+    if isinstance(p, Placement):
+        return p.slot_to_expert()
+    return np.asarray(p, dtype=np.int32)
+
+
+def _layer_replica_groups(
+    cur: np.ndarray, tgt: np.ndarray, layer: int, budget: int
+) -> list[list[ReplicaMove]]:
+    """Ordered atomic move groups transforming ``cur`` into ``tgt``.
+
+    Strategy: every slot whose expert changes gets one source — a *stable*
+    slot of the target expert when one exists (a pure broadcast, no
+    ordering constraint), else a slot that is itself being overwritten
+    (creating a read-before-write edge). The edges form a functional graph
+    (out-degree ≤ 1): tree/chain nodes are emitted readers-first so
+    sequential batch packing keeps each read no later than the write of its
+    source; cycles are emitted as one atomic group when they fit the batch
+    budget (parallel gather resolves them at once) and as the classic
+    transposition sequence otherwise.
+    """
+    S = len(cur)
+    pending = [s for s in range(S) if cur[s] != tgt[s]]
+    if not pending:
+        return []
+    stable_of: dict[int, int] = {}
+    for s in range(S):
+        if cur[s] == tgt[s]:
+            stable_of.setdefault(int(cur[s]), s)
+    overwritten = set(pending)
+    src: dict[int, int] = {}
+    for s in pending:
+        e = int(tgt[s])
+        if e in stable_of:
+            src[s] = stable_of[e]
+            continue
+        cands = np.nonzero(cur == e)[0]
+        if len(cands) == 0:
+            raise ValueError(
+                f"target expert {e} has no copy in the current layout"
+            )
+        free = [int(c) for c in cands if int(c) not in overwritten]
+        src[s] = free[0] if free else int(cands[0])
+
+    # functional graph over pending slots: edge s → src[s] when the source
+    # is itself overwritten (read must happen no later than that write)
+    nxt = {
+        s: src[s] if src[s] in overwritten and src[s] != s else None
+        for s in pending
+    }
+    # peel cycles (every node has out-degree ≤ 1)
+    on_cycle: set[int] = set()
+    state: dict[int, int] = {}  # 0 in-progress, 1 done
+    for s in pending:
+        if s in state:
+            continue
+        path = []
+        v = s
+        while v is not None and v not in state:
+            state[v] = 0
+            path.append(v)
+            v = nxt[v]
+        if v is not None and state.get(v) == 0:
+            # found a new cycle: v..end of path
+            cyc = path[path.index(v):]
+            on_cycle.update(cyc)
+        for u in path:
+            state[u] = 1
+
+    # tree/chain nodes: depth = steps until leaving pending or hitting a
+    # cycle; emit deepest-first so every reader precedes its source's write
+    depth: dict[int, int] = {}
+
+    def _depth(s: int) -> int:
+        if s in depth:
+            return depth[s]
+        n = nxt[s]
+        d = 1 if (n is None or n in on_cycle) else 1 + _depth(n)
+        depth[s] = d
+        return d
+
+    groups: list[list[ReplicaMove]] = []
+    tree_nodes = [s for s in pending if s not in on_cycle]
+    for s in sorted(tree_nodes, key=lambda s: -_depth(s)):
+        groups.append([ReplicaMove(layer, s, src[s])])
+
+    # cycles: atomic parallel group when it fits the budget, else the
+    # transposition sequence (atomic two-move swap groups)
+    seen: set[int] = set()
+    for s in sorted(on_cycle):
+        if s in seen:
+            continue
+        cyc = [s]
+        seen.add(s)
+        v = nxt[s]
+        while v != s:
+            cyc.append(v)
+            seen.add(v)
+            v = nxt[v]
+        if len(cyc) <= budget:
+            groups.append([ReplicaMove(layer, u, src[u]) for u in cyc])
+        else:
+            # rel restricted to the cycle: row ending in u comes from src[u]
+            order = list(cyc)
+            for a, b in zip(order[:-1], order[1:]):
+                groups.append(
+                    [ReplicaMove(layer, a, b), ReplicaMove(layer, b, a)]
+                )
+    return groups
+
+
+def plan_replica_migration(
+    current: list,
+    target: list,
+    config: MigrationConfig = MigrationConfig(),
+) -> ReplicaMigrationSchedule:
+    """Budgeted one-row broadcast schedule between two replicated layouts.
+
+    ``current``/``target`` are per-layer slot→expert layouts (raw arrays or
+    :class:`~repro.replication.types.ReplicatedPlacement` /
+    :class:`~repro.core.types.Placement` objects) over the **same** slot
+    count. Applying every batch in order — each as a parallel row gather
+    from the pre-batch pool — transforms ``current`` into ``target``
+    exactly; at every batch boundary each virtual expert keeps at least one
+    live copy, so the layout stays a valid placement throughout.
+    """
+    if len(current) != len(target):
+        raise ValueError("need matching per-layer placement lists")
+    budget = config.max_moves_per_step
+    groups: list[list[ReplicaMove]] = []
+    for layer, (cur, tgt) in enumerate(zip(current, target)):
+        cur, tgt = _as_layout(cur), _as_layout(tgt)
+        if cur.shape != tgt.shape:
+            raise ValueError("layouts must cover the same slots")
+        groups.extend(_layer_replica_groups(cur, tgt, layer, budget))
+    steps: list[ReplicaMigrationStep] = []
+    batch: list[ReplicaMove] = []
+    batch_dsts: set[tuple[int, int]] = set()
+    for group in groups:
+        if len(group) > budget:
+            raise ValueError(
+                f"atomic move group of {len(group)} exceeds the per-step "
+                f"budget {budget}"
+            )
+        # a batch is one parallel gather from the pre-batch pool, so a
+        # group that would *read* or *re-write* a slot already written in
+        # this batch (a long cycle's sequential transpositions) must wait
+        # for the next batch
+        touched = {
+            (m.layer, m.dst_slot) for m in group
+        } | {(m.layer, m.src_slot) for m in group}
+        if batch and (
+            len(batch) + len(group) > budget or touched & batch_dsts
+        ):
+            steps.append(ReplicaMigrationStep(batch))
+            batch, batch_dsts = [], set()
+        batch.extend(group)
+        batch_dsts |= {(m.layer, m.dst_slot) for m in group}
+    if batch:
+        steps.append(ReplicaMigrationStep(batch))
+    return ReplicaMigrationSchedule(steps)
+
+
+def replica_source_permutation(
+    cur_layout: np.ndarray, tgt_layout: np.ndarray
+) -> np.ndarray:
+    """(S,) one-shot row-source map: ``new_rows = old_rows[src]``.
+
+    The unbudgeted analogue of a full ``apply_placement``: every slot whose
+    expert changes reads any current copy of its target expert (lowest slot
+    id — deterministic) in one parallel gather.
+    """
+    cur = np.asarray(cur_layout, dtype=np.int32)
+    tgt = np.asarray(tgt_layout, dtype=np.int32)
+    if cur.shape != tgt.shape:
+        raise ValueError("layouts must cover the same slots")
+    src = np.arange(len(cur), dtype=np.int32)
+    for s in range(len(cur)):
+        if cur[s] != tgt[s]:
+            cands = np.nonzero(cur == tgt[s])[0]
+            if len(cands) == 0:
+                raise ValueError(
+                    f"target expert {int(tgt[s])} has no copy in the "
+                    "current layout"
+                )
+            src[s] = int(cands[0])
+    return src

@@ -20,7 +20,6 @@ import dataclasses
 import numpy as np
 
 from ..core.gem import GEMPlanner
-from ..core.score import step_cost_matrix
 from ..core.types import GEMConfig, VariabilityProfile
 from .controller import OnlineConfig, OnlineController
 
@@ -155,9 +154,9 @@ def replay_online(
     for t in range(T):
         counts = scenario.counts[t]
         true_profile = scenario.true_profile_at(t)
-        mat = step_cost_matrix(
-            counts, true_profile, controller.current_placements
-        )
+        # replica-split aware: in replicated mode the per-device loads come
+        # from the speed-proportional shares, not a one-hot placement
+        mat = controller.cost_matrix(counts, true_profile)
         observed = mat.sum(axis=0)  # (G,) per-device time, summed over layers
         lat = float(mat.max(axis=1).sum()) + scenario.other_time_per_step
         decision = controller.observe_step(counts, observed)

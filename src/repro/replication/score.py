@@ -1,0 +1,101 @@
+"""Eq. 1 scoring generalized to multi-copy experts.
+
+Under a :class:`~repro.replication.types.ReplicatedPlacement` an expert's
+step-``t`` token count ``n_te`` does not land on one device: it splits
+across the expert's copies by their (speed-proportional) shares. The
+per-device load becomes
+
+    n_g(M, t) = Σ_e  counts[t, e] · W[e, g],      W = rp.share_matrix()
+
+and the straggler score keeps its Eq.-1 form ``Σ_t max_g C_g(n_g)``. At
+replica budget 0, ``W`` is the placement one-hot and every function here
+reduces exactly to its single-copy counterpart in :mod:`repro.core.score`.
+
+``replica_fetch_rows`` prices a pool (re)install: the number of expert-
+weight rows a device must fetch over the interconnect is the per-device
+multiset difference between the old and new slot contents — a replica add
+is one row broadcast, cheaper than the two row rewrites of a swap.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.types import ExpertTrace, VariabilityProfile
+from .types import ReplicatedPlacement
+
+__all__ = [
+    "replicated_per_device_tokens",
+    "replicated_per_step_latency",
+    "replicated_score",
+    "replicated_step_cost_matrix",
+    "replica_fetch_rows",
+]
+
+
+def replicated_per_device_tokens(
+    counts: np.ndarray, rp: ReplicatedPlacement
+) -> np.ndarray:
+    """counts (..., E) → (..., G) per-device token loads under the split."""
+    return np.asarray(counts, dtype=np.float64) @ rp.share_matrix()
+
+
+def replicated_per_step_latency(
+    trace: ExpertTrace, profile: VariabilityProfile, rp: ReplicatedPlacement
+) -> np.ndarray:
+    """(T,) straggler latency of each trace step under ``rp``."""
+    tokens = replicated_per_device_tokens(trace.counts, rp)  # (T, G)
+    return profile.cost_all(tokens).max(axis=1)
+
+
+def replicated_score(
+    trace: ExpertTrace, profile: VariabilityProfile, rp: ReplicatedPlacement
+) -> float:
+    """S(M) with speed-proportional replica splitting (Eq. 1 generalized)."""
+    return float(replicated_per_step_latency(trace, profile, rp).sum())
+
+
+def replicated_step_cost_matrix(
+    counts: np.ndarray,
+    profile: VariabilityProfile,
+    rplacements: list[ReplicatedPlacement],
+) -> np.ndarray:
+    """One engine step's (L, G) per-layer per-device MoE latencies.
+
+    The replicated analogue of :func:`repro.core.score.step_cost_matrix`:
+    ``counts`` (L, E) per-layer per-expert token counts of a single step.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    L = counts.shape[0]
+    if L != len(rplacements):
+        raise ValueError("need one replicated placement per MoE layer")
+    G = profile.num_devices
+    tokens = np.empty((L, G), dtype=np.float64)
+    for layer, rp in enumerate(rplacements):
+        tokens[layer] = counts[layer] @ rp.share_matrix()
+    return profile.cost_all(tokens)
+
+
+def replica_fetch_rows(
+    old: ReplicatedPlacement, new: ReplicatedPlacement
+) -> int:
+    """Expert-weight rows fetched over the interconnect by a pool install.
+
+    Per device: rows whose expert is not already resident there cost one
+    fetch each (multiset difference — extra copies of an expert a device
+    already holds are local row copies, not interconnect traffic).
+    """
+    if old.num_devices != new.num_devices:
+        raise ValueError("placements must cover the same devices")
+    E = max(old.num_experts, new.num_experts)
+    moves = 0
+    for g in range(old.num_devices):
+        old_slots = old.slot_to_expert[
+            g * old.slots_per_device : (g + 1) * old.slots_per_device
+        ]
+        new_slots = new.slot_to_expert[
+            g * new.slots_per_device : (g + 1) * new.slots_per_device
+        ]
+        have = np.bincount(old_slots, minlength=E)
+        want = np.bincount(new_slots, minlength=E)
+        moves += int(((want > 0) & (have == 0)).sum())
+    return moves

@@ -59,7 +59,14 @@ from ..online import (
     OnlineConfig,
     OnlineController,
 )
-from ..online.migration import swap_permutation
+from ..online.migration import replica_source_permutation
+from ..replication import (
+    ReplicatedPlacement,
+    ReplicationConfig,
+    plan_replicated_layers,
+    replica_fetch_rows,
+    replicated_step_cost_matrix,
+)
 from ..sharding.policy import ShardingPolicy
 from .sampling import sample
 from .scheduler import Request, Scheduler
@@ -79,6 +86,12 @@ class EngineConfig:
     other_time_per_step: float = 0.0  # simulated non-MoE per-step latency
     moe_backend: str | None = None  # override ModelConfig.moe_backend for
     # the engine's data plane (einsum | pallas | dense_ref)
+    # --- expert replication plane (repro.replication) ---
+    # replica_slots>0 installs a replicated weight pool (E_v + G·slots rows
+    # per layer) and replica-split router tables; plans come from the
+    # replication-aware planner and step costs use the speed-proportional
+    # split. Requires the gem policy and an attached profile.
+    replication: ReplicationConfig = ReplicationConfig()
     # --- online adaptation plane (repro.online) ---
     online: bool = False  # drift-triggered replans + budgeted partial swaps
     # instead of the one-shot step-counter replan above
@@ -109,6 +122,17 @@ class ServingEngine:
                 "VariabilityProfile — without them no adaptation plane can "
                 "run and the engine would silently never replan"
             )
+        if engine_config.replication.replica_slots > 0 and (
+            profile is None
+            or not config.is_moe
+            or engine_config.placement_policy != "gem"
+        ):
+            raise ValueError(
+                "EngineConfig(replication.replica_slots>0) needs a MoE "
+                "config, an attached VariabilityProfile, and the gem "
+                "placement policy — the replica split is speed-proportional "
+                "and only the gem planner is replication-aware"
+            )
         self.params = params
         self.config = config
         self.policy = policy
@@ -127,6 +151,7 @@ class ServingEngine:
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
+        self.current_rplacements: list[ReplicatedPlacement] | None = None
         if profile is not None:
             # Scheduler admission tracks the profiled fleet: the slowest
             # device's relative throughput scales the prefill token budget
@@ -149,6 +174,18 @@ class ServingEngine:
             self.current_placements = [
                 Placement.linear(Ev, nd) for _ in range(config.num_layers)
             ]
+            if engine_config.replication.replica_slots > 0:
+                # install the replicated weight pool up front (linear layout
+                # padded with per-device local copies) so the slot count is
+                # a run constant and online migrations never resize it
+                self.current_rplacements = [
+                    ReplicatedPlacement.linear(
+                        Ev, nd, engine_config.replication.replica_slots,
+                        profile=profile, config=engine_config.replication,
+                    )
+                    for _ in range(config.num_layers)
+                ]
+                self._install_replicated_pool(self.current_rplacements)
             # one cost model for both replan paths: the online plane prices
             # its batches with it, and the one-shot swap charges the same
             # model so the two modes' latency reports stay comparable
@@ -166,10 +203,12 @@ class ServingEngine:
                         online=True,
                         drift=engine_config.drift,
                         migration=engine_config.migration,
+                        replication=engine_config.replication,
                         replan_cooldown=engine_config.replan_cooldown,
                         payback_horizon=engine_config.payback_horizon,
                     ),
                     initial_placements=self.current_placements,
+                    initial_rplacements=self.current_rplacements,
                 )
 
         # simulated latency accounting
@@ -255,6 +294,42 @@ class ServingEngine:
         req.start_step = self.step_count
 
     # ------------------------------------------------------------------
+    def _replica_tables(self, rplacements) -> jnp.ndarray:
+        """(L, E_v, P) replica-split router tables for the data plane."""
+        P = self.ecfg.replication.pattern_period
+        return jnp.asarray(
+            np.stack([rp.replica_table(P) for rp in rplacements])
+        )
+
+    def _install_replicated_pool(self, rplacements) -> None:
+        """Expand the virtual-ordered expert weights into the replicated
+        slot pool: row ``s`` ← virtual expert ``slot_to_expert[s]`` (the
+        same gather ``apply_placement`` performs, with repeated indices).
+        Only valid while the pool is still in virtual order (engine init)."""
+        s2e = jnp.asarray(
+            np.stack([rp.slot_to_expert for rp in rplacements])
+        )
+        new_blocks = dict(self.params["blocks"])
+        new_blocks["moe"] = apply_placement(self.params["blocks"]["moe"], s2e)
+        self.params = {**self.params, "blocks": new_blocks}
+        self.placements = self._replica_tables(rplacements)
+
+    def _retarget_replicated_pool(self, rplacements) -> None:
+        """Move the live replicated pool to new layouts in one parallel row
+        gather per layer (each target slot reads any current copy of its
+        expert); the caller prices the install via ``replica_fetch_rows``."""
+        assert self.current_rplacements is not None
+        srcs = [
+            replica_source_permutation(cur.slot_layout(), new.slot_layout())
+            for cur, new in zip(self.current_rplacements, rplacements)
+        ]
+        new_blocks = dict(self.params["blocks"])
+        new_blocks["moe"] = apply_placement(
+            self.params["blocks"]["moe"], jnp.asarray(np.stack(srcs))
+        )
+        self.params = {**self.params, "blocks": new_blocks}
+        self.placements = self._replica_tables(rplacements)
+
     def set_true_profile(self, profile: VariabilityProfile | None) -> None:
         """Inject the *actual* fleet behaviour when it departs the believed
         profile (mid-run power cap, thermal throttling). Simulated latencies
@@ -269,9 +344,16 @@ class ServingEngine:
         return self.true_profile if self.true_profile is not None else self.profile
 
     def _step_cost_matrix(self, counts_virt: np.ndarray) -> np.ndarray | None:
-        """(L, G) per-layer per-device latencies of this step, ground truth."""
+        """(L, G) per-layer per-device latencies of this step, ground truth.
+
+        Replica-aware: with a replicated pool the per-device loads come from
+        the speed-proportional split, not a one-hot placement."""
         if self._sim_profile is None or self.current_placements is None:
             return None
+        if self.current_rplacements is not None:
+            return replicated_step_cost_matrix(
+                counts_virt, self._sim_profile, self.current_rplacements
+            )
         return step_cost_matrix(
             counts_virt, self._sim_profile, self.current_placements
         )
@@ -308,6 +390,26 @@ class ServingEngine:
                 )
                 for c in self.planner.collectors
             ]
+        elif self.ecfg.replication.replica_slots > 0:
+            # replication-aware plan: new copies of the hot consistent
+            # experts land as one-row broadcasts; price the rows each
+            # device must fetch over the interconnect
+            results = plan_replicated_layers(
+                self.planner, self.ecfg.replication
+            )
+            rplacements = [r.placement for r in results]
+            moves = sum(
+                replica_fetch_rows(cur, new)
+                for cur, new in zip(self.current_rplacements, rplacements)
+            )
+            self._retarget_replicated_pool(rplacements)
+            swap_cost = self._cost_model.cost(moves)
+            if self.sim_step_latencies:
+                self.sim_step_latencies[-1] += swap_cost
+            self.sim_time += swap_cost
+            self.current_rplacements = rplacements
+            self.placement_applied = True
+            return
         else:
             placements = self.planner.plan().placements
         # Step-4: permute expert weights + swap router remap tables
@@ -356,23 +458,44 @@ class ServingEngine:
         if decision.migration_step is not None:
             new_blocks = dict(self.params["blocks"])
             moe = dict(new_blocks["moe"])
-            for layer, swaps in decision.migration_step.swaps_by_layer().items():
-                Ev = self.config.num_experts * self.config.expert_tp
-                moe = apply_layer_permutation(
-                    moe, layer, swap_permutation(Ev, swaps)
-                )
+            # both batch types reduce to per-layer row-source maps applied
+            # as one parallel gather (a swap is {a←b, b←a}; a replica
+            # add/drop is a single one-row broadcast)
+            sources = decision.migration_step.sources_by_layer(
+                self.controller.num_slots
+            )
+            for layer, src in sources.items():
+                moe = apply_layer_permutation(moe, layer, src)
             new_blocks["moe"] = moe
             self.params = {**self.params, "blocks": new_blocks}
             # router remap tables follow the physical layout atomically
             self.placements = jnp.asarray(
                 self.controller.expert_to_slot_tables()
             )
-            self.current_placements = list(self.controller.current_placements)
+            if self.controller.replicated:
+                self.current_rplacements = list(
+                    self.controller.current_rplacements
+                )
+            else:
+                self.current_placements = list(
+                    self.controller.current_placements
+                )
         if decision.profile_rescaled:
             self.profile = self.controller.profile
             self.scheduler.set_slow_device_factor(
                 float(self.profile.relative_speed().min())
             )
+            if self.controller.replicated:
+                # the repair recomputed every replicated expert's speed
+                # shares: rebuild the split tables NOW, not at the next
+                # migration batch — otherwise the data plane keeps routing
+                # by the stale shares while step costs assume the new ones
+                self.placements = jnp.asarray(
+                    self.controller.expert_to_slot_tables()
+                )
+                self.current_rplacements = list(
+                    self.controller.current_rplacements
+                )
         # "applied" must mean a planned placement actually reached the data
         # plane (a 0-move schedule counts: the plan IS the live placement) —
         # not merely that a plan existed and its migration was gate-skipped

@@ -111,10 +111,10 @@ def test_mesh_parity_granite_ratio():
 
 
 def test_mesh_parity_indivisible_experts_pads_dead_slots():
-    """E_v % model-axis ≠ 0: the einsum path replicates the expert dim
-    (warned); the pallas path now *pads E_v to the axis with dead slots*
-    (its own one-time warning) so the per-shard kernels stay sharded —
-    and both still agree bit-for-bit with each other."""
+    """E_v % model-axis ≠ 0: both paths now *pad E_v to the axis with dead
+    slots* (one-time warnings each) so the expert FFN stays sharded — the
+    einsum path mirrors the pallas kernels' padding instead of replicating
+    the expert dim — and both still agree with each other."""
     mesh, policy = _mesh_policy()
     cfg = dataclasses.replace(
         get_smoke_config("granite-moe-3b-a800m"),
@@ -123,9 +123,9 @@ def test_mesh_parity_indivisible_experts_pads_dead_slots():
     assert (cfg.num_experts * cfg.expert_tp) % 4 != 0
     lp, x, table = _setup(cfg, policy, seed=3)
     with mesh:
-        with pytest.warns(RuntimeWarning, match="replicates the expert dim"):
+        with pytest.warns(RuntimeWarning, match="GSPMD einsums stay sharded"):
             y_ref, _ = moe_layer(x, lp, table, cfg, policy, backend="einsum")
-        with pytest.warns(RuntimeWarning, match="padding the expert dim"):
+        with pytest.warns(RuntimeWarning, match="per-shard kernels"):
             y, _ = moe_layer(x, lp, table, cfg, policy, backend="pallas")
         # both warnings are one-time: a second pallas call stays silent
         with warnings.catch_warnings():

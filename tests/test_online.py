@@ -556,3 +556,152 @@ def test_engine_online_mode_skips_step_counter_replan():
     # the legacy path would have set placement_applied via _maybe_replan
     # before the collectors fill; online leaves it to the controller
     assert eng.planner is not None
+
+
+# ---------------------------------------------------------------------------
+# drift threshold auto-calibration (DriftConfig.threshold=None)
+# ---------------------------------------------------------------------------
+
+def test_drift_threshold_auto_calibration():
+    """threshold=None estimates the stationary band from the warm-up window
+    quantiles: no fire on stationary traffic, fire on an identity shift —
+    and the auto threshold lands near the hand-calibrated constant (~3 for
+    this bursty mix)."""
+    cfg = DriftConfig(threshold=None, min_steps=4, calib_steps=24)
+    det = LoadDriftDetector(L, E, cfg)
+    a = _counts(300)
+    det.set_reference(a[:16].sum(axis=0))
+    assert det.effective_threshold is None  # still calibrating
+    fired_stationary = any(det.update(a[t]) for t in range(16, 300))
+    assert not fired_stationary, "stationary workload must not fire"
+    thr = det.effective_threshold
+    assert thr is not None and 1.0 < thr < 6.0
+    b = _counts(96, seed=2, identity_seed=77)
+    assert any(det.update(b[t]) for t in range(96)), "shift must fire"
+
+
+def test_drift_auto_calibration_resets_with_reference():
+    cfg = DriftConfig(threshold=None, min_steps=2, calib_steps=4)
+    det = LoadDriftDetector(L, E, cfg)
+    a = _counts(32)
+    det.set_reference(a[:8].sum(axis=0))
+    for t in range(8):
+        det.update(a[t])
+    assert det.effective_threshold is not None
+    det.set_reference(a[:8].sum(axis=0))  # replan → re-calibrate
+    assert det.effective_threshold is None
+
+
+def test_drift_auto_calibration_config_validation():
+    with pytest.raises(ValueError, match="calib_steps"):
+        DriftConfig(threshold=None, calib_steps=1)
+    with pytest.raises(ValueError, match="calib_margin"):
+        DriftConfig(threshold=None, calib_margin=0.9)
+
+
+# ---------------------------------------------------------------------------
+# budget-aware plan truncation (migrate the profitable cycle prefix)
+# ---------------------------------------------------------------------------
+
+def test_migration_cycles_decomposition():
+    from repro.online import migration_cycles
+
+    cur = Placement(np.asarray([0, 0, 1, 1, 2, 2, 3, 3], np.int32), G)
+    tgt = cur.swap(1, 6)  # one 2-cycle
+    cycles = migration_cycles([cur], [tgt])
+    assert len(cycles) == 1
+    assert len(cycles[0].slots) == 2 and cycles[0].num_moves == 2
+    # applying the cycle's swaps realises the target layout
+    lay = cur.slot_to_expert()
+    for sw in cycles[0].swaps:
+        lay[[sw.slot_a, sw.slot_b]] = lay[[sw.slot_b, sw.slot_a]]
+    np.testing.assert_array_equal(lay, tgt.slot_to_expert())
+
+
+def test_controller_truncates_rejected_migration():
+    """When the full migration fails the net-benefit gate, the profitable
+    cycle prefix must still migrate (ROADMAP: budget-aware plan truncation)
+    instead of dropping the whole plan."""
+    profile = _profile(setup_speeds("high", G))
+    planner = GEMPlanner(E, G, L, GEMConfig(trace_length=16, num_restarts=4))
+    planner.set_profile(profile)
+    # expensive enough that the *full* delta never amortises, cheap enough
+    # that a high-value cycle does
+    ocfg = OnlineConfig(
+        policy="gem", online=True,
+        drift=DriftConfig(threshold=3.0, min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=2, base_overhead=0.0),
+        payback_horizon=2_000,
+    )
+    ctl = OnlineController(planner, MigrationCostModel(expert_bytes=2.2e9), ocfg)
+    counts = _counts(96)
+    truncated = False
+    for t in range(96):
+        mat = step_cost_matrix(counts[t], profile, ctl.current_placements)
+        d = ctl.observe_step(counts[t], mat.sum(axis=0))
+        truncated = truncated or d.migration_truncated
+    assert ctl.planned
+    recs = [r for r in ctl.replans if r.get("truncated")]
+    assert truncated and recs, "profitable prefix must migrate"
+    assert all(r["applied"] for r in recs)
+    assert 0 < recs[0]["cycles_kept"] <= recs[0]["cycles_total"]
+    assert ctl.total_moves > 0 and ctl.max_moves_in_step <= 2
+
+
+def test_controller_truncation_off_preserves_skip():
+    profile = _profile(setup_speeds("high", G))
+    planner = GEMPlanner(E, G, L, GEMConfig(trace_length=16, num_restarts=4))
+    planner.set_profile(profile)
+    ocfg = OnlineConfig(
+        policy="gem", online=True,
+        drift=DriftConfig(threshold=3.0, min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=2, base_overhead=0.0),
+        payback_horizon=2_000, truncate_rejected=False,
+    )
+    ctl = OnlineController(planner, MigrationCostModel(expert_bytes=2.2e9), ocfg)
+    counts = _counts(48)
+    for t in range(48):
+        mat = step_cost_matrix(counts[t], profile, ctl.current_placements)
+        ctl.observe_step(counts[t], mat.sum(axis=0))
+    assert ctl.planned
+    assert not any(r.get("truncated") for r in ctl.replans)
+
+
+# ---------------------------------------------------------------------------
+# replicated online mode through the replay harness
+# ---------------------------------------------------------------------------
+
+def test_replay_replicated_online_beats_plain_and_respects_budget():
+    from repro.replication import ReplicationConfig
+
+    scen, profile, gcfg = _replay_setup()
+    drift = DriftConfig(threshold=3.0)
+    mig = MigrationConfig(max_moves_per_step=2)
+    plain = _run(scen, profile, gcfg, OnlineConfig(
+        policy="gem", online=True, drift=drift, migration=mig))
+    rep = _run(scen, profile, gcfg, OnlineConfig(
+        policy="gem", online=True, drift=drift, migration=mig,
+        replication=ReplicationConfig(replica_slots=1)))
+    rng = np.random.default_rng(3)
+    lengths = np.clip(rng.geometric(1.0 / 96, size=64), 8, 192)
+    arrivals = rng.integers(0, scen.num_steps - 8, size=64)
+    # replication removes the hot-expert floor: never worse, and the
+    # per-step budget still holds for replica add/drop moves
+    assert rep.mean_e2e(lengths, arrivals) <= plain.mean_e2e(
+        lengths, arrivals
+    )
+    assert int(rep.moves_per_step.max()) <= 2
+    moved = rep.moves_per_step > 0
+    assert moved.any()
+    # cross-device replica moves are charged (same-device row copies are
+    # free local HBM traffic, so not every moving step must cost)
+    assert rep.total_migration_cost > 0.0
+    assert (rep.migration_costs[~moved] == 0).all()
+
+
+def test_online_config_rejects_replication_without_gem():
+    from repro.replication import ReplicationConfig
+
+    with pytest.raises(ValueError, match="gem"):
+        OnlineConfig(policy="eplb",
+                     replication=ReplicationConfig(replica_slots=1))

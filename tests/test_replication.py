@@ -1,0 +1,617 @@
+"""Expert replication plane: ReplicatedPlacement invariants + serialization,
+speed-proportional splitting, the replication-aware planner, the dispatch
+plane's replica-split stage (token parity + determinism per backend), replica
+add/drop migration batches, and the serving engine's replicated pools."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceFleet,
+    GEMConfig,
+    Placement,
+    WorkloadSpec,
+    gem_place,
+    generate_trace,
+    profile_fleet,
+    score,
+    setup_speeds,
+    simulator_measure_fn,
+)
+from repro.replication import (
+    ReplicatedPlacement,
+    ReplicationConfig,
+    choose_replica_counts,
+    expanded_trace,
+    plan_replicated,
+    replica_fetch_rows,
+    replicated_per_device_tokens,
+    replicated_score,
+    replicated_step_cost_matrix,
+)
+
+E, G = 8, 4
+
+
+def _profile(speeds, *, tile=64, tile_time=300e-6):
+    fleet = DeviceFleet.from_speeds(
+        speeds, tile=tile, tile_time=tile_time, base=tile_time * 0.25
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet), len(speeds), max_tokens=512, tile=tile,
+        repeats=3,
+    ).profile
+
+
+def _skewed_trace(num_steps=16, *, seed=1):
+    spec = WorkloadSpec(
+        num_experts=E, top_k=2, tokens_per_step=128, num_consistent=1,
+        consistent_share=0.40, num_temporal_groups=1, temporal_group_size=2,
+        background="lognormal", skew_sigma=0.6,
+    )
+    return generate_trace(spec, num_steps, seed=seed, identity_seed=11)
+
+
+# ---------------------------------------------------------------------------
+# ReplicatedPlacement
+# ---------------------------------------------------------------------------
+
+def test_replicated_placement_validation():
+    with pytest.raises(ValueError, match="missing"):
+        ReplicatedPlacement(np.asarray([0, 0, 1, 2]), 2, 4)  # expert 3 gone
+    with pytest.raises(ValueError, match="divide"):
+        ReplicatedPlacement(np.arange(6), 4, 6)  # 6 slots on 4 devices
+    with pytest.raises(ValueError, match="sum to 1"):
+        ReplicatedPlacement(
+            np.asarray([0, 1, 2, 3]), 2, 4, shares=np.asarray([1, 1, 1, 0.5])
+        )
+
+
+def test_replicated_placement_json_roundtrip():
+    profile = _profile(setup_speeds("high", G))
+    rp = ReplicatedPlacement.linear(E, G, 2, profile=profile)
+    rp2 = ReplicatedPlacement.from_json(rp.to_json())
+    np.testing.assert_array_equal(rp2.slot_to_expert, rp.slot_to_expert)
+    np.testing.assert_allclose(rp2.shares, rp.shares)
+    assert (rp2.num_devices, rp2.num_experts) == (G, E)
+    # and the derived artifacts agree
+    np.testing.assert_array_equal(
+        rp2.replica_table(16), rp.replica_table(16)
+    )
+    np.testing.assert_allclose(rp2.share_matrix(), rp.share_matrix())
+
+
+def test_budget0_reduces_to_placement():
+    """Single-copy ReplicatedPlacement is the Placement, bit for bit."""
+    rng = np.random.default_rng(3)
+    p = Placement(
+        rng.permutation(np.repeat(np.arange(G), E // G)).astype(np.int32), G
+    )
+    rp = ReplicatedPlacement.from_placement(p)
+    assert rp.is_single_copy
+    np.testing.assert_array_equal(rp.slot_to_expert, p.slot_to_expert())
+    np.testing.assert_array_equal(rp.expert_to_slot(), p.expert_to_slot())
+    # the (E, P) replica table collapses to the single-slot map
+    tab = rp.replica_table(8)
+    np.testing.assert_array_equal(tab, np.tile(rp.expert_to_slot()[:, None], 8))
+    # and the share matrix is the placement one-hot
+    W = rp.share_matrix()
+    onehot = np.zeros((E, G))
+    onehot[np.arange(E), p.expert_to_device] = 1.0
+    np.testing.assert_allclose(W, onehot)
+
+
+def test_speed_shares_proportional_and_exclude_slowest():
+    speeds = np.asarray([0.88, 1.0, 1.0, 1.0])
+    profile = _profile(speeds)
+    # 16 slots / 4 devices, E=8: expert 0 on devices 0 (slow) + 1;
+    # expert 4 on devices 1 + 3 (both fast)
+    layout = np.asarray(
+        [0, 1, 2, 3,   0, 4, 5, 1,   1, 6, 7, 2,   3, 4, 5, 6],
+        dtype=np.int32,
+    )
+    rp = ReplicatedPlacement(layout, G, E)
+    cfg = ReplicationConfig(exclude_speed_below=0.92)
+    shares = rp.compute_speed_shares(profile, config=cfg)
+    rel = profile.relative_speed()
+    dev = rp.slot_device()
+    # expert 0's copy on device 0 (slow, excluded) gets zero share —
+    # never split onto the slowest GPU
+    slow_slots = [s for s in rp.copy_slots(0) if dev[s] == 0]
+    assert slow_slots and all(shares[s] == 0.0 for s in slow_slots)
+    # expert 4's copies sit on devices 1 and 3 (both fast): speed-proportional
+    slots4 = rp.copy_slots(4)
+    w = rel[dev[slots4]]
+    np.testing.assert_allclose(shares[slots4], w / w.sum())
+    # every expert's shares sum to 1
+    sums = np.bincount(rp.slot_to_expert, weights=shares, minlength=E)
+    np.testing.assert_allclose(sums, 1.0)
+
+
+def test_replica_table_apportions_shares():
+    layout = np.asarray([0, 1, 2, 3, 4, 5, 6, 7, 0, 0, 0, 7], dtype=np.int32)
+    shares = np.ones(12)
+    shares[[0, 8, 9, 10]] = [0.5, 0.25, 0.125, 0.125]
+    shares[[7, 11]] = [0.5, 0.5]
+    rp = ReplicatedPlacement(layout, G, E, shares=shares)
+    P = 16
+    tab = rp.replica_table(P)
+    counts = {s: int((tab[0] == s).sum()) for s in (0, 8, 9, 10)}
+    assert counts == {0: 8, 8: 4, 9: 2, 10: 2}  # exact for dyadic shares
+    # deterministic
+    np.testing.assert_array_equal(tab, rp.replica_table(P))
+
+
+def test_replicated_score_matches_single_copy_at_budget0():
+    trace = _skewed_trace()
+    profile = _profile(setup_speeds("high", G))
+    p = gem_place(trace, profile, GEMConfig(num_restarts=4)).placement
+    rp = ReplicatedPlacement.from_placement(p)
+    assert replicated_score(trace, profile, rp) == pytest.approx(
+        score(trace, profile, p)
+    )
+    # per-device tokens agree with the placement's bincount
+    tok = replicated_per_device_tokens(trace.counts, rp)
+    np.testing.assert_allclose(tok, trace.per_device_tokens(p))
+
+
+def test_replicated_step_cost_matrix_shape_and_split():
+    profile = _profile(setup_speeds("high", G))
+    rp = ReplicatedPlacement.linear(E, G, 1, profile=profile)
+    counts = np.tile(np.arange(E, dtype=np.float64) * 8, (3, 1))
+    mat = replicated_step_cost_matrix(counts, profile, [rp] * 3)
+    assert mat.shape == (3, G)
+    assert (mat > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_choose_replica_counts_prefers_hot_consistent():
+    trace = _skewed_trace()
+    profile = _profile(setup_speeds("high", G))
+    hot = int(np.argmax(trace.mean_utilization()))
+    copies = choose_replica_counts(trace, profile, G)
+    assert copies.sum() == E + G
+    assert copies[hot] == copies.max() > 1
+    assert copies.max() <= G  # never more copies than devices
+
+
+def test_expanded_trace_splits_budget_exactly():
+    trace = _skewed_trace()
+    copies = np.asarray([3, 1, 1, 1, 2, 1, 1, 2])
+    exp, owner = expanded_trace(trace, copies)
+    assert exp.num_experts == int(copies.sum())
+    assert len(owner) == exp.num_experts
+    # per-expert totals preserved step by step
+    for e in range(E):
+        np.testing.assert_array_equal(
+            exp.counts[:, owner == e].sum(axis=1), trace.counts[:, e]
+        )
+
+
+def test_plan_replicated_beats_single_copy_on_straggler_mix():
+    """The acceptance-criterion core: with one unbalanceably hot expert on
+    the heterogeneous fleet, replication strictly beats plain GEM."""
+    trace = _skewed_trace()
+    profile = _profile(setup_speeds("high", G))
+    gcfg = GEMConfig(trace_length=16, num_restarts=6)
+    res = plan_replicated(trace, profile, gcfg, ReplicationConfig(replica_slots=1))
+    assert res.placement.num_slots == E + G
+    assert res.score < res.single_copy_score
+    # the hot expert actually got copies
+    hot = int(np.argmax(trace.mean_utilization()))
+    assert res.placement.copy_counts()[hot] > 1
+    # evaluation on unseen steps of the same workload still wins
+    ev = _skewed_trace(64, seed=2)
+    single = gem_place(trace, profile, gcfg).placement
+    assert replicated_score(ev, profile, res.placement) < score(
+        ev, profile, single
+    )
+
+
+def test_plan_replicated_budget0_is_plain_gem():
+    trace = _skewed_trace()
+    profile = _profile(setup_speeds("moderate", G))
+    gcfg = GEMConfig(num_restarts=4)
+    res = plan_replicated(trace, profile, gcfg, ReplicationConfig())
+    single = gem_place(trace, profile, gcfg)
+    assert res.placement.is_single_copy
+    assert res.score == pytest.approx(single.score)
+    np.testing.assert_array_equal(
+        res.placement.slot_to_expert, single.placement.slot_to_expert()
+    )
+
+
+def test_replica_fetch_rows_prices_broadcasts():
+    base = ReplicatedPlacement.linear(E, G, 0)
+    grown = ReplicatedPlacement.linear(E, G, 1)
+    # linear growth replicates each device's own experts: zero fetches
+    assert replica_fetch_rows(base, grown) == 0
+    # retarget one replica slot to an expert from another device: one fetch
+    layout = grown.slot_layout()
+    victim = np.nonzero(layout == layout[0])[0][-1]  # device 0's replica
+    layout[victim] = E - 1  # expert resident on the last device
+    moved = ReplicatedPlacement(layout, G, E)
+    assert replica_fetch_rows(grown, moved) == 1
+
+
+# ---------------------------------------------------------------------------
+# dispatch plane: replica split (token parity + determinism per backend)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe
+    from repro.sharding import host_policy
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), capacity_factor=8.0
+    )
+    policy = host_policy()
+    params, _ = init_moe(
+        jax.random.PRNGKey(0), cfg, num_layers=1, dtype=jnp.float32,
+        policy=policy,
+    )
+    lp = jax.tree.map(lambda t: t[0], params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    return cfg, policy, lp, x
+
+
+def _replicated_layer(cfg, lp, rp):
+    """Expand a layer's virtual-ordered weights into rp's slot pool."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.moe import apply_placement
+
+    s2e = jnp.asarray(rp.slot_to_expert[None])
+    lp_rep = jax.tree.map(
+        lambda t: t[0],
+        apply_placement(jax.tree.map(lambda t: t[None], lp), s2e),
+    )
+    lp_rep["router"] = lp["router"]
+    return lp_rep
+
+
+@pytest.mark.parametrize("backend", ("einsum", "pallas", "dense_ref"))
+def test_replicated_layer_bit_exact_vs_single_copy(moe_setup, backend):
+    """With no capacity drops, a replicated pool + split table produces
+    bit-exact outputs vs the single-copy layer: copies are identical weight
+    rows and the top-2 combine is order-commutative — only *where* the
+    expert compute lands changes."""
+    import jax.numpy as jnp
+
+    from repro.models.moe import identity_placement, moe_layer
+
+    cfg, policy, lp, x = moe_setup
+    Ev = cfg.num_experts * cfg.expert_tp
+    rp = ReplicatedPlacement.linear(Ev, 4, 1)  # uniform shares
+    lp_rep = _replicated_layer(cfg, lp, rp)
+    table1 = identity_placement(cfg, 1)[0]
+    table2 = jnp.asarray(rp.replica_table(8))
+
+    y0, aux0 = moe_layer(x, lp, table1, cfg, policy, backend=backend)
+    y1, aux1 = moe_layer(x, lp_rep, table2, cfg, policy, backend=backend)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(
+        np.asarray(aux0["expert_counts"]), np.asarray(aux1["expert_counts"])
+    )
+    assert float(aux1["dropped"]) == 0.0
+
+
+@pytest.mark.parametrize("backend", ("einsum", "pallas"))
+def test_replica_split_deterministic_across_calls(moe_setup, backend):
+    import jax.numpy as jnp
+
+    from repro.models.dispatch import build_dispatch, route
+    from repro.models.moe import moe_layer
+
+    cfg, policy, lp, x = moe_setup
+    Ev = cfg.num_experts * cfg.expert_tp
+    rp = ReplicatedPlacement.linear(Ev, 4, 1)
+    lp_rep = _replicated_layer(cfg, lp, rp)
+    table = jnp.asarray(rp.replica_table(8))
+    y1, _ = moe_layer(x, lp_rep, table, cfg, policy, backend=backend)
+    y2, _ = moe_layer(x, lp_rep, table, cfg, policy, backend=backend)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # and the dispatch plan itself is identical call to call (the split is
+    # rank-based, not hash/random-based) — backend-independent index work
+    Gd, Ng, D = 1, x.shape[0] * x.shape[1], cfg.d_model
+    xg = x.reshape(Gd, Ng, D)
+    router = route(xg, lp["router"], cfg, policy, backend="einsum")
+    p1 = build_dispatch(router, table, cfg, policy, capacity_factor=8.0,
+                        num_slots=rp.num_slots)
+    p2 = build_dispatch(router, table, cfg, policy, capacity_factor=8.0,
+                        num_slots=rp.num_slots)
+    np.testing.assert_array_equal(
+        np.asarray(p1.dispatch_idx), np.asarray(p2.dispatch_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(p1.dispatch_gate), np.asarray(p2.dispatch_gate)
+    )
+
+
+def test_replica_split_lands_tokens_on_copies_by_share(moe_setup):
+    """The dispatch plan routes a replicated expert's tokens onto its
+    copies in the table's interleave proportions."""
+    import jax.numpy as jnp
+
+    from repro.models.dispatch import build_dispatch, route
+
+    cfg, policy, lp, x = moe_setup
+    Ev = cfg.num_experts * cfg.expert_tp
+    rp = ReplicatedPlacement.linear(Ev, 4, 1)
+    table = jnp.asarray(rp.replica_table(8))
+    Gd, Ng, D = 1, x.shape[0] * x.shape[1], cfg.d_model
+    xg = x.reshape(Gd, Ng, D)
+    router = route(xg, lp["router"], cfg, policy, backend="einsum")
+    plan = build_dispatch(router, table, cfg, policy, capacity_factor=8.0,
+                          num_slots=rp.num_slots)
+    slot_counts = np.asarray((plan.dispatch_gate > 0).sum(axis=(0, 2)))
+    counts = np.asarray(router.expert_counts)
+    for e in range(cfg.num_experts):
+        slots = rp.copy_slots(e)
+        assert slot_counts[slots].sum() == counts[e]
+        if counts[e] >= 2 and len(slots) == 2:
+            # uniform 2-way interleave: per-copy counts within 1 of half
+            assert abs(int(slot_counts[slots[0]]) - int(slot_counts[slots[1]])) <= 1
+
+
+# ---------------------------------------------------------------------------
+# replica add/drop migration composing with budgeted batches
+# ---------------------------------------------------------------------------
+
+def test_plan_replica_migration_random_layouts():
+    from repro.online import MigrationConfig, plan_replica_migration
+
+    rng = np.random.default_rng(0)
+    L = 3
+
+    def random_layout(S):
+        while True:
+            lay = np.concatenate(
+                [np.arange(E), rng.integers(0, E, size=S - E)]
+            )
+            rng.shuffle(lay)
+            if len(np.unique(lay)) == E:
+                return lay.astype(np.int32)
+
+    for trial in range(40):
+        S = E + G * rng.integers(0, 3)
+        cur = [random_layout(S) for _ in range(L)]
+        tgt = [random_layout(S) for _ in range(L)]
+        budget = int(rng.choice([2, 4]))
+        sched = plan_replica_migration(
+            cur, tgt, MigrationConfig(max_moves_per_step=budget)
+        )
+        work = [lay.copy() for lay in cur]
+        for step in sched.steps:
+            assert step.num_moves <= budget
+            for layer, src in step.sources_by_layer(S).items():
+                work[layer] = work[layer][src]
+            for lay in work:  # every expert alive at every batch boundary
+                assert len(np.unique(lay)) == E
+        for layer in range(L):
+            np.testing.assert_array_equal(work[layer], tgt[layer])
+
+
+def test_replica_add_is_one_move():
+    """A copy instantiation is a single one-row broadcast — cheaper than
+    the two row-rewrites of a swap cycle."""
+    from repro.core import MigrationCostModel
+    from repro.online import MigrationConfig, plan_replica_migration
+
+    cur = ReplicatedPlacement.linear(E, G, 1).slot_layout()
+    tgt = cur.copy()
+    # retarget device 3's replica slot to the (hot) expert 0
+    victim = len(cur) - 1
+    tgt[victim] = 0
+    sched = plan_replica_migration(
+        [cur], [tgt], MigrationConfig(max_moves_per_step=2)
+    )
+    assert sched.num_steps == 1 and sched.total_moves == 1
+    cm = MigrationCostModel(expert_bytes=1e8, bandwidth=50e9)
+    swap_cost = cm.cost(2)
+    assert sched.total_cost(cm) < swap_cost
+
+
+def test_replica_migration_batches_apply_on_weights(moe_setup):
+    """Applying a replica schedule batch-by-batch through the data plane's
+    apply_layer_permutation lands bit-exactly on the one-shot pool gather."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.moe import apply_layer_permutation, apply_placement
+    from repro.online import MigrationConfig, plan_replica_migration
+    from repro.online.migration import replica_source_permutation
+
+    cfg, policy, lp, x = moe_setup
+    Ev = cfg.num_experts * cfg.expert_tp
+    rng = np.random.default_rng(5)
+    L = 2
+    params = {
+        name: jnp.stack([lp[name]] * L)
+        for name in ("w_gate", "w_up", "w_down")
+    }
+    cur_rp = [ReplicatedPlacement.linear(Ev, 4, 1) for _ in range(L)]
+    # expand pool to the replicated layout
+    s2e = jnp.asarray(np.stack([rp.slot_to_expert for rp in cur_rp]))
+    pool = apply_placement(params, s2e)
+
+    def random_rp():
+        while True:
+            lay = np.concatenate(
+                [np.arange(Ev), rng.integers(0, Ev, size=4)]
+            )
+            rng.shuffle(lay)
+            if len(np.unique(lay)) == Ev:
+                return ReplicatedPlacement(lay.astype(np.int32), 4, Ev)
+
+    tgt_rp = [random_rp() for _ in range(L)]
+    sched = plan_replica_migration(
+        [rp.slot_layout() for rp in cur_rp],
+        [rp.slot_layout() for rp in tgt_rp],
+        MigrationConfig(max_moves_per_step=2),
+    )
+    assert sched.total_moves > 0
+    migrated = dict(pool)
+    S = cur_rp[0].num_slots
+    for step in sched.steps:
+        assert step.num_moves <= 2
+        for layer, src in step.sources_by_layer(S).items():
+            migrated = apply_layer_permutation(migrated, layer, src)
+    # one-shot: gather each target slot's row from any current copy
+    oneshot = dict(pool)
+    for layer in range(L):
+        src = replica_source_permutation(
+            cur_rp[layer].slot_layout(), tgt_rp[layer].slot_layout()
+        )
+        oneshot = apply_layer_permutation(oneshot, layer, src)
+    for name in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_array_equal(
+            np.asarray(migrated[name]), np.asarray(oneshot[name]),
+            err_msg=name,
+        )
+        # and every slot row equals its expert's virtual row exactly
+        for layer in range(L):
+            for s, e in enumerate(tgt_rp[layer].slot_to_expert):
+                np.testing.assert_array_equal(
+                    np.asarray(migrated[name][layer, s]),
+                    np.asarray(params[name][layer, e]),
+                )
+
+
+# ---------------------------------------------------------------------------
+# serving engine: replicated pools end to end
+# ---------------------------------------------------------------------------
+
+def _engine(replica_slots, *, online=False, policy_name="gem"):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import GEMConfig
+    from repro.models import init_params
+    from repro.online import DriftConfig, MigrationConfig
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.sharding import host_policy
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"),
+        capacity_factor=8.0, decode_capacity_factor=8.0,
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    profile = _profile(setup_speeds("high", 4), tile=1, tile_time=50e-6)
+    ecfg = EngineConfig(
+        max_batch=4, max_len=120,
+        gem=GEMConfig(trace_length=8, num_restarts=4),
+        other_time_per_step=1e-4, placement_policy=policy_name,
+        replication=ReplicationConfig(replica_slots=replica_slots),
+        online=online,
+        drift=DriftConfig(min_steps=4, threshold=3.0),
+        migration=MigrationConfig(max_moves_per_step=2, base_overhead=0.0),
+        replan_cooldown=8, payback_horizon=100_000,
+    )
+    eng = ServingEngine(params, cfg, policy, ecfg, profile=profile,
+                        num_devices=4)
+    return eng, cfg
+
+
+def _run_engines(*engines, steps=150, n_prompts=5, new_tokens=30):
+    rng = np.random.default_rng(1)
+    cfg = engines[0][1]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=10) for _ in range(n_prompts)
+    ]
+    for eng, _ in engines:
+        for p in prompts:
+            eng.submit(p, max_new_tokens=new_tokens)
+        eng.run(max_steps=steps)
+    return [
+        {r.uid: r.generated for r in eng.finished} for eng, _ in engines
+    ]
+
+
+def test_engine_budget0_bit_exact_vs_baseline():
+    """replica_slots=0 must leave the engine byte-identical to a baseline
+    engine (the replication plane is dormant: 1-D tables, E_v-row pool,
+    single-copy plans — the exact pre-replication code path)."""
+    rep0, _ = _engine(0)
+    base, _ = _engine(0)
+    assert rep0.current_rplacements is None  # plane fully dormant
+    assert rep0.placements.ndim == 2  # (L, E_v) single-slot tables
+    a, b = _run_engines((rep0, rep0.config), (base, base.config))
+    assert a and a == b
+
+
+def test_engine_replicated_token_parity_and_pool():
+    """Budget > 0: the replicated engine installs an expanded pool, plans
+    replicated placements, splits hot experts — and generates exactly the
+    tokens the single-copy engine does (generous capacity, top-2 combine)."""
+    single, cfg = _engine(0)
+    rep, _ = _engine(2)
+    a, b = _run_engines((single, cfg), (rep, cfg))
+    Ev = cfg.num_experts * cfg.expert_tp
+    S = Ev + 4 * 2
+    assert rep.params["blocks"]["moe"]["w_gate"].shape[1] == S
+    assert rep.placement_applied and rep.current_rplacements is not None
+    for rp in rep.current_rplacements:
+        assert rp.num_slots == S
+        assert (rp.copy_counts() >= 1).all()
+    # pool rows always equal their expert's virtual rows (bit-exact copies;
+    # the single-copy engine's pool is in planned slot order, so index it
+    # back to virtual order through its own placement)
+    w = np.asarray(rep.params["blocks"]["moe"]["w_gate"])
+    w0 = np.asarray(single.params["blocks"]["moe"]["w_gate"])
+    for layer, rp in enumerate(rep.current_rplacements):
+        s2e_single = single.current_placements[layer].slot_to_expert()
+        virt = np.empty_like(w0[layer])
+        virt[s2e_single] = w0[layer]
+        for s, e in enumerate(rp.slot_to_expert):
+            np.testing.assert_array_equal(w[layer, s], virt[e])
+    assert a.keys() == b.keys()
+    assert all(a[k] == b[k] for k in a), "replicated engine must emit the same tokens"
+
+
+def test_engine_online_replicated_migrates_with_budget():
+    """Online + replication: drift-triggered replans emit replica add/drop
+    batches within the move budget, and the data plane stays token-exact
+    vs the static linear engine."""
+    eng, cfg = _engine(1, online=True)
+    lin, _ = _engine(0, policy_name="linear")
+    a, b = _run_engines((eng, cfg), (lin, cfg), steps=200, new_tokens=40)
+    assert eng.controller is not None and eng.controller.replicated
+    assert eng.controller.planned
+    assert eng.controller.max_moves_in_step <= 2
+    assert eng.controller.total_migration_cost >= 0.0  # cross-device moves
+    # only; same-device replica copies are free local HBM row writes
+    # replica-split data plane emits the same tokens as single-copy linear
+    assert a.keys() == b.keys()
+    assert all(a[k] == b[k] for k in a)
+
+
+def test_engine_replication_requires_gem_and_profile():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServingEngine
+    from repro.sharding import host_policy
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    with pytest.raises(ValueError, match="replica"):
+        ServingEngine(
+            params, cfg, policy,
+            EngineConfig(replication=ReplicationConfig(replica_slots=1)),
+        )
