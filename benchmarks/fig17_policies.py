@@ -9,7 +9,6 @@ drains the slow device.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (
     GEMConfig,

@@ -65,7 +65,7 @@ from repro.online import (
     replay_online,
 )
 
-from .common import NUM_DEVICES, PAPER_MODELS, workload_for
+from .common import NUM_DEVICES, PAPER_MODELS, add_seed_arg, seeded, workload_for
 
 MODEL = PAPER_MODELS[0]  # Mixtral-8x7B — the paper's headline cell
 MAX_MOVES_PER_STEP = 2
@@ -112,18 +112,24 @@ def _technical_spec() -> WorkloadSpec:
     )
 
 
-def build_scenarios(*, smoke: bool) -> list[ShiftScenario]:
+def build_scenarios(*, smoke: bool, seed: int = 0) -> list[ShiftScenario]:
     del smoke  # sizes are cheap; --smoke only trims search restarts
     layers = SIM_LAYERS
 
     # -- task_shift: same fleet, new hot experts mid-run (tenant switch)
     spec = _technical_spec()
-    prof_high = _fleet_profile(setup_speeds("high", NUM_DEVICES))
+    prof_high = _fleet_profile(
+        setup_speeds("high", NUM_DEVICES), seed=seeded(0, seed)
+    )
     a = _stack(
-        generate_layer_traces(spec, layers, PRE_STEPS, seed=1, identity_seed=11)
+        generate_layer_traces(
+            spec, layers, PRE_STEPS, seed=seeded(1, seed), identity_seed=11
+        )
     )
     b = _stack(
-        generate_layer_traces(spec, layers, POST_STEPS, seed=2, identity_seed=77)
+        generate_layer_traces(
+            spec, layers, POST_STEPS, seed=seeded(2, seed), identity_seed=77
+        )
     )
     task_shift = ShiftScenario(
         "task_shift",
@@ -137,16 +143,17 @@ def build_scenarios(*, smoke: bool) -> list[ShiftScenario]:
     speeds = setup_speeds("moderate", NUM_DEVICES)
     slow = speeds.copy()
     slow[int(np.argmax(speeds))] /= 2.0
-    prof_mod = _fleet_profile(speeds)
+    prof_mod = _fleet_profile(speeds, seed=seeded(0, seed))
     c = _stack(
         generate_layer_traces(
-            share_spec, layers, PRE_STEPS + POST_STEPS, seed=1, identity_seed=11
+            share_spec, layers, PRE_STEPS + POST_STEPS,
+            seed=seeded(1, seed), identity_seed=11,
         )
     )
     slowdown = ShiftScenario(
         "slowdown",
         c,
-        {0: prof_mod, PRE_STEPS: _fleet_profile(slow)},
+        {0: prof_mod, PRE_STEPS: _fleet_profile(slow, seed=seeded(0, seed))},
         other_time_per_step=_other_time(prof_mod, layers),
     )
     return [task_shift, slowdown]
@@ -191,9 +198,9 @@ def run_scenario(
     }
 
 
-def run(*, smoke: bool = False) -> dict:
-    rng = np.random.default_rng(3)
-    scenarios = build_scenarios(smoke=smoke)
+def run(*, smoke: bool = False, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seeded(3, seed))
+    scenarios = build_scenarios(smoke=smoke, seed=seed)
     T = scenarios[0].num_steps
     lengths = np.clip(rng.geometric(1.0 / 96, size=NUM_REQUESTS), 8, 192)
     arrivals = rng.integers(0, T - 8, size=NUM_REQUESTS)
@@ -228,8 +235,9 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="small scenario sizes (CI)")
     ap.add_argument("--out", default="results/fig20_online.json")
+    add_seed_arg(ap)
     args = ap.parse_args()
-    out = run(smoke=args.smoke)
+    out = run(smoke=args.smoke, seed=args.seed)
     for scen, rows in out["scenarios"].items():
         print(f"== {scen}")
         base = rows["linear"]["mean_e2e_s"]

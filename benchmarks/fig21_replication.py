@@ -57,7 +57,14 @@ from repro.replication import (
     replicated_per_step_latency,
 )
 
-from .common import NUM_DEVICES, PAPER_MODELS, request_lengths, workload_for
+from .common import (
+    NUM_DEVICES,
+    PAPER_MODELS,
+    add_seed_arg,
+    request_lengths,
+    seeded,
+    workload_for,
+)
 
 MODEL = PAPER_MODELS[0]  # Mixtral-8x7B — few large experts, worst skew
 SIM_LAYERS = 4
@@ -117,19 +124,21 @@ def _e2e(step_lat: np.ndarray, lengths: np.ndarray) -> float:
     return float(cum[ends].mean())
 
 
-def run_workload(name, spec, profile, *, smoke: bool) -> dict:
+def run_workload(name, spec, profile, *, smoke: bool, seed: int = 0) -> dict:
     gem_cfg = GEMConfig(
         trace_length=FIT_STEPS, num_restarts=6 if smoke else 20
     )
     eval_steps = 64 if smoke else EVAL_STEPS
     fit = generate_layer_traces(
-        spec, SIM_LAYERS, FIT_STEPS, seed=1, identity_seed=11
+        spec, SIM_LAYERS, FIT_STEPS, seed=seeded(1, seed), identity_seed=11
     )
     ev = generate_layer_traces(
-        spec, SIM_LAYERS, eval_steps, seed=2, identity_seed=11
+        spec, SIM_LAYERS, eval_steps, seed=seeded(2, seed), identity_seed=11
     )
     other = _other_time(profile, spec, SIM_LAYERS)
-    lengths = request_lengths(NUM_REQUESTS, seed=3) % eval_steps + 1
+    lengths = request_lengths(
+        NUM_REQUESTS, seed=seeded(3, seed)
+    ) % eval_steps + 1
 
     rows: dict = {}
     # baselines: linear / EPLB / (budget-0 == plain GEM, from the sweep)
@@ -191,7 +200,7 @@ def run_workload(name, spec, profile, *, smoke: bool) -> dict:
     return {"baselines": rows, "sweep": sweep}
 
 
-def run(*, smoke: bool = False) -> dict:
+def run(*, smoke: bool = False, seed: int = 0) -> dict:
     out: dict = {
         "model": MODEL.name,
         "setup": "high",
@@ -200,8 +209,8 @@ def run(*, smoke: bool = False) -> dict:
         "violations": [],
     }
     for name, spec in workloads().items():
-        profile = _fleet_profile(spec)
-        res = run_workload(name, spec, profile, smoke=smoke)
+        profile = _fleet_profile(spec, seed=seeded(0, seed))
+        res = run_workload(name, spec, profile, smoke=smoke, seed=seed)
         out["workloads"][name] = res
         base = res["sweep"]["0"]["mean_e2e_s"]
         best_key = min(
@@ -237,8 +246,9 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="fewer search restarts + shorter replay (CI)")
     ap.add_argument("--out", default="results/fig21_replication.json")
+    add_seed_arg(ap)
     args = ap.parse_args()
-    out = run(smoke=args.smoke)
+    out = run(smoke=args.smoke, seed=args.seed)
     for name, res in out["workloads"].items():
         print(f"== {name}")
         lin = res["baselines"]["linear"]["mean_e2e_s"]

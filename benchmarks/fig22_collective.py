@@ -1,0 +1,548 @@
+"""Fig. 22 (beyond-paper): the collective migration plane, gated.
+
+PR 5 wires migrations as *actual collectives* on the expert-sharded weights
+(ppermute swap rounds + one-row broadcasts under the dispatch plane's
+``(data, model)`` shard_map) instead of the host-side row gather whose cost
+:class:`~repro.core.latency_model.MigrationCostModel` could only assume.
+This benchmark is the gate: it replays the fig20 shift scenarios and a
+fig21 replica install through both data planes on the forced 8-device host
+and **exits non-zero** unless
+
+  1. **bit-exactness** — after *every* applied migration batch (including
+     every mid-batch intermediate layout) the collective-mode weight pool
+     equals the host-mode pool bit-for-bit, for both shift scenarios, a
+     one-shot replica install, and a budgeted replica migration;
+  2. **traffic** — the interconnect payload each executed collective
+     schedule reports equals the cost model's cross-device row accounting
+     exactly, and the model's *charge* stays within ``TRAFFIC_REL_TOL`` of
+     the measured transfer time (the slack is exactly the model's
+     conservative pricing of intra-device swap rows, which ship no bytes);
+  3. **engine parity + calibration** — the serving engine generates
+     bit-identical tokens under ``migration_via="host"`` and
+     ``"collective"`` through a mid-run device slowdown, and with a
+     deliberately mis-configured bandwidth the controller's
+     :class:`~repro.core.latency_model.BandwidthEstimator` learns the
+     injected true interconnect to within ``CALIBRATION_REL_TOL``.
+
+Needs the forced multi-device host (the CI ``collective-parity`` matrix
+entry sets it):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.fig22_collective [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import GEMConfig, GEMPlanner, generate_layer_traces
+from repro.online import (
+    DriftConfig,
+    MigrationConfig,
+    OnlineConfig,
+    OnlineController,
+    plan_replica_migration,
+    replica_install_phases,
+    replica_source_permutation,
+)
+from repro.replication import (
+    ReplicatedPlacement,
+    ReplicationConfig,
+    plan_replicated,
+    replica_fetch_rows,
+)
+
+from .common import NUM_DEVICES, add_seed_arg, seeded
+from .fig20_online import (
+    MAX_MOVES_PER_STEP,
+    MODEL,
+    SIM_LAYERS,
+    TASK_SHIFT_DRIFT,
+    build_scenarios,
+)
+
+# synthetic expert-weight stack for the weight-plane replays: small enough
+# to move eagerly, row bytes matching the cost model exactly (3 D·F f32)
+WD, WF = 16, 32
+ROW_BYTES = 3 * WD * WF * 4
+# declared tolerances of the acceptance gates
+TRAFFIC_REL_TOL = 0.50  # modeled charge vs measured transfer time: the
+# model prices every rewritten row as interconnect traffic, but a swap
+# between two slots of one device ships nothing — measured ≤ modeled always,
+# and the gap is bounded by the intra-device share of the plan
+CALIBRATION_REL_TOL = 0.01  # learned vs injected true bandwidth
+REPLICA_SLOTS = 2  # per-device replica budget of the install scenario
+
+
+def _require_devices() -> None:
+    import jax
+
+    if jax.device_count() < 8:
+        raise SystemExit(
+            "fig22_collective needs XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 "
+            f"(have {jax.device_count()} devices)"
+        )
+
+
+def _mesh_policy():
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.policy import ShardingPolicy
+
+    mesh = make_host_mesh(2, 4)
+    return mesh, ShardingPolicy(mesh=mesh)
+
+
+def _stack(num_layers: int, num_slots: int, seed: int):
+    """Synthetic (L, S, D, F) expert stacks with all-distinct rows."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    return {
+        "w_gate": jnp.asarray(
+            rng.normal(size=(num_layers, num_slots, WD, WF)), jnp.float32
+        ),
+        "w_up": jnp.asarray(
+            rng.normal(size=(num_layers, num_slots, WD, WF)), jnp.float32
+        ),
+        "w_down": jnp.asarray(
+            rng.normal(size=(num_layers, num_slots, WF, WD)), jnp.float32
+        ),
+    }
+
+
+def _pools_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a
+    )
+
+
+# ---------------------------------------------------------------------------
+# part 1: fig20 shift scenarios — budgeted swap batches, both data planes
+# ---------------------------------------------------------------------------
+
+def run_shift_scenario(scenario, policy, *, smoke: bool, seed: int) -> dict:
+    """Drive the online controller through one fig20 scenario and mirror
+    every migration batch onto two weight pools — host gather vs collective
+    ppermute — checking bit-exactness after each batch."""
+    from repro.models.moe import apply_layer_permutation
+
+    T, L, E = scenario.counts.shape
+    believed = scenario.profiles[0]
+    gem_cfg = GEMConfig(trace_length=16, num_restarts=4 if smoke else 12)
+    drift = (
+        TASK_SHIFT_DRIFT if scenario.name == "task_shift" else DriftConfig()
+    )
+    mig = MigrationConfig(max_moves_per_step=MAX_MOVES_PER_STEP)
+    planner = GEMPlanner(E, NUM_DEVICES, L, gem_cfg)
+    planner.set_profile(believed)
+    controller = OnlineController(
+        planner, mig.cost_model(ROW_BYTES),
+        OnlineConfig(policy="gem", online=True, drift=drift, migration=mig),
+    )
+    w_host = _stack(L, E, seeded(7, seed))
+    w_coll = dict(w_host)
+    spd = E // NUM_DEVICES  # == the mesh's per-shard slots (model axis 4)
+
+    batches = 0
+    mismatches = 0
+    modeled_s = measured_s = 0.0
+    modeled_cross_bytes = measured_bytes = 0
+    mi = controller.cost_model
+    for t in range(T):
+        counts = scenario.counts[t]
+        observed = controller.cost_matrix(
+            counts, scenario.true_profile_at(t)
+        ).sum(axis=0)
+        decision = controller.observe_step(counts, observed)
+        step = decision.migration_step
+        if step is None:
+            continue
+        batches += 1
+        stats: list = []
+        for layer, src in step.sources_by_layer(E).items():
+            w_coll = apply_layer_permutation(
+                w_coll, layer, src, via="collective", policy=policy,
+                stats_out=stats,
+            )
+            w_host = apply_layer_permutation(w_host, layer, src)
+        if not _pools_equal(w_host, w_coll):
+            mismatches += 1
+        payload = sum(s.payload_bytes for s in stats)
+        measured_bytes += payload
+        measured_s += mi.cost_bytes(payload)
+        modeled_s += decision.migration_cost
+        modeled_cross_bytes += step.cross_device_moves(spd) * ROW_BYTES
+    charge_gap = (
+        (modeled_s - measured_s) / modeled_s if modeled_s > 0 else 0.0
+    )
+    return {
+        "scenario": scenario.name,
+        "batches": batches,
+        "mid_batch_mismatches": mismatches,
+        "final_bit_exact": _pools_equal(w_host, w_coll),
+        "measured_bytes": int(measured_bytes),
+        "modeled_cross_bytes": int(modeled_cross_bytes),
+        "modeled_charge_s": modeled_s,
+        "measured_transfer_s": measured_s,
+        "charge_rel_gap": charge_gap,
+        "replans": len(controller.replans),
+    }
+
+
+# ---------------------------------------------------------------------------
+# part 2: fig21 replica install — one-shot broadcast + budgeted migration
+# ---------------------------------------------------------------------------
+
+def run_replica_install(policy, *, smoke: bool, seed: int) -> dict:
+    """fig21's install, both planes: a replicated pool retargets from the
+    linear padded layout to a planned one — one-shot (two-phase fetch +
+    local fan-out) and budgeted (one-row broadcast batches)."""
+    import jax.numpy as jnp
+
+    from repro.models.moe import apply_layer_permutation
+    from repro.core import (
+        DeviceFleet, profile_fleet, setup_speeds, simulator_measure_fn,
+    )
+    from repro.core.workload import WorkloadSpec
+
+    E = MODEL.num_experts
+    S = E + NUM_DEVICES * REPLICA_SLOTS  # 16 slots, 4 per mesh shard
+    spd = S // NUM_DEVICES
+    spec = WorkloadSpec(
+        num_experts=E, top_k=MODEL.top_k, tokens_per_step=128,
+        num_consistent=1, consistent_share=0.40,
+        num_temporal_groups=1, temporal_group_size=2,
+        temporal_burst_share=0.20, background="lognormal", skew_sigma=0.6,
+    )
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", NUM_DEVICES), tile=MODEL.tile,
+        tile_time=MODEL.tile_time, base=MODEL.tile_time * 0.25,
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet, seed=seeded(0, seed)), NUM_DEVICES,
+        max_tokens=max(128 * MODEL.top_k, 4 * MODEL.tile), tile=MODEL.tile,
+        repeats=10,
+    ).profile
+    gem_cfg = GEMConfig(trace_length=16, num_restarts=4 if smoke else 12)
+    rcfg = ReplicationConfig(replica_slots=REPLICA_SLOTS)
+    traces = generate_layer_traces(
+        spec, SIM_LAYERS, 16, seed=seeded(1, seed), identity_seed=11
+    )
+    current = [
+        ReplicatedPlacement.linear(
+            E, NUM_DEVICES, REPLICA_SLOTS, profile=profile, config=rcfg
+        )
+        for _ in range(SIM_LAYERS)
+    ]
+    targets = [
+        plan_replicated(t, profile, gem_cfg, rcfg).placement for t in traces
+    ]
+
+    # one-shot install: host parallel gather vs collective two-phase.
+    # Replica copies must be bit-identical rows (the plane's "any copy
+    # works" invariant), so expand per-expert base rows through the layout
+    # — exactly the engine's pool install.
+    base = _stack(SIM_LAYERS, E, seeded(8, seed))
+    w_host = {
+        k: jnp.stack(
+            [w[layer][np.asarray(rp.slot_layout())]
+             for layer, rp in enumerate(current)]
+        )
+        for k, w in base.items()
+    }
+    w_coll = dict(w_host)
+    stats: list = []
+    fetch_rows = 0
+    for layer, (cur, tgt) in enumerate(zip(current, targets)):
+        src = replica_source_permutation(cur.slot_layout(), tgt.slot_layout())
+        w_host = apply_layer_permutation(w_host, layer, src)
+        fetch, fanout = replica_install_phases(
+            cur.slot_layout(), tgt.slot_layout(), spd
+        )
+        for phase in (fetch, fanout):
+            w_coll = apply_layer_permutation(
+                w_coll, layer, phase, via="collective", policy=policy,
+                stats_out=stats,
+            )
+        fetch_rows += replica_fetch_rows(cur, tgt)
+    oneshot_exact = _pools_equal(w_host, w_coll)
+    measured_bytes = sum(s.payload_bytes for s in stats)
+
+    # budgeted migration back: one-row broadcast batches, both planes
+    schedule = plan_replica_migration(
+        [t.slot_layout() for t in targets],
+        [c.slot_layout() for c in current],
+        MigrationConfig(max_moves_per_step=4),
+    )
+    mismatches = 0
+    for step in schedule.steps:
+        for layer, src in step.sources_by_layer(S).items():
+            w_host = apply_layer_permutation(w_host, layer, src)
+            w_coll = apply_layer_permutation(
+                w_coll, layer, src, via="collective", policy=policy,
+            )
+        if not _pools_equal(w_host, w_coll):
+            mismatches += 1
+    return {
+        "slots": S,
+        "oneshot_bit_exact": oneshot_exact,
+        "oneshot_measured_bytes": int(measured_bytes),
+        "oneshot_modeled_bytes": int(fetch_rows * ROW_BYTES),
+        "budgeted_batches": schedule.num_steps,
+        "budgeted_mid_batch_mismatches": mismatches,
+        "budgeted_final_bit_exact": _pools_equal(w_host, w_coll),
+    }
+
+
+# ---------------------------------------------------------------------------
+# part 3: serving engine — token parity + bandwidth calibration
+# ---------------------------------------------------------------------------
+
+def _build_engine(policy, via, *, calibrate: bool, seed: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import (
+        DeviceFleet, profile_fleet, setup_speeds, simulator_measure_fn,
+    )
+    from repro.models import init_params
+    from repro.serving import EngineConfig, ServingEngine
+
+    def prof(speeds):
+        fleet = DeviceFleet.from_speeds(
+            speeds, tile=1, tile_time=50e-6, base=10e-6
+        )
+        return profile_fleet(
+            simulator_measure_fn(fleet, seed=seeded(0, seed)), len(speeds),
+            max_tokens=64, tile=1, repeats=5,
+        ).profile
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    ecfg = EngineConfig(
+        max_batch=4, max_len=120,
+        gem=GEMConfig(trace_length=8, num_restarts=4),
+        other_time_per_step=1e-4, placement_policy="gem", online=True,
+        drift=DriftConfig(min_steps=4, threshold=3.0),
+        migration=MigrationConfig(
+            max_moves_per_step=2, base_overhead=0.0,
+            calibrate_bandwidth=calibrate,
+        ),
+        replan_cooldown=8, payback_horizon=100_000, migration_via=via,
+    )
+    speeds = setup_speeds("high", 4)
+    eng = ServingEngine(
+        params, cfg, policy, ecfg, profile=prof(speeds), num_devices=4
+    )
+    slow = speeds.copy()
+    slow[3] = 0.5
+    return eng, cfg, prof(slow)
+
+
+def run_engine_parity(policy, *, smoke: bool, seed: int) -> dict:
+    # sizes are NOT trimmed under --smoke: shorter runs finish before the
+    # injected slowdown can trigger a drift replan, leaving nothing to gate
+    del smoke
+    num_requests = 6
+    max_new = 40
+    rng = np.random.default_rng(seeded(9, seed))
+    prompts = None
+    out: dict = {}
+    tokens: dict[str, dict] = {}
+    believed_bw = MigrationConfig().bandwidth
+    true_bw = believed_bw / 4.0
+    for mode, via, calibrate in (
+        ("host", "host", False),
+        ("collective", "collective", False),
+        ("collective-calibrated", "collective", True),
+    ):
+        eng, cfg, slow_profile = _build_engine(
+            policy, via, calibrate=calibrate, seed=seed
+        )
+        if prompts is None:
+            prompts = [
+                rng.integers(0, cfg.vocab_size, size=10)
+                for _ in range(num_requests)
+            ]
+        if calibrate:
+            eng.set_true_interconnect(true_bw)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        steps = 0
+        while eng.scheduler.has_work() and steps < 200:
+            if steps == 25:
+                eng.set_true_profile(slow_profile)
+            eng.step()
+            steps += 1
+        tokens[mode] = {r.uid: r.generated for r in eng.finished}
+        measured = [
+            r for r in eng.migration_records if "measured_s" in r
+        ]
+        out[mode] = {
+            "finished": len(eng.finished),
+            "replans": len(eng.controller.replans),
+            "migration_batches": len(eng.migration_records),
+            "measured_batches": len(measured),
+            "payload_bytes": int(
+                sum(r["payload_bytes"] for r in measured)
+            ),
+            "modeled_bytes": int(
+                sum(r["moves"] for r in measured)
+                * eng.controller.cost_model.expert_bytes
+            ),
+        }
+        if calibrate:
+            est = eng.controller.bandwidth_estimator
+            out[mode]["true_bandwidth"] = true_bw
+            out[mode]["learned_bandwidth"] = est.bandwidth_hat
+            out[mode]["calibrated_model_bandwidth"] = (
+                eng.controller.cost_model.bandwidth
+            )
+    out["tokens_host_eq_collective"] = tokens["host"] == tokens["collective"]
+    out["tokens_host_eq_calibrated"] = (
+        tokens["host"] == tokens["collective-calibrated"]
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def run(*, smoke: bool = False, seed: int = 0) -> dict:
+    _require_devices()
+    _, policy = _mesh_policy()
+    out: dict = {"violations": [], "traffic_rel_tol": TRAFFIC_REL_TOL}
+
+    out["scenarios"] = {}
+    for scenario in build_scenarios(smoke=smoke, seed=seed):
+        res = run_shift_scenario(scenario, policy, smoke=smoke, seed=seed)
+        out["scenarios"][scenario.name] = res
+        if res["batches"] == 0:
+            out["violations"].append(
+                f"{scenario.name}: no migration batches ran — nothing gated"
+            )
+        if res["mid_batch_mismatches"] or not res["final_bit_exact"]:
+            out["violations"].append(
+                f"{scenario.name}: collective pool diverged from host pool "
+                f"({res['mid_batch_mismatches']} mid-batch mismatches)"
+            )
+        if res["measured_bytes"] != res["modeled_cross_bytes"]:
+            out["violations"].append(
+                f"{scenario.name}: measured payload "
+                f"{res['measured_bytes']}B != modeled cross-device "
+                f"{res['modeled_cross_bytes']}B"
+            )
+        if not 0.0 <= res["charge_rel_gap"] <= TRAFFIC_REL_TOL:
+            out["violations"].append(
+                f"{scenario.name}: cost-model charge departs measured "
+                f"traffic by {100 * res['charge_rel_gap']:.1f}% "
+                f"(declared tolerance {100 * TRAFFIC_REL_TOL:.0f}%, "
+                "measured may never exceed modeled)"
+            )
+
+    rep = run_replica_install(policy, smoke=smoke, seed=seed)
+    out["replica_install"] = rep
+    if not (rep["oneshot_bit_exact"] and rep["budgeted_final_bit_exact"]):
+        out["violations"].append("replica install: pools diverged")
+    if rep["budgeted_mid_batch_mismatches"]:
+        out["violations"].append(
+            "replica install: mid-batch layouts diverged "
+            f"({rep['budgeted_mid_batch_mismatches']} batches)"
+        )
+    if rep["oneshot_measured_bytes"] != rep["oneshot_modeled_bytes"]:
+        out["violations"].append(
+            f"replica install: measured {rep['oneshot_measured_bytes']}B "
+            f"!= replica_fetch_rows pricing {rep['oneshot_modeled_bytes']}B"
+        )
+
+    eng = run_engine_parity(policy, smoke=smoke, seed=seed)
+    out["engine"] = eng
+    if not (
+        eng["tokens_host_eq_collective"] and eng["tokens_host_eq_calibrated"]
+    ):
+        out["violations"].append(
+            "engine: generated tokens differ between migration data planes"
+        )
+    if eng["collective"]["measured_batches"] == 0:
+        out["violations"].append(
+            "engine: collective mode recorded no measured batches"
+        )
+    if eng["collective"]["payload_bytes"] != eng["collective"]["modeled_bytes"]:
+        out["violations"].append(
+            "engine: measured payload "
+            f"{eng['collective']['payload_bytes']}B != modeled "
+            f"{eng['collective']['modeled_bytes']}B"
+        )
+    learned = eng["collective-calibrated"]["learned_bandwidth"]
+    true_bw = eng["collective-calibrated"]["true_bandwidth"]
+    if (
+        learned is None
+        or abs(learned - true_bw) / true_bw > CALIBRATION_REL_TOL
+    ):
+        out["violations"].append(
+            f"engine: learned bandwidth {learned} departs injected truth "
+            f"{true_bw:.3g} by more than {100 * CALIBRATION_REL_TOL:.0f}%"
+        )
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer search restarts + smaller engine run (CI)")
+    ap.add_argument("--out", default="results/fig22_collective.json")
+    add_seed_arg(ap)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, seed=args.seed)
+    for name, res in out["scenarios"].items():
+        print(
+            f"== {name}: {res['batches']} batches, "
+            f"bit-exact={res['final_bit_exact']}, "
+            f"traffic {res['measured_bytes']}B measured / "
+            f"{res['modeled_cross_bytes']}B modeled, "
+            f"charge gap {100 * res['charge_rel_gap']:.1f}%"
+        )
+    rep = out["replica_install"]
+    print(
+        f"== replica_install: one-shot bit-exact={rep['oneshot_bit_exact']} "
+        f"({rep['oneshot_measured_bytes']}B fetched), "
+        f"{rep['budgeted_batches']} budgeted batches bit-exact="
+        f"{rep['budgeted_final_bit_exact']}"
+    )
+    eng = out["engine"]
+    learned = eng["collective-calibrated"]["learned_bandwidth"]
+    print(
+        f"== engine: tokens host≡collective="
+        f"{eng['tokens_host_eq_collective']}, "
+        f"{eng['collective']['measured_batches']} measured batches, "
+        f"learned bandwidth "
+        f"{'none' if learned is None else format(learned, '.3g')} "
+        f"(true {eng['collective-calibrated']['true_bandwidth']:.3g})"
+    )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.out}")
+    if out["violations"]:
+        for v in out["violations"]:
+            print(f"FAIL: {v}")
+        return 1
+    print(
+        "PASS: collective ≡ host bit-exactly across both shift scenarios "
+        "and the replica install; measured traffic matches the cost model "
+        f"within the declared {100 * TRAFFIC_REL_TOL:.0f}% tolerance; "
+        "bandwidth calibration converged"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

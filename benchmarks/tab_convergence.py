@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core import GEMConfig, gem_place, generate_layer_traces
 
-from .common import NUM_DEVICES, PAPER_MODELS, fleet_profile, workload_for
+from .common import PAPER_MODELS, fleet_profile, workload_for
 
 
 def run(layers_per_model: int = 4):

@@ -20,6 +20,7 @@ from .classify import (
 from .eplb import PeriodicEPLB, eplb_placement, linear_placement
 from .gem import GEMPlan, GEMPlanner
 from .latency_model import (
+    BandwidthEstimator,
     DeviceFleet,
     MigrationCostModel,
     StaircaseLatencyModel,
@@ -68,7 +69,7 @@ __all__ = [
     "IncrementalScorer", "score", "per_step_latency", "step_cost_matrix",
     "SearchResult", "gem_place", "initial_mapping", "refine",
     # online adaptation hooks
-    "MigrationCostModel", "migration_net_benefit",
+    "MigrationCostModel", "migration_net_benefit", "BandwidthEstimator",
     # step 4 / orchestration
     "GEMPlan", "GEMPlanner",
     # baselines

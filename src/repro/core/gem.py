@@ -21,7 +21,7 @@ from .eplb import linear_placement
 from .score import score
 from .search import SearchResult, gem_place
 from .trace import TraceCollector
-from .types import ExpertTrace, GEMConfig, Placement, VariabilityProfile
+from .types import GEMConfig, Placement, VariabilityProfile
 
 __all__ = ["GEMPlan", "GEMPlanner"]
 

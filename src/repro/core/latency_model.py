@@ -24,6 +24,7 @@ __all__ = [
     "StaircaseLatencyModel",
     "DeviceFleet",
     "MigrationCostModel",
+    "BandwidthEstimator",
     "tile_boundary_grid",
     "dense_grid",
 ]
@@ -139,6 +140,18 @@ class MigrationCostModel:
             return 0.0
         return self.base_overhead + num_moves * self.expert_bytes / self.bandwidth
 
+    def cost_bytes(self, payload_bytes: float) -> float:
+        """Cost of a batch by its *measured* interconnect payload — the
+        collective plane's accounting (a batch whose rows all resolve to
+        local HBM copies ships zero bytes and pays no overhead)."""
+        if payload_bytes <= 0:
+            return 0.0
+        return self.base_overhead + payload_bytes / self.bandwidth
+
+    def with_bandwidth(self, bandwidth: float) -> "MigrationCostModel":
+        """The same model with a recalibrated bandwidth term."""
+        return dataclasses.replace(self, bandwidth=float(bandwidth))
+
     @staticmethod
     def for_expert_dims(d_model: int, expert_d_ff: int, *,
                         bytes_per_param: int = 2,
@@ -149,6 +162,53 @@ class MigrationCostModel:
             expert_bytes=float(3 * d_model * expert_d_ff * bytes_per_param),
             bandwidth=bandwidth, base_overhead=base_overhead,
         )
+
+
+@dataclasses.dataclass
+class BandwidthEstimator:
+    """Learns the interconnect bandwidth from measured migration batches.
+
+    The :class:`MigrationCostModel`'s ``bandwidth`` is a configured
+    assumption; once the collective migration plane runs, every batch
+    yields a (payload bytes, transfer seconds) sample of the *actual*
+    interconnect. The estimator EWMA-smooths the per-batch implied
+    bandwidth and hands back a recalibrated cost model, so the controller's
+    net-benefit gate prices future migrations with what the fabric really
+    delivers instead of the NVLink-class default.
+    """
+
+    alpha: float = 0.25  # EWMA weight of the newest sample
+    min_bytes: float = 1.0  # ignore batches too small to time meaningfully
+    bandwidth_hat: float | None = None
+    num_samples: int = 0
+
+    def observe(
+        self, payload_bytes: float, seconds: float, *,
+        base_overhead: float = 0.0,
+    ) -> float | None:
+        """Feed one measured batch; returns the updated estimate.
+
+        ``seconds`` is the batch's full measured time; the per-batch
+        ``base_overhead`` (launch + router-table swap) is subtracted so
+        only the bandwidth-proportional part enters the estimate.
+        """
+        transfer = seconds - base_overhead
+        if payload_bytes < self.min_bytes or transfer <= 0.0:
+            return self.bandwidth_hat
+        sample = payload_bytes / transfer
+        if self.bandwidth_hat is None:
+            self.bandwidth_hat = sample
+        else:
+            self.bandwidth_hat += self.alpha * (sample - self.bandwidth_hat)
+        self.num_samples += 1
+        return self.bandwidth_hat
+
+    def calibrated(self, model: MigrationCostModel) -> MigrationCostModel:
+        """``model`` with the learned bandwidth (unchanged before the first
+        usable sample)."""
+        if self.bandwidth_hat is None:
+            return model
+        return model.with_bandwidth(self.bandwidth_hat)
 
 
 def tile_boundary_grid(

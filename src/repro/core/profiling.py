@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 

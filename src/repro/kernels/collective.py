@@ -1,0 +1,218 @@
+"""Collective expert-row migration: ppermute weight moves under shard_map.
+
+The migration plane's batches used to reach the stacked expert weights as a
+host-side row gather — correct, but never the device traffic the
+:class:`~repro.core.latency_model.MigrationCostModel` prices. This module
+executes a batch as the *actual* collectives on the expert-sharded weights,
+inside the same ``(data, model)`` mesh the dispatch plane's kernels run
+under:
+
+* :func:`swap_expert_rows` — a two-slot swap batch as pairwise ``ppermute``
+  rounds over the model axis (each swap: the two shards exchange one expert
+  row each in a single round).
+* :func:`broadcast_expert_row` — a replica add/drop as a one-to-many
+  broadcast (one round per destination shard; the source re-reads its
+  pre-batch row each round).
+* :func:`apply_row_sources` — the general entry point both reduce to: any
+  per-layer ``(S,)`` row-source map, lowered by
+  :func:`~repro.online.migration.lower_row_sources` into a
+  :class:`~repro.online.migration.CollectiveSchedule` and executed as a
+  local pre-batch gather plus the schedule's ppermute rounds.
+
+Every read — the local gather and every round's send — addresses the
+**pre-batch** block, so the affected rows are naturally double-buffered:
+read-before-overwrite ordering cannot be violated no matter how rounds are
+packed, which is exactly what lets the copy overlap decode compute on
+hardware (the overlap factor ``MigrationConfig.overlap_fraction`` models).
+
+The returned :class:`CollectiveStats` report what the schedule *actually*
+shipped (cross-shard rows, payload bytes, rounds) — measured traffic the
+serving engine records against the cost model's charge and feeds the
+:class:`~repro.core.latency_model.BandwidthEstimator`.
+
+Specs come from :meth:`ShardingPolicy.expert_collective_axis`; with
+``mesh=None`` there is no interconnect and callers take the host gather
+path instead (see :func:`repro.models.moe.apply_layer_permutation`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..online.migration import (
+    CollectiveSchedule,
+    RowTransfer,
+    lower_row_sources,
+)
+from .compat import get_shard_map
+
+__all__ = [
+    "CollectiveStats",
+    "apply_row_sources",
+    "swap_expert_rows",
+    "broadcast_expert_row",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    """What one executed schedule actually moved (measured, not modeled)."""
+
+    rows_rewritten: int  # slots whose weight row changed
+    cross_rows: int  # rows shipped over the interconnect (ppermute payload)
+    local_rows: int  # rows copied within their own shard's HBM
+    rounds: int  # ppermute rounds (collective launches)
+    payload_bytes: int  # interconnect bytes across all weight arrays
+
+    def __add__(self, other: "CollectiveStats") -> "CollectiveStats":
+        return CollectiveStats(
+            self.rows_rewritten + other.rows_rewritten,
+            self.cross_rows + other.cross_rows,
+            self.local_rows + other.local_rows,
+            self.rounds + other.rounds,
+            self.payload_bytes + other.payload_bytes,
+        )
+
+    @staticmethod
+    def zero() -> "CollectiveStats":
+        return CollectiveStats(0, 0, 0, 0, 0)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    sm = get_shard_map()
+    try:
+        return sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:  # jax ≥ 0.6 renamed check_rep → check_vma
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+
+
+def _round_tables(rnd: list[RowTransfer], num_shards: int):
+    """Static per-shard send/receive tables of one ppermute round."""
+    send_idx = np.zeros(num_shards, dtype=np.int32)
+    recv_idx = np.zeros(num_shards, dtype=np.int32)
+    is_dst = np.zeros(num_shards, dtype=bool)
+    perm = []
+    for t in rnd:
+        send_idx[t.src_shard] = t.src_idx
+        recv_idx[t.dst_shard] = t.dst_idx
+        is_dst[t.dst_shard] = True
+        perm.append((t.src_shard, t.dst_shard))
+    return send_idx, recv_idx, is_dst, perm
+
+
+def _stats_for(schedule: CollectiveSchedule, arrays) -> CollectiveStats:
+    row_bytes = sum(
+        int(np.prod(a.shape[1:])) * a.dtype.itemsize for a in arrays
+    )
+    return CollectiveStats(
+        rows_rewritten=schedule.cross_rows + schedule.local_rows,
+        cross_rows=schedule.cross_rows,
+        local_rows=schedule.local_rows,
+        rounds=schedule.num_rounds,
+        payload_bytes=schedule.cross_rows * row_bytes,
+    )
+
+
+def apply_row_sources(
+    arrays,
+    src,
+    *,
+    mesh,
+    axis: str = "model",
+    schedule: CollectiveSchedule | None = None,
+):
+    """Apply ``new_rows = old_rows[src]`` to expert-sharded weight arrays
+    with collectives, returning ``(new_arrays, CollectiveStats)``.
+
+    ``arrays`` is a tuple of ``(S, …)`` arrays whose leading slot dim is
+    sharded over mesh axis ``axis`` (any other mesh axes see the weights
+    replicated, as the dispatch plane's ``w_expert`` specs lay them out);
+    one slot's rows across all arrays travel together, so a round's payload
+    is exactly one expert's stacked weights. ``src`` is the batch's static
+    (S,) row-source map; pass ``schedule`` to reuse an existing lowering.
+
+    Execution: (1) every shard gathers its same-shard sources from its
+    pre-batch block; (2) each round, source shards read their pre-batch row
+    (double buffer), one ``ppermute`` moves the payloads, and destination
+    shards write them at their static local indices. The per-round tables
+    are static host data, so the only device traffic is the row payloads —
+    which is what :class:`CollectiveStats` reports.
+    """
+    arrays = tuple(arrays)
+    if schedule is None:
+        schedule = lower_row_sources(src, mesh.shape[axis])
+    n = schedule.num_shards
+    if n != mesh.shape[axis]:
+        raise ValueError(
+            f"schedule lowered for {n} shards but mesh axis "
+            f"{axis!r} has {mesh.shape[axis]}"
+        )
+    stats = _stats_for(schedule, arrays)
+    if stats.rows_rewritten == 0:
+        return arrays, stats
+
+    lsrc = jnp.asarray(schedule.local_src)
+    rounds = [_round_tables(rnd, n) for rnd in schedule.rounds]
+
+    def per_shard(*blks):
+        shard = jax.lax.axis_index(axis)
+        my_src = lsrc[shard]
+        new = [blk[my_src] for blk in blks]
+        for send_idx, recv_idx, is_dst, perm in rounds:
+            si = jnp.asarray(send_idx)[shard]
+            ri = jnp.asarray(recv_idx)[shard]
+            receiver = jnp.asarray(is_dst)[shard]
+            # send side reads the PRE-batch block — the double buffer
+            payload = tuple(
+                jax.lax.dynamic_index_in_dim(blk, si, 0, keepdims=False)
+                for blk in blks
+            )
+            got = tuple(
+                jax.lax.ppermute(p, axis, perm) for p in payload
+            )
+            new = [
+                nb.at[ri].set(jnp.where(receiver, g, nb[ri]))
+                for nb, g in zip(new, got)
+            ]
+        return tuple(new)
+
+    specs = tuple(P(*((axis,) + (None,) * (a.ndim - 1))) for a in arrays)
+    # jit the whole schedule into one executable: eager shard_map dispatches
+    # every round's ops device-by-device (~50× slower on the forced host
+    # platform); the schedule is static per call, so this is one compile
+    mapped = jax.jit(
+        _shard_map(per_shard, mesh, in_specs=specs, out_specs=specs)
+    )
+    return mapped(*arrays), stats
+
+
+def swap_expert_rows(arrays, swaps, *, mesh, axis: str = "model"):
+    """Exchange expert rows pairwise: ``swaps`` is a sequence of global
+    ``(slot_a, slot_b)`` pairs applied in order (a migration batch's swap
+    list). Cross-shard pairs lower to pairwise ppermute rounds; same-shard
+    pairs to local row copies. Returns ``(new_arrays, CollectiveStats)``."""
+    S = int(arrays[0].shape[0])
+    src = np.arange(S, dtype=np.int32)
+    for a, b in swaps:
+        src[[a, b]] = src[[b, a]]
+    return apply_row_sources(arrays, src, mesh=mesh, axis=axis)
+
+
+def broadcast_expert_row(arrays, src_slot: int, dst_slots, *, mesh,
+                         axis: str = "model"):
+    """Overwrite every slot in ``dst_slots`` with the row at ``src_slot`` —
+    the replica add/drop primitive (one row rewrite per destination, half a
+    swap's traffic). Destinations on the source's own shard are local HBM
+    copies; each remote destination shard costs one ppermute round's
+    payload. Returns ``(new_arrays, CollectiveStats)``."""
+    S = int(arrays[0].shape[0])
+    src = np.arange(S, dtype=np.int32)
+    for d in dst_slots:
+        src[int(d)] = int(src_slot)
+    return apply_row_sources(arrays, src, mesh=mesh, axis=axis)

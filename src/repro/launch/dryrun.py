@@ -24,7 +24,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback

@@ -19,7 +19,6 @@ Architecture families:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

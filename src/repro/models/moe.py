@@ -143,19 +143,71 @@ def apply_placement(moe_params, slot_to_expert):
     return out
 
 
-def apply_layer_permutation(moe_params, layer: int, perm):
-    """Permute ONE layer's stacked expert rows: row ``s`` ← old row
-    ``perm[s]`` (online plane's partial placement application, applied
-    between decode steps).
+def apply_layer_permutation(
+    moe_params,
+    layer: int,
+    perm,
+    *,
+    via: str = "host",
+    policy: ShardingPolicy | None = None,
+    stats_out: list | None = None,
+):
+    """Apply one layer's row-source map to the stacked expert rows: row
+    ``s`` ← old row ``perm[s]`` (online plane's partial placement
+    application, applied between decode steps).
 
     Unlike :func:`apply_placement` this touches a single layer and an
-    arbitrary (typically near-identity) permutation — the data-plane half of
+    arbitrary (typically near-identity) source map — the data-plane half of
     a budgeted migration batch; the caller swaps the matching router remap
     table row in the same engine step so weights and routing never disagree.
+
+    ``via`` selects the data plane:
+
+    * ``"host"`` (default) — one parallel row gather per weight array, the
+      load-time semantics.
+    * ``"collective"`` — the batch lowers to ppermute rounds on the
+      expert-sharded rows (:mod:`repro.kernels.collective`), executed under
+      the policy's mesh on its model axis; the executed schedule's
+      :class:`~repro.kernels.collective.CollectiveStats` (measured
+      interconnect traffic) is appended to ``stats_out`` when given. Falls
+      back to the host gather — bit-identical, zero measured traffic — when
+      the policy has no live expert sharding
+      (:meth:`ShardingPolicy.expert_collective_axis`), warning once.
     """
+    if via not in ("host", "collective"):
+        raise ValueError(f"via={via!r} not in ('host', 'collective')")
+    names = ("w_gate", "w_up", "w_down")
+    if via == "collective":
+        num_slots = int(moe_params[names[0]].shape[1])
+        axis = (
+            policy.expert_collective_axis(num_slots)
+            if policy is not None
+            else None
+        )
+        if axis is None:
+            _warn_once(
+                ("collective_fallback", num_slots),
+                "apply_layer_permutation(via='collective'): no live expert "
+                "sharding (mesh absent, 1-wide model axis, or slot count "
+                f"{num_slots} not divisible) — falling back to the host row "
+                "gather",
+            )
+        else:
+            from ..kernels.collective import apply_row_sources
+
+            arrays = tuple(moe_params[n][layer] for n in names)
+            new_arrays, stats = apply_row_sources(
+                arrays, perm, mesh=policy.mesh, axis=axis
+            )
+            if stats_out is not None:
+                stats_out.append(stats)
+            out = dict(moe_params)
+            for name, a in zip(names, new_arrays):
+                out[name] = moe_params[name].at[layer].set(a)
+            return out
     perm = jnp.asarray(perm, dtype=jnp.int32)
     out = dict(moe_params)
-    for name in ("w_gate", "w_up", "w_down"):
+    for name in names:
         w = moe_params[name]
         out[name] = w.at[layer].set(jnp.take(w[layer], perm, axis=0))
     return out

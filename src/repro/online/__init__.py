@@ -17,7 +17,12 @@ around the placement instead of planning once:
     budgeted moves and the controller can grow/shrink replicas under drift.
     ``migration_cycles`` exposes the permutation delta per cycle for the
     controller's budget-aware truncation (migrate only the profitable
-    prefix of a gate-rejected plan).
+    prefix of a gate-rejected plan). Under a live mesh,
+    ``lower_collective_step`` lowers either batch type to per-layer
+    :class:`~repro.online.migration.CollectiveSchedule`\\ s — ppermute
+    rounds + local row copies — that :mod:`repro.kernels.collective`
+    executes on the expert-sharded weights, yielding *measured*
+    interconnect traffic per batch.
   * :mod:`repro.online.controller` — the per-step control loop gluing the
     two to the :class:`~repro.core.gem.GEMPlanner`: warm-up plan when the
     collectors fill, drift-triggered (never timer-triggered) replans after
@@ -33,6 +38,7 @@ weight permutation between decode steps.
 from .controller import OnlineConfig, OnlineController, StepDecision
 from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
 from .migration import (
+    CollectiveSchedule,
     MigrationConfig,
     MigrationCycle,
     MigrationSchedule,
@@ -40,10 +46,14 @@ from .migration import (
     ReplicaMigrationSchedule,
     ReplicaMigrationStep,
     ReplicaMove,
+    RowTransfer,
     SlotSwap,
+    lower_collective_step,
+    lower_row_sources,
     migration_cycles,
     plan_migration,
     plan_replica_migration,
+    replica_install_phases,
     replica_source_permutation,
     swap_permutation,
 )
@@ -53,6 +63,7 @@ __all__ = [
     "DriftConfig",
     "LoadDriftDetector",
     "VariabilityDriftDetector",
+    "CollectiveSchedule",
     "MigrationConfig",
     "MigrationCycle",
     "MigrationSchedule",
@@ -60,10 +71,14 @@ __all__ = [
     "ReplicaMigrationSchedule",
     "ReplicaMigrationStep",
     "ReplicaMove",
+    "RowTransfer",
     "SlotSwap",
+    "lower_collective_step",
+    "lower_row_sources",
     "migration_cycles",
     "plan_migration",
     "plan_replica_migration",
+    "replica_install_phases",
     "replica_source_permutation",
     "swap_permutation",
     "OnlineConfig",

@@ -33,7 +33,7 @@ import numpy as np
 
 from ..core.eplb import eplb_placement, linear_placement
 from ..core.gem import GEMPlanner
-from ..core.latency_model import MigrationCostModel
+from ..core.latency_model import BandwidthEstimator, MigrationCostModel
 from ..core.score import migration_net_benefit, score, step_cost_matrix
 from ..core.search import refine
 from ..core.types import ExpertTrace, Placement, VariabilityProfile
@@ -173,6 +173,11 @@ class OnlineController:
         self.total_migration_cost = 0.0
         self.total_moves = 0
         self.max_moves_in_step = 0
+        # measured-vs-modeled migration accounting (collective data plane):
+        # the engine reports what each executed batch actually shipped, and
+        # the estimator turns those samples into a calibrated bandwidth
+        self.bandwidth_estimator = BandwidthEstimator()
+        self.migration_measurements: list[dict] = []
 
     # ------------------------------------------------------------------
     @property
@@ -205,6 +210,43 @@ class OnlineController:
         for layer, layout in enumerate(self.slot_layouts):
             out[layer, layout] = np.arange(Ev, dtype=np.int32)
         return out
+
+    def observe_migration_measurement(
+        self,
+        payload_bytes: float,
+        measured_s: float,
+        *,
+        modeled_s: float,
+        step: int | None = None,
+    ) -> None:
+        """Report what an executed migration batch *actually* moved.
+
+        The engine's collective data plane calls this once per applied
+        batch with the measured interconnect payload and transfer time;
+        the modeled charge is recorded next to it (the measured-vs-modeled
+        series ``fig22_collective`` gates on), and — when
+        ``MigrationConfig.calibrate_bandwidth`` is set — the
+        :class:`~repro.core.latency_model.BandwidthEstimator`'s learned
+        bandwidth replaces the cost model's configured assumption, so the
+        net-benefit gate prices future migrations with the fabric's
+        measured throughput.
+        """
+        self.migration_measurements.append(
+            {
+                "step": self._step if step is None else step,
+                "payload_bytes": float(payload_bytes),
+                "measured_s": float(measured_s),
+                "modeled_s": float(modeled_s),
+            }
+        )
+        self.bandwidth_estimator.observe(
+            payload_bytes, measured_s,
+            base_overhead=self.cost_model.base_overhead,
+        )
+        if self.config.migration.calibrate_bandwidth:
+            self.cost_model = self.bandwidth_estimator.calibrated(
+                self.cost_model
+            )
 
     def cost_matrix(
         self, counts: np.ndarray, profile: VariabilityProfile

@@ -43,6 +43,21 @@ a *full* migration, :func:`migration_cycles` exposes the delta's per-cycle
 structure so the controller can score each cycle's contribution
 independently and migrate only the profitable prefix (see
 ``OnlineController._replan``).
+
+**Collective lowering**: under a live mesh a batch is not a host-side row
+gather — it is device traffic on the expert-sharded weights.
+:func:`lower_row_sources` lowers a batch's per-layer ``(S,)`` row-source map
+(the uniform ``sources_by_layer`` interface both batch types share) into a
+:class:`CollectiveSchedule`: a per-shard *local* gather (same-device row
+copies, read from the pre-batch shard — the double buffer that preserves
+read-before-overwrite ordering) plus a minimal sequence of ``ppermute``
+*rounds*, each round a partial shard permutation (every shard sends at most
+one expert row and receives at most one). A two-slot swap lowers to one
+pairwise round; a one-to-many replica broadcast lowers to one round per
+destination shard. The schedule is host-side numpy — static, inspectable,
+and exactly what :mod:`repro.kernels.collective` executes — so the
+*measured* interconnect traffic (``cross_rows``/``payload_bytes``) falls
+out of the lowering itself rather than the cost model's assumption.
 """
 from __future__ import annotations
 
@@ -62,11 +77,16 @@ __all__ = [
     "ReplicaMove",
     "ReplicaMigrationStep",
     "ReplicaMigrationSchedule",
+    "RowTransfer",
+    "CollectiveSchedule",
     "plan_migration",
     "migration_cycles",
     "plan_replica_migration",
+    "replica_install_phases",
     "replica_source_permutation",
     "swap_permutation",
+    "lower_row_sources",
+    "lower_collective_step",
 ]
 
 
@@ -77,12 +97,22 @@ class MigrationConfig:
     max_moves_per_step: int = 2  # expert-weight rows rewritten per step (≥2)
     bandwidth: float = 450e9  # interconnect bytes/s (NVLink4-class)
     base_overhead: float = 20e-6  # per-batch launch overhead (s)
+    # fraction of a collective batch's transfer time that hides behind the
+    # step's decode compute: the double-buffered row copy overlaps the MoE
+    # GEMMs, so only the non-overlappable tail is charged to the step
+    # (0.0 = fully serialized, the host-path assumption)
+    overlap_fraction: float = 0.0
+    # learn the interconnect bandwidth from measured collective traffic
+    # (BandwidthEstimator EWMA) instead of trusting the configured value
+    calibrate_bandwidth: bool = False
 
     def __post_init__(self):
         if self.max_moves_per_step < 2:
             raise ValueError(
                 "max_moves_per_step must be ≥ 2 (one swap rewrites two rows)"
             )
+        if not 0.0 <= self.overlap_fraction <= 1.0:
+            raise ValueError("overlap_fraction must be in [0, 1]")
 
     def cost_model(self, expert_bytes: float) -> MigrationCostModel:
         return MigrationCostModel(
@@ -136,6 +166,17 @@ class MigrationStep:
             layer: swap_permutation(num_slots, swaps)
             for layer, swaps in self.swaps_by_layer().items()
         }
+
+    def cross_device_moves(self, slots_per_device: int) -> int:
+        """Row rewrites whose source lives on a different device — the only
+        ones that ship bytes over the interconnect (an intra-device swap is
+        two local HBM row copies). Mirrors the replica step's accounting so
+        measured collective traffic can be checked against the model."""
+        return sum(
+            2
+            for s in self.swaps
+            if s.slot_a // slots_per_device != s.slot_b // slots_per_device
+        )
 
 
 @dataclasses.dataclass
@@ -527,6 +568,139 @@ def plan_replica_migration(
     return ReplicaMigrationSchedule(steps)
 
 
+# ---------------------------------------------------------------------------
+# Collective lowering: batches → per-layer ppermute schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RowTransfer:
+    """One cross-shard expert-row shipment: the row at local index
+    ``src_idx`` of shard ``src_shard`` overwrites local index ``dst_idx``
+    of shard ``dst_shard``."""
+
+    src_shard: int
+    src_idx: int
+    dst_shard: int
+    dst_idx: int
+
+
+@dataclasses.dataclass
+class CollectiveSchedule:
+    """One layer's migration batch lowered for the ppermute data plane.
+
+    ``local_src`` (n_shards, S/n_shards): per-shard local row gather —
+    every shard reads same-device sources from its *pre-batch* block
+    (identity where a cross-shard transfer will land). ``rounds``: ordered
+    ``ppermute`` rounds; within a round every shard sends at most one row
+    and receives at most one, so each round is a single partial shard
+    permutation. All reads (local and remote) observe the pre-batch pool —
+    the double buffer that makes read-before-overwrite ordering a
+    non-issue regardless of round order.
+    """
+
+    num_slots: int
+    num_shards: int
+    local_src: np.ndarray
+    rounds: list[list[RowTransfer]]
+
+    @property
+    def slots_per_shard(self) -> int:
+        return self.num_slots // self.num_shards
+
+    @property
+    def cross_rows(self) -> int:
+        """Rows shipped over the interconnect."""
+        return sum(len(r) for r in self.rounds)
+
+    @property
+    def local_rows(self) -> int:
+        """Rows copied within their own shard's HBM."""
+        per = self.slots_per_shard
+        ident = np.arange(per, dtype=np.int32)
+        return int((self.local_src != ident[None, :]).sum())
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    def payload_bytes(self, row_bytes: float) -> float:
+        """Interconnect payload of executing this schedule."""
+        return self.cross_rows * row_bytes
+
+    def source_map(self) -> np.ndarray:
+        """Reconstruct the (S,) row-source map the schedule realises
+        (``new_rows = old_rows[src]``) — the lowering's round-trip check."""
+        per = self.slots_per_shard
+        src = np.empty(self.num_slots, dtype=np.int32)
+        for shard in range(self.num_shards):
+            src[shard * per : (shard + 1) * per] = (
+                self.local_src[shard] + shard * per
+            )
+        for rnd in self.rounds:
+            for t in rnd:
+                src[t.dst_shard * per + t.dst_idx] = (
+                    t.src_shard * per + t.src_idx
+                )
+        return src
+
+
+def lower_row_sources(src, num_shards: int) -> CollectiveSchedule:
+    """Lower one layer's (S,) row-source map onto ``num_shards`` expert
+    shards (the model-axis extent the slot dim is sharded over).
+
+    Cross-shard reads are packed greedily into rounds under the ppermute
+    constraint (≤ 1 send and ≤ 1 receive per shard per round): a pairwise
+    swap becomes one round of two opposed transfers, a one-to-many
+    broadcast one round per destination shard (the source re-reads its
+    pre-batch row each round). Same-shard reads become the local gather.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    S = len(src)
+    if S % num_shards != 0:
+        raise ValueError(
+            f"{S} slots do not shard evenly over {num_shards} shards"
+        )
+    per = S // num_shards
+    local_src = np.tile(np.arange(per, dtype=np.int32), (num_shards, 1))
+    transfers: list[RowTransfer] = []
+    for s in range(S):
+        r = int(src[s])
+        if r == s:
+            continue
+        dst_shard, src_shard = s // per, r // per
+        if src_shard == dst_shard:
+            local_src[dst_shard, s % per] = r % per
+        else:
+            transfers.append(
+                RowTransfer(src_shard, r % per, dst_shard, s % per)
+            )
+    rounds: list[list[RowTransfer]] = []
+    for t in transfers:
+        for rnd in rounds:
+            if all(
+                t.src_shard != o.src_shard and t.dst_shard != o.dst_shard
+                for o in rnd
+            ):
+                rnd.append(t)
+                break
+        else:
+            rounds.append([t])
+    return CollectiveSchedule(S, num_shards, local_src, rounds)
+
+
+def lower_collective_step(
+    step: "MigrationStep | ReplicaMigrationStep",
+    num_slots: int,
+    num_shards: int,
+) -> dict[int, CollectiveSchedule]:
+    """Lower one engine step's batch — either type — to per-layer collective
+    schedules via the shared ``sources_by_layer`` interface."""
+    return {
+        layer: lower_row_sources(src, num_shards)
+        for layer, src in step.sources_by_layer(num_slots).items()
+    }
+
+
 def replica_source_permutation(
     cur_layout: np.ndarray, tgt_layout: np.ndarray
 ) -> np.ndarray:
@@ -551,3 +725,58 @@ def replica_source_permutation(
                 )
             src[s] = int(cands[0])
     return src
+
+
+def replica_install_phases(
+    cur_layout: np.ndarray,
+    tgt_layout: np.ndarray,
+    slots_per_device: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Two-phase one-shot install: ``(fetch_src, fanout_src)`` row-source
+    maps applied in order.
+
+    A one-shot :func:`replica_source_permutation` reads every changed slot
+    independently, so a device installing several copies of a newly arrived
+    expert would ship the same row over the interconnect once per copy —
+    while :func:`~repro.replication.score.replica_fetch_rows` (and any sane
+    deployment) prices one fetch per (device, new expert) plus local HBM
+    fan-out. This lowering realises exactly that: phase 1 reads same-device
+    copies locally and fetches each missing expert's row **once** per
+    device (lowest wanting slot is the designated fetcher, reading the
+    lowest-id current copy — deterministic); phase 2 fans the fetched rows
+    out to the device's remaining wanting slots, a purely local gather.
+    Composing the phases transforms ``cur_layout`` into ``tgt_layout``, and
+    the phase-1 cross-shard reads equal the modeled fetch rows exactly.
+    """
+    cur = np.asarray(cur_layout, dtype=np.int32)
+    tgt = np.asarray(tgt_layout, dtype=np.int32)
+    if cur.shape != tgt.shape:
+        raise ValueError("layouts must cover the same slots")
+    S = len(cur)
+    if S % slots_per_device != 0:
+        raise ValueError(
+            f"{S} slots do not divide over {slots_per_device}-slot devices"
+        )
+    fetch = np.arange(S, dtype=np.int32)
+    fanout = np.arange(S, dtype=np.int32)
+    for g in range(S // slots_per_device):
+        lo, hi = g * slots_per_device, (g + 1) * slots_per_device
+        fetcher: dict[int, int] = {}  # expert → designated phase-1 slot
+        for s in range(lo, hi):
+            if cur[s] == tgt[s]:
+                continue
+            e = int(tgt[s])
+            local = np.nonzero(cur[lo:hi] == e)[0]
+            if len(local):
+                fetch[s] = lo + int(local[0])  # same-device HBM copy
+            elif e not in fetcher:
+                cands = np.nonzero(cur == e)[0]
+                if len(cands) == 0:
+                    raise ValueError(
+                        f"target expert {e} has no copy in the current layout"
+                    )
+                fetch[s] = int(cands[0])  # the one interconnect fetch
+                fetcher[e] = s
+            else:
+                fanout[s] = fetcher[e]  # local fan-out of the fetched row
+    return fetch, fanout

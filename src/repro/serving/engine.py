@@ -37,6 +37,7 @@ On real hardware the same counters would be wall-clock timestamps.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -59,7 +60,10 @@ from ..online import (
     OnlineConfig,
     OnlineController,
 )
-from ..online.migration import replica_source_permutation
+from ..online.migration import (
+    replica_install_phases,
+    replica_source_permutation,
+)
 from ..replication import (
     ReplicatedPlacement,
     ReplicationConfig,
@@ -99,6 +103,15 @@ class EngineConfig:
     migration: MigrationConfig = MigrationConfig()
     replan_cooldown: int = 32  # min steps between drift replans
     payback_horizon: int = 1024  # steps a migration's gain must amortise over
+    # --- migration data plane (repro.kernels.collective) ---
+    # "host": batches apply as host-side row gathers (load-time semantics).
+    # "collective": batches lower to ppermute rounds on the expert-sharded
+    # weights under the policy's mesh; each applied batch's measured
+    # interconnect traffic is recorded against the cost model's charge
+    # (engine.migration_records) and fed to the controller's bandwidth
+    # estimator. Falls back to the host gather — bit-identical — when the
+    # policy has no live expert sharding.
+    migration_via: str = "host"
 
 
 class ServingEngine:
@@ -115,6 +128,11 @@ class ServingEngine:
         if engine_config.moe_backend is not None:
             config = dataclasses.replace(
                 config, moe_backend=engine_config.moe_backend
+            )
+        if engine_config.migration_via not in ("host", "collective"):
+            raise ValueError(
+                f"migration_via={engine_config.migration_via!r} not in "
+                "('host', 'collective')"
             )
         if engine_config.online and (profile is None or not config.is_moe):
             raise ValueError(
@@ -161,6 +179,25 @@ class ServingEngine:
             )
         if config.is_moe:
             nd = num_devices or (profile.num_devices if profile else 4)
+            if (
+                engine_config.migration_via == "collective"
+                and policy.mesh is not None
+                and policy.model_axis_size > 1
+                and nd != policy.model_axis_size
+            ):
+                # the collective plane shards rows over the model axis, the
+                # cost model prices locality by placement device — when the
+                # two disagree, a "cross-device" move can be a same-shard
+                # copy (or vice versa) and measured traffic stops matching
+                # the model's accounting (it stays correct, just unmatched)
+                warnings.warn(
+                    f"migration_via='collective': placement device count "
+                    f"{nd} != model-axis size {policy.model_axis_size}; "
+                    "measured migration traffic will not match the cost "
+                    "model's cross-device accounting",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
             self.planner = GEMPlanner(
                 config.num_experts * config.expert_tp,
                 nd,
@@ -214,6 +251,12 @@ class ServingEngine:
         # simulated latency accounting
         self.sim_step_latencies: list[float] = []
         self.sim_time = 0.0
+
+        # migration data-plane accounting: one record per applied batch —
+        # the cost model's charge next to what the executed collective
+        # schedule actually shipped (fig22's measured-vs-modeled gate)
+        self.migration_records: list[dict[str, Any]] = []
+        self.true_interconnect: Any | None = None  # MigrationCostModel
 
         # decode cache pool (same storage dtype as the params)
         cache_dtype = jax.tree.leaves(params)[0].dtype
@@ -314,21 +357,46 @@ class ServingEngine:
         self.params = {**self.params, "blocks": new_blocks}
         self.placements = self._replica_tables(rplacements)
 
-    def _retarget_replicated_pool(self, rplacements) -> None:
+    def _retarget_replicated_pool(self, rplacements) -> list:
         """Move the live replicated pool to new layouts in one parallel row
         gather per layer (each target slot reads any current copy of its
-        expert); the caller prices the install via ``replica_fetch_rows``."""
+        expert); the caller prices the install via ``replica_fetch_rows``.
+        Under ``migration_via="collective"`` each layer's gather executes
+        as one-row ppermute broadcasts instead; returns the executed
+        schedules' :class:`~repro.kernels.collective.CollectiveStats`
+        (empty on the host path)."""
         assert self.current_rplacements is not None
-        srcs = [
-            replica_source_permutation(cur.slot_layout(), new.slot_layout())
-            for cur, new in zip(self.current_rplacements, rplacements)
-        ]
+        stats: list = []
+        moe = self.params["blocks"]["moe"]
+        if self.ecfg.migration_via == "collective":
+            # two-phase install: one interconnect fetch per (device, new
+            # expert), then local HBM fan-out — the traffic
+            # replica_fetch_rows models, exactly
+            spd = rplacements[0].slots_per_device
+            for layer, (cur, new) in enumerate(
+                zip(self.current_rplacements, rplacements)
+            ):
+                fetch, fanout = replica_install_phases(
+                    cur.slot_layout(), new.slot_layout(), spd
+                )
+                for src in (fetch, fanout):
+                    moe = apply_layer_permutation(
+                        moe, layer, src, via="collective",
+                        policy=self.policy, stats_out=stats,
+                    )
+        else:
+            srcs = [
+                replica_source_permutation(
+                    cur.slot_layout(), new.slot_layout()
+                )
+                for cur, new in zip(self.current_rplacements, rplacements)
+            ]
+            moe = apply_placement(moe, jnp.asarray(np.stack(srcs)))
         new_blocks = dict(self.params["blocks"])
-        new_blocks["moe"] = apply_placement(
-            self.params["blocks"]["moe"], jnp.asarray(np.stack(srcs))
-        )
+        new_blocks["moe"] = moe
         self.params = {**self.params, "blocks": new_blocks}
         self.placements = self._replica_tables(rplacements)
+        return stats
 
     def set_true_profile(self, profile: VariabilityProfile | None) -> None:
         """Inject the *actual* fleet behaviour when it departs the believed
@@ -338,6 +406,40 @@ class ServingEngine:
         hardware the same gap appears between wall-clock and the stale
         profile with no injection needed."""
         self.true_profile = profile
+
+    def set_true_interconnect(
+        self, bandwidth: float, base_overhead: float | None = None
+    ) -> None:
+        """Inject the *actual* interconnect when it departs the cost
+        model's configured assumption (a mis-specified fabric, a congested
+        link). Measured migration times then come from this ground truth
+        while the controller keeps pricing with its believed bandwidth —
+        until its :class:`~repro.core.latency_model.BandwidthEstimator`
+        learns the real one from the measurements (with
+        ``MigrationConfig.calibrate_bandwidth``). On real hardware the gap
+        appears between wall-clock transfer timers and the config, no
+        injection needed."""
+        self.true_interconnect = dataclasses.replace(
+            self._cost_model,
+            bandwidth=float(bandwidth),
+            base_overhead=(
+                self._cost_model.base_overhead
+                if base_overhead is None
+                else float(base_overhead)
+            ),
+        )
+
+    @property
+    def _measure_interconnect(self):
+        """The interconnect that times executed collective batches: the
+        injected ground truth, else the believed model."""
+        if self.true_interconnect is not None:
+            return self.true_interconnect
+        return (
+            self.controller.cost_model
+            if self.controller is not None
+            else self._cost_model
+        )
 
     @property
     def _sim_profile(self) -> VariabilityProfile | None:
@@ -402,8 +504,10 @@ class ServingEngine:
                 replica_fetch_rows(cur, new)
                 for cur, new in zip(self.current_rplacements, rplacements)
             )
-            self._retarget_replicated_pool(rplacements)
-            swap_cost = self._cost_model.cost(moves)
+            stats = self._retarget_replicated_pool(rplacements)
+            swap_cost = self._record_migration(
+                moves, self._cost_model.cost(moves), stats, None
+            )
             if self.sim_step_latencies:
                 self.sim_step_latencies[-1] += swap_cost
             self.sim_time += swap_cost
@@ -419,10 +523,20 @@ class ServingEngine:
         expert_to_slot = jnp.asarray(
             np.stack([p.expert_to_slot() for p in placements])
         )
+        stats: list = []
+        moe = self.params["blocks"]["moe"]
+        if self.ecfg.migration_via == "collective":
+            # the pool is still in virtual order here, so each layer's
+            # row-source map IS its slot_to_expert table
+            for layer, p in enumerate(placements):
+                moe = apply_layer_permutation(
+                    moe, layer, p.slot_to_expert(), via="collective",
+                    policy=self.policy, stats_out=stats,
+                )
+        else:
+            moe = apply_placement(moe, slot_to_expert)
         new_blocks = dict(self.params["blocks"])
-        new_blocks["moe"] = apply_placement(
-            self.params["blocks"]["moe"], slot_to_expert
-        )
+        new_blocks["moe"] = moe
         self.params = {**self.params, "blocks": new_blocks}
         # the one-shot swap moves weights too: charge it to the step that
         # performs it (unbudgeted, one batch), with the same cost model the
@@ -432,7 +546,9 @@ class ServingEngine:
             len(cur.moved_slots(new))
             for cur, new in zip(self.current_placements, placements)
         )
-        swap_cost = self._cost_model.cost(moves)
+        swap_cost = self._record_migration(
+            moves, self._cost_model.cost(moves), stats, None
+        )
         if self.sim_step_latencies:
             self.sim_step_latencies[-1] += swap_cost
         self.sim_time += swap_cost
@@ -455,19 +571,34 @@ class ServingEngine:
         assert self.controller is not None
         observed = cost_mx.sum(axis=0) if cost_mx is not None else None
         decision = self.controller.observe_step(counts_virt, observed)
+        migration_charge = decision.migration_cost
         if decision.migration_step is not None:
             new_blocks = dict(self.params["blocks"])
             moe = dict(new_blocks["moe"])
             # both batch types reduce to per-layer row-source maps applied
             # as one parallel gather (a swap is {a←b, b←a}; a replica
-            # add/drop is a single one-row broadcast)
+            # add/drop is a single one-row broadcast); under
+            # migration_via="collective" each map lowers to ppermute
+            # rounds on the expert-sharded rows instead, and the executed
+            # schedules report their measured interconnect traffic
+            stats: list = []
             sources = decision.migration_step.sources_by_layer(
                 self.controller.num_slots
             )
             for layer, src in sources.items():
-                moe = apply_layer_permutation(moe, layer, src)
+                moe = apply_layer_permutation(
+                    moe, layer, src,
+                    via=self.ecfg.migration_via, policy=self.policy,
+                    stats_out=stats,
+                )
             new_blocks["moe"] = moe
             self.params = {**self.params, "blocks": new_blocks}
+            migration_charge = self._record_migration(
+                decision.migration_step.num_moves,
+                decision.migration_cost,
+                stats,
+                cost_mx,
+            )
             # router remap tables follow the physical layout atomically
             self.placements = jnp.asarray(
                 self.controller.expert_to_slot_tables()
@@ -503,7 +634,65 @@ class ServingEngine:
             r["applied"] for r in self.controller.replans
         ):
             self.placement_applied = True
-        return decision.migration_cost
+        return migration_charge
+
+    def _record_migration(
+        self,
+        moves: int,
+        modeled_s: float,
+        stats: list,
+        cost_mx: np.ndarray | None,
+    ) -> float:
+        """Record one applied batch's measured-vs-modeled cost; returns the
+        charge for the step.
+
+        Host-path batches carry no measurement — the modeled charge stands.
+        Collective batches are timed by the (possibly injected) true
+        interconnect on the payload the executed schedules actually
+        shipped; the double-buffered copy can hide
+        ``migration.overlap_fraction`` of its transfer behind this step's
+        MoE compute, so only the non-overlappable tail is charged. Every
+        measurement also feeds the controller's bandwidth estimator.
+        """
+        record: dict[str, Any] = {
+            "step": self.step_count,
+            "via": self.ecfg.migration_via if stats else "host",
+            "moves": moves,
+            "modeled_s": float(modeled_s),
+        }
+        charge = float(modeled_s)
+        if stats:
+            total = stats[0]
+            for s in stats[1:]:
+                total = total + s
+            mi = self._measure_interconnect
+            measured_s = mi.cost_bytes(total.payload_bytes)
+            transfer_s = total.payload_bytes / mi.bandwidth
+            compute_s = (
+                float(cost_mx.max(axis=1).sum())
+                if cost_mx is not None
+                else 0.0
+            )
+            overlap_s = min(
+                self.ecfg.migration.overlap_fraction * transfer_s, compute_s
+            )
+            charge = max(measured_s - overlap_s, 0.0)
+            record.update(
+                measured_s=measured_s,
+                charged_s=charge,
+                payload_bytes=total.payload_bytes,
+                cross_rows=total.cross_rows,
+                local_rows=total.local_rows,
+                rounds=total.rounds,
+                overlap_s=overlap_s,
+            )
+            if self.controller is not None:
+                self.controller.observe_migration_measurement(
+                    total.payload_bytes, measured_s, modeled_s=modeled_s,
+                    step=self.step_count,
+                )
+        self.migration_records.append(record)
+        return charge
 
     # ------------------------------------------------------------------
     def step(self) -> dict[str, Any]:
@@ -597,5 +786,23 @@ class ServingEngine:
                 replans=float(len(self.controller.replans)),
                 migration_s=self.controller.total_migration_cost,
                 max_moves_per_step=float(self.controller.max_moves_in_step),
+            )
+        measured = [
+            r for r in self.migration_records if "measured_s" in r
+        ]
+        if measured:
+            out.update(
+                migration_modeled_s=float(
+                    sum(r["modeled_s"] for r in measured)
+                ),
+                migration_measured_s=float(
+                    sum(r["measured_s"] for r in measured)
+                ),
+                migration_payload_bytes=float(
+                    sum(r["payload_bytes"] for r in measured)
+                ),
+                migration_overlap_s=float(
+                    sum(r["overlap_s"] for r in measured)
+                ),
             )
         return out

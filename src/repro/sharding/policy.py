@@ -127,6 +127,22 @@ class ShardingPolicy:
         )
         return data_spec, expert_spec
 
+    def expert_collective_axis(self, num_slots: int) -> str | None:
+        """Mesh axis for collective expert-row migration, or ``None``.
+
+        The migration plane's ppermute swaps/broadcasts address the slot
+        dim of the stacked expert weights, which ``w_expert`` shards over
+        the model axis — so collectives apply exactly when that sharding is
+        live: a real mesh, a model axis wider than one device, and a slot
+        count the axis divides. Otherwise (host smoke tests, indivisible
+        slot pools) callers fall back to the host row gather, which is
+        bit-identical."""
+        if self.mesh is None or self.model_axis_size <= 1:
+            return None
+        if num_slots % self.model_axis_size != 0:
+            return None
+        return self.model_axis
+
     def moe_expert_pad(self, Ev: int) -> tuple[int, Any]:
         """(padded E_v, expert spec) for the per-shard kernels when ``Ev``
         doesn't divide the model-axis extent.

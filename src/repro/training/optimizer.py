@@ -49,7 +49,9 @@ def _lr(cfg: AdamWConfig, step):
 
 
 def adamw_init(params) -> dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     state = {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),

@@ -7,7 +7,6 @@ counts in the metrics (GEM's Step-1 hook works identically in training).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,6 +1,5 @@
 """Checkpoint/restart fault-tolerance tests: atomicity, retention, re-mesh,
 and exact training resume."""
-import os
 
 import jax
 import jax.numpy as jnp

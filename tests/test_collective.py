@@ -1,0 +1,533 @@
+"""Collective migration plane: ppermute weight moves ≡ the host row gather.
+
+The pure-numpy lowering tests (schedule round-trip, round invariants,
+two-phase install pricing) run everywhere; the shard_map execution tests
+need the forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m pytest tests/test_collective.py
+
+(CI runs them in the ``collective-parity`` matrix entry.) What they pin
+down: budgeted swap batches and replica add/drop batches applied through
+the collective data plane land bit-for-bit on the host-apply result — at
+every mid-batch intermediate layout, per backend — and the executed
+schedules' measured traffic equals the cost model's cross-device row
+accounting.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Placement
+from repro.online.migration import (
+    MigrationConfig,
+    lower_collective_step,
+    lower_row_sources,
+    plan_migration,
+    plan_replica_migration,
+    replica_install_phases,
+    replica_source_permutation,
+)
+
+NUM_DEVICES = 4
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+# ---------------------------------------------------------------------------
+# lowering (host-side numpy, no mesh required)
+# ---------------------------------------------------------------------------
+
+def test_lowering_round_trips_random_source_maps():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        shards = int(rng.choice([2, 4, 8]))
+        per = int(rng.choice([1, 2, 4]))
+        S = shards * per
+        src = rng.integers(0, S, size=S).astype(np.int32)
+        sch = lower_row_sources(src, shards)
+        np.testing.assert_array_equal(sch.source_map(), src)
+        # ppermute constraint: per round each shard sends ≤ 1, receives ≤ 1
+        for rnd in sch.rounds:
+            assert len({t.src_shard for t in rnd}) == len(rnd)
+            assert len({t.dst_shard for t in rnd}) == len(rnd)
+        assert sch.cross_rows == sum(
+            1
+            for s in range(S)
+            if src[s] != s and src[s] // per != s // per
+        )
+
+
+def test_lowering_swap_and_broadcast_shapes():
+    # cross-shard swap: one pairwise round; intra-shard swap: local only
+    src = np.arange(8, dtype=np.int32)
+    src[[0, 5]] = src[[5, 0]]  # shards 0↔2 (2 slots/shard over 4 shards)
+    sch = lower_row_sources(src, 4)
+    assert sch.num_rounds == 1 and sch.cross_rows == 2 and sch.local_rows == 0
+    src = np.arange(8, dtype=np.int32)
+    src[[2, 3]] = src[[3, 2]]  # both on shard 1
+    sch = lower_row_sources(src, 4)
+    assert sch.num_rounds == 0 and sch.cross_rows == 0 and sch.local_rows == 2
+    # one-to-many broadcast: the source shard re-sends once per destination
+    # shard, destinations on the source's own shard stay local
+    src = np.arange(8, dtype=np.int32)
+    src[[1, 4, 6]] = 0  # slot 1 local to shard 0; slots 4, 6 on shards 2, 3
+    sch = lower_row_sources(src, 4)
+    assert sch.local_rows == 1 and sch.cross_rows == 2
+    assert sch.num_rounds == 2  # shard 0 sends one row per round
+
+
+def test_lowering_rejects_indivisible_slots():
+    with pytest.raises(ValueError, match="shard"):
+        lower_row_sources(np.arange(6, dtype=np.int32), 4)
+
+
+def test_lower_collective_step_covers_both_batch_types():
+    start = [Placement.linear(8, NUM_DEVICES)]
+    rng = np.random.default_rng(3)
+    target = [
+        Placement(
+            rng.permutation(np.repeat(np.arange(NUM_DEVICES), 2)).astype(
+                np.int32
+            ),
+            NUM_DEVICES,
+        )
+    ]
+    schedule = plan_migration(start, target, MigrationConfig())
+    for step in schedule.steps:
+        lowered = lower_collective_step(step, 8, 4)
+        for layer, src in step.sources_by_layer(8).items():
+            np.testing.assert_array_equal(
+                lowered[layer].source_map(), src
+            )
+            # a swap batch's cross rows are exactly its cross-device moves
+            assert lowered[layer].cross_rows == step.cross_device_moves(2)
+
+
+def test_replica_install_phases_compose_and_match_fetch_pricing():
+    from repro.replication import ReplicatedPlacement, replica_fetch_rows
+
+    rng = np.random.default_rng(7)
+    G, spd, E = 4, 4, 8
+    S = G * spd
+    for _ in range(100):
+        # every expert present at least once, extra slots random copies
+        cur = np.concatenate(
+            [np.arange(E), rng.integers(0, E, size=S - E)]
+        ).astype(np.int32)
+        rng.shuffle(cur)
+        tgt = cur.copy()
+        rng.shuffle(tgt)
+        fetch, fanout = replica_install_phases(cur, tgt, spd)
+        np.testing.assert_array_equal(cur[fetch][fanout], tgt)
+        # phase 2 must be purely local (fan-out of already-fetched rows)
+        assert all(
+            fanout[s] // spd == s // spd for s in range(S) if fanout[s] != s
+        )
+        # phase-1 cross fetches == replica_fetch_rows' per-device pricing
+        cross = sum(
+            1
+            for s in range(S)
+            if fetch[s] != s and fetch[s] // spd != s // spd
+        )
+        modeled = replica_fetch_rows(
+            ReplicatedPlacement(cur, G, E), ReplicatedPlacement(tgt, G, E)
+        )
+        assert cross == modeled
+
+
+# ---------------------------------------------------------------------------
+# shard_map execution (forced 8-device host)
+# ---------------------------------------------------------------------------
+
+def _mesh_policy():
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.policy import ShardingPolicy
+
+    mesh = make_host_mesh(2, 4)
+    return mesh, ShardingPolicy(mesh=mesh)
+
+
+def _arrays(S, seed=0, D=4, F=6):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.normal(size=(S, D, F)), jnp.float32),
+        jnp.asarray(rng.normal(size=(S, D, F)), jnp.float32),
+        jnp.asarray(rng.normal(size=(S, F, D)), jnp.float32),
+    )
+
+
+@needs_devices
+def test_apply_row_sources_matches_host_gather():
+    from repro.kernels.collective import apply_row_sources
+
+    mesh, _ = _mesh_policy()
+    arrays = _arrays(8)
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        src = rng.integers(0, 8, size=8).astype(np.int32)
+        out, stats = apply_row_sources(arrays, src, mesh=mesh)
+        sch = lower_row_sources(src, 4)
+        for got, ref in zip(out, arrays):
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref)[src]
+            )
+        assert stats.cross_rows == sch.cross_rows
+        assert stats.rounds == sch.num_rounds
+        row_bytes = sum(
+            int(np.prod(a.shape[1:])) * a.dtype.itemsize for a in arrays
+        )
+        assert stats.payload_bytes == sch.cross_rows * row_bytes
+
+
+@needs_devices
+def test_swap_and_broadcast_named_entry_points():
+    from repro.kernels.collective import (
+        broadcast_expert_row,
+        swap_expert_rows,
+    )
+
+    mesh, _ = _mesh_policy()
+    arrays = _arrays(8, seed=2)
+    out, stats = swap_expert_rows(arrays, [(0, 5), (2, 3)], mesh=mesh)
+    src = np.arange(8)
+    src[[0, 5]] = src[[5, 0]]
+    src[[2, 3]] = src[[3, 2]]
+    for got, ref in zip(out, arrays):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref)[src])
+    assert stats.cross_rows == 2 and stats.local_rows == 2
+
+    out, stats = broadcast_expert_row(arrays, 1, [4, 6], mesh=mesh)
+    src = np.arange(8)
+    src[[4, 6]] = 1
+    for got, ref in zip(out, arrays):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref)[src])
+    assert stats.cross_rows == 2 and stats.local_rows == 0
+
+
+@needs_devices
+def test_collective_fallback_without_expert_sharding_warns():
+    """via='collective' under a host policy falls back to the bit-identical
+    host gather (and reports no measured traffic)."""
+    import warnings
+
+    from repro.models.moe import apply_layer_permutation
+    from repro.sharding import host_policy
+
+    p = {f"w_{k}": jnp.stack([a]) for k, a in
+         zip(("gate", "up", "down"), _arrays(8, seed=3))}
+    src = np.roll(np.arange(8), 1).astype(np.int32)
+    stats: list = []
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = apply_layer_permutation(
+            p, 0, src, via="collective", policy=host_policy(),
+            stats_out=stats,
+        )
+    assert any("falling back" in str(x.message) for x in w)
+    assert not stats
+    ref = apply_layer_permutation(p, 0, src)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+def _moe_setup(policy):
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), expert_tp=2, capacity_factor=8.0
+    )  # E_v = 8 → 2 slots per model-axis shard: intra- AND cross-device swaps
+    params, _ = init_moe(
+        jax.random.PRNGKey(0), cfg, num_layers=2, dtype=jnp.float32,
+        policy=policy,
+    )
+    return cfg, params
+
+
+def _forward(cfg, policy, params, layer, e2s, backend, mesh=None):
+    from repro.models.moe import moe_layer
+
+    lp = jax.tree.map(lambda t: t[layer], params)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, cfg.d_model))
+    if mesh is not None:
+        with mesh:
+            y, aux = moe_layer(
+                x, lp, jnp.asarray(e2s), cfg, policy, backend=backend
+            )
+    else:
+        y, aux = moe_layer(
+            x, lp, jnp.asarray(e2s), cfg, policy, backend=backend
+        )
+    return np.asarray(y), np.asarray(aux["expert_counts"])
+
+
+@needs_devices
+@pytest.mark.parametrize("backend", ["einsum", "pallas", "dense_ref"])
+def test_budgeted_swaps_collective_composes_to_oneshot(backend):
+    """Budgeted swap batches through the collective plane land bit-exactly
+    on the one-shot host ``apply_placement`` — at every mid-batch
+    intermediate layout the two planes' pools agree AND the data plane
+    (per backend) produces identical outputs under the matching router
+    tables."""
+    from repro.models.moe import apply_layer_permutation, apply_placement
+
+    mesh, policy = _mesh_policy()
+    cfg, params = _moe_setup(policy)
+    Ev = cfg.num_experts * cfg.expert_tp
+    rng = np.random.default_rng(11)
+    start = [Placement.linear(Ev, NUM_DEVICES) for _ in range(2)]
+    target = [
+        Placement(
+            rng.permutation(
+                np.repeat(np.arange(NUM_DEVICES), Ev // NUM_DEVICES)
+            ).astype(np.int32),
+            NUM_DEVICES,
+        )
+        for _ in range(2)
+    ]
+    schedule = plan_migration(
+        start, target, MigrationConfig(max_moves_per_step=2)
+    )
+    assert schedule.total_moves > 0
+
+    layouts = [p.slot_to_expert() for p in start]
+    w_host, w_coll = dict(params), dict(params)
+    checked_mid = False
+    for i, step in enumerate(schedule.steps):
+        for layer, swaps in step.swaps_by_layer().items():
+            from repro.online.migration import swap_permutation
+
+            src = swap_permutation(Ev, swaps)
+            w_host = apply_layer_permutation(w_host, layer, src)
+            w_coll = apply_layer_permutation(
+                w_coll, layer, src, via="collective", policy=policy
+            )
+            layouts[layer] = layouts[layer][src]
+        for name in ("w_gate", "w_up", "w_down"):
+            np.testing.assert_array_equal(
+                np.asarray(w_coll[name]), np.asarray(w_host[name]),
+                err_msg=f"batch {i}: {name}",
+            )
+        if i == len(schedule.steps) // 2 and step.swaps:
+            # a mid-batch intermediate layout: the data plane must agree
+            # between the two pools under the layout's router table
+            layer = step.swaps[0].layer
+            e2s = np.empty(Ev, dtype=np.int32)
+            e2s[layouts[layer]] = np.arange(Ev, dtype=np.int32)
+            y_h, c_h = _forward(
+                cfg, policy, w_host, layer, e2s, backend, mesh
+            )
+            y_c, c_c = _forward(
+                cfg, policy, w_coll, layer, e2s, backend, mesh
+            )
+            np.testing.assert_array_equal(y_c, y_h)
+            np.testing.assert_array_equal(c_c, c_h)
+            checked_mid = True
+    assert checked_mid
+
+    s2e = jnp.asarray(np.stack([p.slot_to_expert() for p in target]))
+    oneshot = apply_placement(params, s2e)
+    for name in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_array_equal(
+            np.asarray(w_coll[name]), np.asarray(oneshot[name]),
+            err_msg=name,
+        )
+
+
+@needs_devices
+def test_replica_add_drop_collective_composes_mid_batch():
+    """Budgeted replica add/drop batches (one-row broadcasts) through the
+    collective plane stay bit-exact with the host plane at every batch
+    boundary, and the two-phase one-shot install matches the host gather."""
+    from repro.replication import ReplicatedPlacement
+
+    mesh, policy = _mesh_policy()
+    rng = np.random.default_rng(13)
+    G, E, slots = 4, 8, 2
+    S = E + G * slots  # 16 → 4 per shard
+    spd = S // G
+    cur_rp = [
+        ReplicatedPlacement.linear(E, G, slots) for _ in range(2)
+    ]
+    tgt_layouts = []
+    for _ in range(2):
+        tgt = np.concatenate(
+            [np.arange(E), rng.integers(0, E, size=S - E)]
+        ).astype(np.int32)
+        rng.shuffle(tgt)
+        tgt_layouts.append(tgt)
+
+    from repro.models.moe import apply_layer_permutation
+
+    # replica copies must be bit-identical rows (the plane's invariant —
+    # "any copy works"): expand per-expert base rows through each layer's
+    # layout, exactly as the engine's pool install does
+    bases = (_arrays(E, seed=5), _arrays(E, seed=6))
+    params = {
+        f"w_{k}": jnp.stack(
+            [base[i][np.asarray(rp.slot_layout())]
+             for base, rp in zip(bases, cur_rp)]
+        )
+        for i, k in enumerate(("gate", "up", "down"))
+    }
+    # budgeted path
+    schedule = plan_replica_migration(
+        [rp.slot_layout() for rp in cur_rp], tgt_layouts,
+        MigrationConfig(max_moves_per_step=4),
+    )
+    w_host, w_coll = dict(params), dict(params)
+    for i, step in enumerate(schedule.steps):
+        for layer, src in step.sources_by_layer(S).items():
+            w_host = apply_layer_permutation(w_host, layer, src)
+            w_coll = apply_layer_permutation(
+                w_coll, layer, src, via="collective", policy=policy
+            )
+        for name in params:
+            np.testing.assert_array_equal(
+                np.asarray(w_coll[name]), np.asarray(w_host[name]),
+                err_msg=f"batch {i}: {name}",
+            )
+    # one-shot two-phase install matches the host single gather
+    w_host2, w_coll2 = dict(params), dict(params)
+    for layer, (cur, tgt) in enumerate(zip(cur_rp, tgt_layouts)):
+        src = replica_source_permutation(cur.slot_layout(), tgt)
+        w_host2 = apply_layer_permutation(w_host2, layer, src)
+        fetch, fanout = replica_install_phases(cur.slot_layout(), tgt, spd)
+        for phase in (fetch, fanout):
+            w_coll2 = apply_layer_permutation(
+                w_coll2, layer, phase, via="collective", policy=policy
+            )
+    for name in params:
+        np.testing.assert_array_equal(
+            np.asarray(w_coll2[name]), np.asarray(w_host2[name]),
+            err_msg=name,
+        )
+        # both end states equal the budgeted end state
+        np.testing.assert_array_equal(
+            np.asarray(w_coll2[name]), np.asarray(w_coll[name]),
+            err_msg=name,
+        )
+
+
+@needs_devices
+def test_engine_replicated_retarget_collective_parity():
+    """The one-shot replicated pool retarget (fig21's install inside the
+    engine) generates identical tokens under both migration data planes,
+    and the collective two-phase install's measured cross rows equal the
+    replica_fetch_rows pricing the replan charges."""
+    from repro.configs import get_smoke_config
+    from repro.core import (
+        DeviceFleet, GEMConfig, profile_fleet, setup_speeds,
+        simulator_measure_fn,
+    )
+    from repro.models import init_params
+    from repro.replication import ReplicationConfig
+    from repro.serving import EngineConfig, ServingEngine
+
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", 4), tile=1, tile_time=50e-6, base=10e-6
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet, seed=0), 4, max_tokens=64, tile=1,
+        repeats=5,
+    ).profile
+    tokens = {}
+    records = {}
+    for via in ("host", "collective"):
+        params, _ = init_params(
+            cfg, jax.random.PRNGKey(0), policy, jnp.float32
+        )
+        eng = ServingEngine(
+            params, cfg, policy,
+            EngineConfig(
+                max_batch=4, max_len=96,
+                gem=GEMConfig(trace_length=8, num_restarts=4),
+                other_time_per_step=1e-4, placement_policy="gem",
+                replication=ReplicationConfig(replica_slots=1),  # 2/shard
+                migration_via=via,
+            ),
+            profile=profile, num_devices=4,
+        )
+        rng = np.random.default_rng(5)
+        for _ in range(4):
+            eng.submit(rng.integers(0, cfg.vocab_size, size=8), 20)
+        eng.run(max_steps=120)
+        assert eng.placement_applied
+        tokens[via] = {r.uid: r.generated for r in eng.finished}
+        records[via] = eng.migration_records
+    assert tokens["host"] == tokens["collective"]
+    measured = [r for r in records["collective"] if "measured_s" in r]
+    assert measured
+    expert_bytes = 3 * cfg.d_model * (cfg.expert_d_ff // cfg.expert_tp) * 4
+    for r in measured:
+        # "moves" is the replica_fetch_rows pricing; the two-phase install
+        # ships exactly that many rows over the interconnect
+        assert r["cross_rows"] == r["moves"]
+        assert r["payload_bytes"] == r["cross_rows"] * expert_bytes
+
+
+@needs_devices
+def test_engine_collective_records_measured_traffic():
+    """ServingEngine(migration_via='collective') on the mesh: migration
+    batches execute as collectives, the measured-vs-modeled records are
+    populated, and measured payload equals the cost model's expert-byte
+    accounting (1 slot/device ⇒ every swap is cross-device)."""
+    from repro.configs import get_smoke_config
+    from repro.core import (
+        DeviceFleet, GEMConfig, profile_fleet, setup_speeds,
+        simulator_measure_fn,
+    )
+    from repro.models import init_params
+    from repro.online import DriftConfig
+    from repro.serving import EngineConfig, ServingEngine
+
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", 4), tile=1, tile_time=50e-6, base=10e-6
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet, seed=0), 4, max_tokens=64, tile=1,
+        repeats=5,
+    ).profile
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=4, max_len=96,
+            gem=GEMConfig(trace_length=8, num_restarts=4),
+            other_time_per_step=1e-4, online=True,
+            drift=DriftConfig(min_steps=4, threshold=3.0),
+            migration=MigrationConfig(
+                max_moves_per_step=2, base_overhead=0.0
+            ),
+            replan_cooldown=8, payback_horizon=100_000,
+            migration_via="collective",
+        ),
+        profile=profile, num_devices=4,
+    )
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), 20)
+    eng.run(max_steps=120)
+    measured = [r for r in eng.migration_records if "measured_s" in r]
+    assert measured, "no collective batch was measured"
+    expert_bytes = eng.controller.cost_model.expert_bytes
+    for r in measured:
+        assert r["payload_bytes"] == r["moves"] * expert_bytes
+        assert r["measured_s"] <= r["modeled_s"] + 1e-12
+    report = eng.latency_report()
+    assert report["migration_payload_bytes"] > 0

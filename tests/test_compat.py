@@ -4,7 +4,6 @@ rename can't silently re-break the kernel path."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.experimental.pallas import tpu as pltpu

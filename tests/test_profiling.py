@@ -1,12 +1,10 @@
 """Step-2 profiler tests: accuracy and the paper's cost reduction (Fig. 18)."""
 import numpy as np
-import pytest
 
 from repro.core import (
     DeviceFleet,
     dense_grid,
     profile_fleet,
-    profile_fleet_dense,
     profiling_cost_seconds,
     setup_speeds,
     simulator_measure_fn,

@@ -3,7 +3,6 @@ import numpy as np
 
 from repro.core import (
     DeviceFleet,
-    ExpertTrace,
     L40_FLEET,
     TRAINIUM_FLEET,
     WorkloadSpec,
