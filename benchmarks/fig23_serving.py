@@ -1,0 +1,300 @@
+"""Fig. 23 (beyond-paper): continuous-batching serving under live traffic.
+
+The earlier figures replay *recorded* count traces through the control
+plane; this one drives the whole serving stack — timestamped arrivals,
+paged KV cache, prefill/decode interleaving, per-request SLO accounting —
+through the **real JAX data plane** (the smoke-scale Mixtral on the host
+policy), with a mid-run fleet slowdown injected while the requests are in
+flight:
+
+  * **poisson** — memoryless arrivals at a rate matched to the engine's
+    service capacity, 80/20 chat/summarize mix shifting to 20/80 mid-run
+    (disjoint vocab bands: the shift moves the router's expert histogram).
+  * **burst** — the same stream under a Markov-modulated (sticky on/off)
+    arrival process: queue spikes make admission, KV pressure, and TTFT
+    tails real.
+
+In both scenarios the believed-fastest device throttles to half speed at
+step ``SLOWDOWN_STEP`` (``set_true_profile`` — the paper's power-cap
+emulation). Policies:
+
+  * ``linear``       — vLLM default placement, never replans.
+  * ``gem-oneshot``  — one-shot GEM after the warm-up window; the plan and
+    the profile it trusts both go stale when the fleet changes.
+  * ``gem-online``   — the online adaptation plane: drift-triggered
+    (staggered) replans + budgeted migration between decode steps.
+
+Figures of merit are *per-request* SLO percentiles (TTFT/TPOT/E2E p50/p99)
+from simulated step latencies — wall-clock on this CPU container says
+nothing about TPU serving, the fleet latency model does.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig23_serving [--smoke]
+
+Exits non-zero on any violated invariant:
+  (1) online-GEM p99 TPOT ≤ ``TPOT_GATE_MARGIN`` x one-shot-GEM on the
+      burst scenario (the headline gate: adaptation must pay for itself
+      where tails are worst; the margin absorbs small-sample tail noise);
+  (2) paged-pool safety on every run — peak usage within the pool, block
+      conservation + exclusive ownership, every block returned at drain;
+  (3) degenerate-arrival parity — ``serve(batch_arrivals(...))`` must
+      reproduce ``submit()+run()`` tokens bit-for-bit.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    DeviceFleet,
+    GEMConfig,
+    profile_fleet,
+    setup_speeds,
+    simulator_measure_fn,
+)
+from repro.models import init_params
+from repro.online import DriftConfig, MigrationConfig, ServeScenario, serve_scenario
+from repro.serving import (
+    ArrivalConfig,
+    EngineConfig,
+    PagedKVConfig,
+    ServingEngine,
+    TaskProfile,
+    batch_arrivals,
+    generate_arrivals,
+)
+from repro.sharding import host_policy
+
+from .common import NUM_DEVICES, add_seed_arg, seeded
+
+MAX_BATCH = 4
+MAX_LEN = 64
+SLOWDOWN_STEP = 32  # engine step at which the true fleet departs the belief
+ARRIVAL_RATE = 1000.0  # req/s in simulated time (~engine service capacity)
+MAX_MOVES_PER_STEP = 2
+# Smoke-scale p99 over a handful of requests is a max statistic; allow this
+# much tail noise before calling the online plane a regression.
+TPOT_GATE_MARGIN = 1.15
+
+# Task mix sized to MAX_LEN (prompt + output always fit the KV budget);
+# disjoint vocab bands make the mid-run mix shift router-visible.
+CHAT = TaskProfile("chat", prompt_buckets=(8, 16), output_mean=12.0,
+                   output_bounds=(4, 24), vocab_band=(0.0, 0.5))
+SUMM = TaskProfile("summarize", prompt_buckets=(16, 32), output_mean=8.0,
+                   output_bounds=(4, 16), vocab_band=(0.5, 1.0))
+
+
+def _model_config():
+    # granite-moe smoke: 8 experts over 4 devices (2 slots each) — enough
+    # freedom for placement to matter — and full attention, so the paged-KV
+    # plane engages without arch tweaks
+    return dataclasses.replace(
+        get_smoke_config("granite-moe-3b-a800m"), decode_capacity_factor=4.0
+    )
+
+
+def _profile(speeds, *, seed: int):
+    # Per-token cost resolution (tile=1): a serving step routes only a
+    # handful of tokens per layer, so a coarse tile staircase would price
+    # every placement into the same bucket and erase the policy signal.
+    fleet = DeviceFleet.from_speeds(
+        speeds, tile=1, tile_time=20e-6
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet, seed=seed), NUM_DEVICES,
+        max_tokens=MAX_BATCH * MAX_LEN, tile=1, repeats=3,
+    ).profile
+
+
+def _engine_config(policy_name: str, *, online: bool) -> EngineConfig:
+    return EngineConfig(
+        max_batch=MAX_BATCH, max_len=MAX_LEN,
+        gem=GEMConfig(trace_length=8, num_restarts=4),
+        placement_policy=policy_name,
+        replan_after=8,
+        other_time_per_step=2e-5,
+        online=online,
+        drift=DriftConfig(min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=MAX_MOVES_PER_STEP),
+        replan_cooldown=8,
+        staggered_replan=True,
+        kv=PagedKVConfig(block_size=4, num_blocks=40, watermark_blocks=1),
+        prefill_chunk=16,
+        prefill_time_per_token=2e-6,
+    )
+
+
+def _build_engine(policy_name: str, *, online: bool, believed, params, cfg):
+    return ServingEngine(
+        params, cfg, host_policy(), _engine_config(policy_name, online=online),
+        profile=believed, num_devices=NUM_DEVICES,
+    )
+
+
+def _arrival_stream(process: str, vocab_size: int, *, num_requests: int,
+                    seed: int):
+    t_shift = 0.5 * num_requests / ARRIVAL_RATE
+    return generate_arrivals(
+        ArrivalConfig(
+            rate=ARRIVAL_RATE, num_requests=num_requests, process=process,
+            burst_multiplier=4.0, burst_active_frac=0.25, burst_regime_len=8,
+        ),
+        vocab_size,
+        seed=seeded(1, seed),
+        mix=[(CHAT, 0.8), (SUMM, 0.2)],
+        mix_shift=(t_shift, [(CHAT, 0.2), (SUMM, 0.8)]),
+    )
+
+
+def _check_pool(engine: ServingEngine, label: str, violations: list) -> None:
+    pool = engine.kv_pool
+    if pool is None:
+        violations.append(f"{label}: engine unexpectedly ran dense")
+        return
+    pool.check_invariants()
+    if pool.peak_used > pool.usable_blocks:
+        violations.append(
+            f"{label}: pool peak {pool.peak_used} blocks exceeds the "
+            f"{pool.usable_blocks} usable"
+        )
+    if pool.used_blocks != 0:
+        violations.append(
+            f"{label}: {pool.used_blocks} blocks still held after drain"
+        )
+
+
+def run_scenario(process: str, *, params, cfg, believed, true_slow,
+                 num_requests: int, seed: int, violations: list) -> dict:
+    specs = _arrival_stream(
+        process, cfg.vocab_size, num_requests=num_requests, seed=seed
+    )
+    rows: dict = {}
+    for name, online in (
+        ("linear", False), ("gem-oneshot", False), ("gem-online", True),
+    ):
+        policy_name = "linear" if name == "linear" else "gem"
+        eng = _build_engine(
+            policy_name, online=online, believed=believed,
+            params=params, cfg=cfg,
+        )
+        scen = ServeScenario(
+            f"{process}/{name}", list(specs),
+            profile_schedule={SLOWDOWN_STEP: true_slow},
+        )
+        done = serve_scenario(eng, scen, max_steps=5_000)
+        if len(done) != num_requests:
+            violations.append(
+                f"{process}/{name}: {len(done)}/{num_requests} finished"
+            )
+        _check_pool(eng, f"{process}/{name}", violations)
+        rows[name] = eng.latency_report()
+    online_row, oneshot = rows["gem-online"], rows["gem-oneshot"]
+    if (
+        process == "burst"
+        and online_row["tpot_p99"] > TPOT_GATE_MARGIN * oneshot["tpot_p99"]
+    ):
+        violations.append(
+            f"burst: online p99 TPOT {online_row['tpot_p99']:.6f}s > "
+            f"{TPOT_GATE_MARGIN:.2f}x one-shot {oneshot['tpot_p99']:.6f}s"
+        )
+    return rows
+
+
+def check_parity(*, params, cfg, believed, violations: list) -> bool:
+    """Degenerate arrivals (everything at t=0) must reproduce submit()+run()
+    tokens bit-for-bit — trace replay is a special case of live serving."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(6)]
+    outs = {}
+    for mode in ("submit", "serve"):
+        eng = _build_engine(
+            "gem", online=False, believed=believed, params=params, cfg=cfg
+        )
+        if mode == "submit":
+            for p in prompts:
+                eng.submit(p, max_new_tokens=8)
+            done = eng.run(max_steps=300)
+        else:
+            done = eng.serve(batch_arrivals(prompts, 8), max_steps=300)
+        outs[mode] = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    ok = outs["submit"] == outs["serve"]
+    if not ok:
+        violations.append("degenerate-arrival parity broken: serve() tokens "
+                          "differ from submit()+run()")
+    return ok
+
+
+def run(*, smoke: bool = False, seed: int = 0) -> dict:
+    cfg = _model_config()
+    params, _ = init_params(
+        cfg, jax.random.PRNGKey(seeded(0, seed)), host_policy(), jnp.float32
+    )
+    speeds = setup_speeds("moderate", NUM_DEVICES)
+    believed = _profile(speeds, seed=seeded(2, seed))
+    slow = speeds.copy()
+    slow[int(np.argmax(speeds))] /= 2.0
+    true_slow = _profile(slow, seed=seeded(2, seed))
+    num_requests = 16 if smoke else 32
+
+    out: dict = {"scenarios": {}, "violations": [], "config": {
+        "num_requests": num_requests, "rate": ARRIVAL_RATE,
+        "slowdown_step": SLOWDOWN_STEP, "seed": seed,
+        "max_moves_per_step": MAX_MOVES_PER_STEP,
+    }}
+    for process in ("poisson", "burst"):
+        out["scenarios"][process] = run_scenario(
+            process, params=params, cfg=cfg, believed=believed,
+            true_slow=true_slow, num_requests=num_requests, seed=seed,
+            violations=out["violations"],
+        )
+    out["parity"] = check_parity(
+        params=params, cfg=cfg, believed=believed,
+        violations=out["violations"],
+    )
+    return out
+
+
+_COLS = ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99", "e2e_p99")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request count (CI)")
+    ap.add_argument("--out", default="results/fig23_serving.json")
+    add_seed_arg(ap)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, seed=args.seed)
+    for process, rows in out["scenarios"].items():
+        print(f"== {process}")
+        for name, rep in rows.items():
+            cells = "  ".join(
+                f"{c}={rep.get(c, float('nan'))*1e3:7.3f}ms" for c in _COLS
+            )
+            print(
+                f"  {name:12s} {cells}  preempt={rep.get('kv_preemptions', 0):.0f}"
+                f"  peak_blocks={rep.get('kv_peak_used_blocks', 0):.0f}"
+                f"  replans={rep.get('replans', 0):.0f}"
+            )
+    print(f"parity(serve==submit): {out['parity']}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.out}")
+    if out["violations"]:
+        for v in out["violations"]:
+            print(f"VIOLATION: {v}")
+        return 1
+    print("all serving gates hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,6 +38,7 @@ __all__ = [
     "init_attention",
     "attention_train",
     "attention_decode",
+    "attention_decode_paged",
     "AttnCache",
 ]
 
@@ -339,3 +340,102 @@ def attention_decode(
     new_k = policy.kv_cache(new_k[None])[0]
     new_v = policy.kv_cache(new_v[None])[0]
     return y, AttnCache(new_k, new_v)
+
+
+def attention_decode_paged(
+    x,
+    p,
+    k_pool,
+    v_pool,
+    block_tables,
+    cur_len,
+    config: ModelConfig,
+    policy: ShardingPolicy,
+):
+    """One decode step against a paged KV pool (one layer's pool).
+
+    x (B, 1, D); ``k_pool``/``v_pool`` (N, bs, KV, hd) — the shared block
+    pool; ``block_tables`` (B, n_max) int32 maps each row's logical
+    positions ``[0, n_max·bs)`` onto physical blocks (block 0 is the null
+    block: inactive rows and unallocated tail entries point there);
+    ``cur_len`` (B,) int32 — per-row valid lengths, so ragged batches need
+    no shared-max zero-panel approximation. The new token is written at
+    physical ``(table[cur_len // bs], cur_len % bs)``; rows whose table
+    entry is the null block scatter harmlessly into block 0, which active
+    rows never own and masked scores never read.
+
+    Returns (out (B, 1, D), (new_k_pool, new_v_pool)). Sliding-window
+    attention is not supported on the paged path — the engine keeps the
+    dense cache for those archs.
+    """
+    B = x.shape[0]
+    H, KV, hd = config.num_heads, config.num_kv_heads, config.head_dim
+    bs = k_pool.shape[-3]
+    n_max = block_tables.shape[-1]
+    S_v = n_max * bs  # logical view length
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k_new = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v_new = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if config.qkv_bias:
+        q = q + p["bq"]
+        k_new = k_new + p["bk"]
+        v_new = v_new + p["bv"]
+    q = policy.constrain(q, policy.batch, None, None)
+    k_new = policy.constrain(k_new, policy.batch, None, None)
+    v_new = policy.constrain(v_new, policy.batch, None, None)
+    q = q.reshape(B, 1, H, hd)
+    k_new = k_new.reshape(B, 1, KV, hd)
+    v_new = v_new.reshape(B, 1, KV, hd)
+    if config.qk_norm:
+        q = rms_norm(q, p["q_norm"], config.norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], config.norm_eps)
+    # per-row rotary phase: each row is at its own position
+    cos, sin = rope(cur_len, hd, config.rope_theta)  # (B, hd/2)
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k_new = apply_rope(k_new, cos[:, None], sin[:, None])
+
+    # gather each row's logical cache view through its block table
+    k_view = k_pool[block_tables].reshape(B, S_v, KV, hd)
+    v_view = v_pool[block_tables].reshape(B, S_v, KV, hd)
+
+    qg = _grouped(q, config)[:, 0]  # (B, KV, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    s_cache = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(k_view.dtype), k_view,
+        preferred_element_type=jnp.float32,
+    ) * scale  # (B, KV, G, S_v) fp32
+    pos = jnp.arange(S_v)
+    valid = pos[None, :] < cur_len[:, None]  # (B, S_v) — ragged masking
+    s_cache = jnp.where(valid[:, None, None, :], s_cache, NEG_INF)
+    s_new = jnp.einsum(
+        "bkgd,bkd->bkg", qg.astype(jnp.float32),
+        k_new[:, 0].astype(jnp.float32),
+    )[..., None] * scale  # (B, KV, G, 1)
+
+    # two-piece online softmax, identical to the dense decode path
+    m = jnp.maximum(jnp.max(s_cache, axis=-1, keepdims=True), s_new)
+    e_cache = jnp.exp(s_cache - m)
+    e_new = jnp.exp(s_new - m)
+    denom = jnp.sum(e_cache, axis=-1, keepdims=True) + e_new
+    out_cache = jnp.einsum(
+        "bkgs,bskd->bkgd", e_cache.astype(v_view.dtype), v_view,
+        preferred_element_type=jnp.float32,
+    )
+    out = (out_cache + e_new * v_new[:, 0, :, None].astype(jnp.float32)) / denom
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+
+    out = policy.constrain(out, policy.batch, None, None)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    y = policy.constrain(y, policy.batch, None, None)
+
+    # scatter the new K/V into each row's current block (blocks are
+    # uniquely owned, so active rows never collide; null-block rows may —
+    # last-writer-wins into storage that is never validly read)
+    blk = jnp.take_along_axis(
+        block_tables, (cur_len // bs)[:, None], axis=1
+    )[:, 0]  # (B,) physical block per row
+    off = cur_len % bs
+    new_k_pool = k_pool.at[blk, off].set(k_new[:, 0].astype(k_pool.dtype))
+    new_v_pool = v_pool.at[blk, off].set(v_new[:, 0].astype(v_pool.dtype))
+    return y, (new_k_pool, new_v_pool)

@@ -26,7 +26,13 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..sharding.policy import ShardingPolicy
-from .attention import AttnCache, attention_decode, attention_train, init_attention
+from .attention import (
+    AttnCache,
+    attention_decode,
+    attention_decode_paged,
+    attention_train,
+    init_attention,
+)
 from .layers import (
     cross_entropy_loss,
     embed_tokens,
@@ -45,6 +51,7 @@ __all__ = [
     "prefill",
     "decode_step",
     "init_decode_cache",
+    "init_paged_decode_cache",
 ]
 
 
@@ -361,6 +368,31 @@ def init_decode_cache(config: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_decode_cache(config: ModelConfig, num_blocks: int,
+                            block_size: int, policy: ShardingPolicy,
+                            dtype=jnp.bfloat16):
+    """Paged KV pools for ``decode_step(..., block_tables=...)``.
+
+    Shape ``(L, N, block_size, KV, hd)`` per K/V: a shared block pool per
+    layer instead of per-slot ``max_len`` panels — logical sequences map
+    onto blocks through the per-request tables managed by
+    :class:`repro.serving.kv_cache.PagedKVPool`. Attention-family archs
+    without a sliding window only (SSM/hybrid state is O(1) per slot and
+    needs no paging; SWA's ring-buffer ages don't survive the block
+    indirection).
+    """
+    if config.is_ssm or config.is_hybrid:
+        raise ValueError("paged KV cache requires an attention-family arch")
+    if config.sliding_window > 0:
+        raise ValueError("paged KV cache does not support sliding windows")
+    L = config.num_layers
+    shape = (L, num_blocks, block_size, config.num_kv_heads, config.head_dim)
+    # pools are deliberately unconstrained (replicated on a mesh): the
+    # block dim is neither a batch nor a sequence axis, so the dense
+    # layout's kv_cache spec does not apply
+    return {"attn": {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}}
+
+
 def _ssm_tree(config, batch, leading, dtype, policy: ShardingPolicy):
     c = SSMCache.zeros(batch, config, dtype, extra_leading=leading)
     m = policy.model_axis
@@ -375,15 +407,24 @@ def _ssm_tree(config, batch, leading, dtype, policy: ShardingPolicy):
 
 
 def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
-                policy: ShardingPolicy, placements=None):
-    """One serving step: tokens (B, 1) int32, cur_len scalar int32.
+                policy: ShardingPolicy, placements=None, *,
+                block_tables=None):
+    """One serving step: tokens (B, 1) int32.
 
-    Returns (logits (B, V), new caches, moe aux or None).
+    Dense mode (``block_tables=None``): ``cur_len`` is a scalar int32
+    shared by the batch and caches are per-slot ``max_len`` panels.
+    Paged mode: ``block_tables`` (B, n_max) int32 and ``cur_len`` (B,)
+    int32 route each row's cache traffic through its own block table
+    (see :func:`init_paged_decode_cache`) — ragged batches attend at
+    their true lengths. Returns (logits (B, V), new caches, moe aux or
+    None).
     """
     x = embed_tokens(tokens, params["embed"], config, policy)
     x = policy.act_bsd(x)
     blocks = params["blocks"]
     moe_aux = None
+    if block_tables is not None and (config.is_ssm or config.is_hybrid):
+        raise ValueError("paged decode requires an attention-family arch")
 
     if config.is_hybrid:
         staged, leftover = _hybrid_split(config)
@@ -455,10 +496,17 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
         def body(xc, inputs):
             lp, placement_l, cache = inputs
             h = rms_norm(xc, lp["ln1"], config.norm_eps)
-            a, new_c = attention_decode(
-                h, lp["attn"], AttnCache(cache["k"], cache["v"]), cur_len,
-                config, policy,
-            )
+            if block_tables is not None:
+                a, (new_k, new_v) = attention_decode_paged(
+                    h, lp["attn"], cache["k"], cache["v"], block_tables,
+                    cur_len, config, policy,
+                )
+                new_c = AttnCache(new_k, new_v)
+            else:
+                a, new_c = attention_decode(
+                    h, lp["attn"], AttnCache(cache["k"], cache["v"]), cur_len,
+                    config, policy,
+                )
             xc = xc + a
             h2 = rms_norm(xc, lp["ln2"], config.norm_eps)
             if config.is_moe:

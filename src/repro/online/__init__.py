@@ -57,7 +57,13 @@ from .migration import (
     replica_source_permutation,
     swap_permutation,
 )
-from .replay import ReplayResult, ShiftScenario, replay_online
+from .replay import (
+    ReplayResult,
+    ServeScenario,
+    ShiftScenario,
+    replay_online,
+    serve_scenario,
+)
 
 __all__ = [
     "DriftConfig",
@@ -85,6 +91,8 @@ __all__ = [
     "OnlineController",
     "StepDecision",
     "ShiftScenario",
+    "ServeScenario",
     "ReplayResult",
     "replay_online",
+    "serve_scenario",
 ]

@@ -79,6 +79,12 @@ class OnlineConfig:
     truncate_rejected: bool = True  # when the net-benefit gate rejects a
     # full migration, score its cycles individually and migrate the
     # profitable prefix instead of dropping the whole plan
+    staggered_replan: bool = False  # load-drift replans re-search only the
+    # layers whose own divergence crossed the threshold (plan_layer per
+    # layer), freezing the rest at their live layout — a concentrated
+    # single-layer shift then migrates one layer's delta instead of
+    # paying whole-model plan cost and payload. Warmup and
+    # variability-drift replans stay full (they invalidate every layer).
 
     def __post_init__(self):
         if self.policy not in ("gem", "eplb", "linear"):
@@ -370,11 +376,18 @@ class OnlineController:
                     self.profile, config=self.config.replication
                 )
 
-    def _plan_rplacements(self, window: int) -> list[ReplicatedPlacement]:
+    def _plan_rplacements(
+        self, window: int, layers: set[int] | None = None
+    ) -> list[ReplicatedPlacement]:
         """Replicated-mode replan: per-layer copy selection + expanded GEM
-        search + speed-aware refinement (see repro.replication.planner)."""
+        search + speed-aware refinement (see repro.replication.planner).
+        ``layers`` (staggered replan) restricts the search to those layers;
+        the rest keep their live placement."""
         out: list[ReplicatedPlacement] = []
-        for collector in self.planner.collectors:
+        for layer, collector in enumerate(self.planner.collectors):
+            if layers is not None and layer not in layers:
+                out.append(self.current_rplacements[layer])
+                continue
             res = plan_replicated(
                 collector.trace(window), self.profile, self.planner.config,
                 self.config.replication,
@@ -382,14 +395,25 @@ class OnlineController:
             out.append(res.placement)
         return out
 
-    def _plan_placements(self, window: int) -> list[Placement]:
+    def _plan_placements(
+        self, window: int, layers: set[int] | None = None
+    ) -> list[Placement]:
         Ev, G = self.planner.num_experts, self.planner.num_devices
+
+        def skip(layer: int) -> bool:
+            return layers is not None and layer not in layers
+
         if self.config.policy == "linear":
-            return [linear_placement(Ev, G) for _ in self.planner.collectors]
+            return [
+                self.current_placements[i] if skip(i)
+                else linear_placement(Ev, G)
+                for i in range(len(self.planner.collectors))
+            ]
         if self.config.policy == "eplb":
             return [
-                eplb_placement(c.trace(window), G)
-                for c in self.planner.collectors
+                self.current_placements[i] if skip(i)
+                else eplb_placement(c.trace(window), G)
+                for i, c in enumerate(self.planner.collectors)
             ]
         # GEM, warm-started: alongside the restart search, hill-climb from
         # the *live* placement. The warm candidate is never worse than
@@ -398,6 +422,9 @@ class OnlineController:
         gcfg = self.planner.config
         out: list[Placement] = []
         for layer, collector in enumerate(self.planner.collectors):
+            if skip(layer):
+                out.append(self.current_placements[layer])
+                continue
             trace = collector.trace(window)
             res = self.planner.plan_layer(layer)
             warm_p, warm_s, _ = refine(
@@ -407,11 +434,28 @@ class OnlineController:
             out.append(warm_p if warm_s <= res.score else res.placement)
         return out
 
+    def _staggered_layers(self, reason: str) -> set[int] | None:
+        """Layer subset for a staggered replan, or ``None`` for a full one.
+
+        Only load-drift replans stagger (a profile rescale or warm-up
+        invalidates every layer), and only when the detector localizes the
+        shift to a proper non-empty subset — an empty subset means the mean
+        fired on broad elevation, which needs the full replan."""
+        if not self.config.staggered_replan or reason != "load-drift":
+            return None
+        sel = self.load_detector.drifted_layers()
+        if 0 < len(sel) < self.planner.num_layers:
+            return {int(x) for x in sel}
+        return None
+
     def _replan(self, decision: StepDecision, reason: str) -> None:
         window = self.planner.config.trace_length
         traces = [c.trace(window) for c in self.planner.collectors]
+        layers = self._staggered_layers(reason)
         if self.replicated:
-            rtarget = self._plan_rplacements(window)
+            rtarget = self._plan_rplacements(window, layers)
+            # skipped layers reuse the live ReplicatedPlacement, whose
+            # slot_layout() IS the live layout — zero moves by construction
             target_layouts = [rp.slot_layout() for rp in rtarget]
             schedule = plan_replica_migration(
                 self.slot_layouts, target_layouts, self.config.migration
@@ -426,9 +470,20 @@ class OnlineController:
                 for t, rp in zip(traces, rtarget)
             )
         else:
-            target = self._plan_placements(window)
+            target = self._plan_placements(window, layers)
+            # migration targets for skipped layers must be the *raw live*
+            # layout, not the derived Placement: a Placement canonicalises
+            # expert order within each device, and after a truncated
+            # migration the live layout may not be canonical — diffing
+            # against the Placement would emit spurious within-device moves
+            migration_target = (
+                list(target) if layers is None else [
+                    target[i] if i in layers else self.slot_layouts[i]
+                    for i in range(len(target))
+                ]
+            )
             schedule = plan_migration(
-                self.slot_layouts, target, self.config.migration
+                self.slot_layouts, migration_target, self.config.migration
             )
             cur_score = sum(
                 score(t, self.profile, p)
@@ -446,6 +501,8 @@ class OnlineController:
             "step": self._step, "reason": reason,
             "moves": schedule.total_moves, "applied": True,
         }
+        if layers is not None:
+            record["staggered_layers"] = sorted(layers)
         if schedule.total_moves == 0:
             self.replans.append(record)
             self._reset_reference(traces)
@@ -464,7 +521,7 @@ class OnlineController:
             truncated = None
             if self.config.truncate_rejected and not self.replicated:
                 truncated = self._truncate_schedule(
-                    target, traces, window, record
+                    migration_target, traces, window, record
                 )
             if truncated is None:
                 record["applied"] = False
@@ -485,7 +542,7 @@ class OnlineController:
 
     def _truncate_schedule(
         self,
-        target: list[Placement],
+        target: list,
         traces: list[ExpertTrace],
         window: int,
         record: dict,
@@ -493,8 +550,10 @@ class OnlineController:
         """Budget-aware plan truncation: when the full migration cannot
         amortise its weight traffic, score the delta's permutation cycles
         *individually* (each cycle is independently applicable) and migrate
-        only the profitable ones. Returns a schedule or ``None`` when no
-        cycle pays for itself."""
+        only the profitable ones. ``target`` entries are Placements or raw
+        live layouts (staggered replans freeze skipped layers at the raw
+        layout). Returns a schedule or ``None`` when no cycle pays for
+        itself."""
         cycles = migration_cycles(self.slot_layouts, target)
         horizon = self.config.payback_horizon
         spb = max(self.config.migration.max_moves_per_step // 2, 1)

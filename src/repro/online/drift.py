@@ -180,6 +180,21 @@ class LoadDriftDetector:
         # change is common-mode across layers
         return bool(level > threshold)
 
+    def drifted_layers(self) -> np.ndarray:
+        """Layer ids whose *individual* divergence exceeds the threshold.
+
+        The fire decision uses the layer mean (common-mode drift), but a
+        shift can be concentrated: a single-layer hot-expert change leaves
+        the other layers inside their stationary band. Staggered replans
+        (``OnlineConfig.staggered_replan``) re-search only these layers.
+        Empty result ⇒ the mean fired on broad low-level elevation with no
+        layer individually over threshold — callers should replan all.
+        """
+        thr = self.effective_threshold
+        if thr is None:
+            return np.arange(self.num_layers, dtype=np.int32)
+        return np.nonzero(self.last_divergence > thr)[0].astype(np.int32)
+
 
 class VariabilityDriftDetector:
     """EWMA of observed/predicted per-device latency — curve departure."""

@@ -23,7 +23,13 @@ from ..core.gem import GEMPlanner
 from ..core.types import GEMConfig, VariabilityProfile
 from .controller import OnlineConfig, OnlineController
 
-__all__ = ["ShiftScenario", "ReplayResult", "replay_online"]
+__all__ = [
+    "ShiftScenario",
+    "ReplayResult",
+    "ServeScenario",
+    "replay_online",
+    "serve_scenario",
+]
 
 
 @dataclasses.dataclass
@@ -122,6 +128,61 @@ class ReplayResult:
             "max_moves_per_step": int(self.moves_per_step.max(initial=0)),
             "replans": len(self.replans),
         }
+
+
+@dataclasses.dataclass
+class ServeScenario:
+    """A live-traffic serving run with timed mid-run fleet changes.
+
+    The engine-level sibling of :class:`ShiftScenario`: instead of a
+    pre-recorded count trace, ``specs`` is a timestamped arrival stream
+    (:class:`~repro.serving.arrivals.RequestSpec`, e.g. from
+    ``generate_arrivals`` — a task-mix shift is encoded in the stream
+    itself via ``mix_shift``), and ``profile_schedule`` maps an *engine
+    step* to the true fleet profile injected from that step on
+    (``ServingEngine.set_true_profile``). The control plane keeps planning
+    on its belief until its detectors catch the change — the same
+    closed-loop semantics as :func:`replay_online`, but through the real
+    JAX data plane with continuous batching, paged KV, and per-request
+    SLO accounting.
+    """
+
+    name: str
+    specs: list  # of repro.serving.arrivals.RequestSpec
+    profile_schedule: dict[int, VariabilityProfile] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def __post_init__(self):
+        self.specs = sorted(self.specs, key=lambda s: s.arrival_time)
+
+
+def serve_scenario(engine, scenario: ServeScenario, *,
+                   max_steps: int = 100_000) -> list:
+    """Run a :class:`ServeScenario` through a ``ServingEngine``.
+
+    Identical to ``engine.serve(scenario.specs)`` except that the true
+    profile flips at the scheduled engine steps mid-drain. Returns the
+    engine's finished-request list; SLO percentiles come from
+    ``engine.latency_report()``. (``engine`` is duck-typed to keep this
+    module importable before :mod:`repro.serving` — which imports the
+    online plane — finishes loading.)
+    """
+    injections = sorted(scenario.profile_schedule.items())
+    pending = list(scenario.specs)
+    steps = 0
+    while (pending or engine.arrivals or engine.scheduler.has_work()) \
+            and steps < max_steps:
+        while injections and engine.step_count >= injections[0][0]:
+            engine.set_true_profile(injections[0][1])
+            injections.pop(0)
+        if pending:
+            # hand the stream over in one batch; serve() merges + sorts
+            engine.serve(pending, max_steps=0)
+            pending = []
+        engine.step()
+        steps += 1
+    return engine.finished
 
 
 def replay_online(

@@ -41,6 +41,12 @@ class ReplicationConfig:
     """Budget + split policy of the replication plane."""
 
     replica_slots: int = 0  # extra physical slots per device (HBM budget)
+    # derive replica_slots from the serving engine's HBM headroom instead
+    # of the hand constant above: the engine subtracts its paged-KV-pool
+    # bytes from ``EngineConfig.hbm_budget_bytes`` and fits as many replica
+    # slots as the remainder holds (serving.kv_cache.replica_slots_for_
+    # headroom) — replication and KV paging share one memory budget
+    auto_slots: bool = False
     pattern_period: int = 16  # replica-split table length P (rank mod P)
     # devices whose relative speed (vs the fleet mean) falls below this get
     # zero token share on multi-copy experts — "never replicate onto the

@@ -1,5 +1,40 @@
+from .arrivals import (
+    DEFAULT_TASKS,
+    ArrivalConfig,
+    RequestSpec,
+    TaskProfile,
+    batch_arrivals,
+    generate_arrivals,
+)
 from .engine import EngineConfig, ServingEngine
+from .kv_cache import (
+    PagedKVConfig,
+    PagedKVPool,
+    blocks_for_tokens,
+    kv_pool_bytes,
+    replica_slots_for_headroom,
+)
 from .sampling import sample
 from .scheduler import Request, Scheduler
+from .slo import request_metrics, slo_report
 
-__all__ = ["EngineConfig", "ServingEngine", "Request", "Scheduler", "sample"]
+__all__ = [
+    "ArrivalConfig",
+    "DEFAULT_TASKS",
+    "EngineConfig",
+    "PagedKVConfig",
+    "PagedKVPool",
+    "Request",
+    "RequestSpec",
+    "Scheduler",
+    "ServingEngine",
+    "TaskProfile",
+    "batch_arrivals",
+    "blocks_for_tokens",
+    "generate_arrivals",
+    "kv_pool_bytes",
+    "replica_slots_for_headroom",
+    "request_metrics",
+    "sample",
+    "slo_report",
+]

@@ -38,7 +38,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any
+from collections import deque
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +49,12 @@ from ..configs.base import ModelConfig
 from ..core.gem import GEMPlanner
 from ..core.score import step_cost_matrix
 from ..core.types import GEMConfig, Placement, VariabilityProfile
-from ..models.model import decode_step, init_decode_cache, prefill
+from ..models.model import (
+    decode_step,
+    init_decode_cache,
+    init_paged_decode_cache,
+    prefill,
+)
 from ..models.moe import (
     apply_layer_permutation,
     apply_placement,
@@ -72,8 +78,17 @@ from ..replication import (
     replicated_step_cost_matrix,
 )
 from ..sharding.policy import ShardingPolicy
+from .arrivals import RequestSpec
+from .kv_cache import (
+    PagedKVConfig,
+    PagedKVPool,
+    blocks_for_tokens,
+    kv_pool_bytes,
+    replica_slots_for_headroom,
+)
 from .sampling import sample
 from .scheduler import Request, Scheduler
+from .slo import slo_report
 
 __all__ = ["EngineConfig", "ServingEngine"]
 
@@ -103,6 +118,8 @@ class EngineConfig:
     migration: MigrationConfig = MigrationConfig()
     replan_cooldown: int = 32  # min steps between drift replans
     payback_horizon: int = 1024  # steps a migration's gain must amortise over
+    staggered_replan: bool = False  # load-drift replans re-search only the
+    # layers the detector localises the shift to (OnlineConfig.staggered_replan)
     # --- migration data plane (repro.kernels.collective) ---
     # "host": batches apply as host-side row gathers (load-time semantics).
     # "collective": batches lower to ppermute rounds on the expert-sharded
@@ -112,6 +129,23 @@ class EngineConfig:
     # estimator. Falls back to the host gather — bit-identical — when the
     # policy has no live expert sharding.
     migration_via: str = "host"
+    # --- continuous-batching serving plane (repro.serving) ---
+    # kv_mode "auto" pages the KV cache (serving/kv_cache.py) on
+    # attention-family archs without a sliding window when the policy has
+    # no mesh (the paged pool is unsharded); "paged"/"dense" force. The
+    # dense path is the pre-paging layout, kept bit-identical.
+    kv_mode: str = "auto"  # auto | paged | dense
+    kv: PagedKVConfig = PagedKVConfig()
+    # chunked prefill: >0 spreads a prompt's *simulated* prefill time over
+    # ceil(P/chunk) engine steps (admission pacing + TTFT accounting); the
+    # prefill kernel itself still runs once, when the last chunk lands
+    prefill_chunk: int = 0
+    prefill_time_per_token: float = 0.0  # simulated prefill s/token
+    admit_lookahead: int = 8  # scheduler head-of-line lookahead window
+    # per-device HBM budget shared by the paged KV pool and the expert
+    # replica pool; required when replication.auto_slots derives
+    # replica_slots from what the KV pool leaves free
+    hbm_budget_bytes: float | None = None
 
 
 class ServingEngine:
@@ -134,6 +168,70 @@ class ServingEngine:
                 f"migration_via={engine_config.migration_via!r} not in "
                 "('host', 'collective')"
             )
+        # --- paged-KV resolution (continuous-batching serving plane) ---
+        family_ok = (
+            not (config.is_ssm or config.is_hybrid)
+            and config.sliding_window == 0
+        )
+        if engine_config.kv_mode == "auto":
+            # the paged pool is unsharded, so a live mesh keeps the proven
+            # dense layout; host-scale serving gets paging by default
+            self.paged = family_ok and policy.mesh is None
+        elif engine_config.kv_mode == "paged":
+            if not family_ok:
+                raise ValueError(
+                    "kv_mode='paged' needs an attention-family arch without "
+                    "a sliding window (SSM state is O(1) per slot; SWA ring "
+                    "ages don't survive the block indirection)"
+                )
+            self.paged = True
+        elif engine_config.kv_mode == "dense":
+            self.paged = False
+        else:
+            raise ValueError(
+                f"kv_mode={engine_config.kv_mode!r} not in "
+                "('auto', 'paged', 'dense')"
+            )
+        block_size = engine_config.kv.block_size
+        self._n_max = -(-engine_config.max_len // block_size)
+        num_blocks = engine_config.kv.num_blocks
+        if num_blocks is None:
+            # degenerate sizing: every slot holds a full-length request, so
+            # admission never fails and the paged engine behaves densely
+            num_blocks = 1 + engine_config.max_batch * self._n_max
+        self._kv_num_blocks = num_blocks
+        dtype_bytes = jax.tree.leaves(params)[0].dtype.itemsize
+        if engine_config.replication.auto_slots:
+            # HBM-aware replica budget: replica copies get whatever the KV
+            # pool leaves free of the device budget (one budget, not two)
+            if engine_config.hbm_budget_bytes is None or not config.is_moe:
+                raise ValueError(
+                    "replication.auto_slots needs a MoE config and "
+                    "EngineConfig.hbm_budget_bytes — the replica budget is "
+                    "derived from the paged KV pool's headroom"
+                )
+            pool_blocks = (
+                num_blocks if self.paged
+                else 1 + engine_config.max_batch * self._n_max
+            )
+            pool_bytes = kv_pool_bytes(
+                pool_blocks, block_size, config.num_layers,
+                config.num_kv_heads, config.head_dim, dtype_bytes,
+            )
+            engine_config = dataclasses.replace(
+                engine_config,
+                replication=dataclasses.replace(
+                    engine_config.replication,
+                    auto_slots=False,
+                    replica_slots=replica_slots_for_headroom(
+                        engine_config.hbm_budget_bytes - pool_bytes,
+                        d_model=config.d_model,
+                        expert_d_ff=config.expert_d_ff // config.expert_tp,
+                        num_layers=config.num_layers,
+                        bytes_per_param=dtype_bytes,
+                    ),
+                ),
+            )
         if engine_config.online and (profile is None or not config.is_moe):
             raise ValueError(
                 "EngineConfig(online=True) needs a MoE config and an attached "
@@ -155,10 +253,19 @@ class ServingEngine:
         self.config = config
         self.policy = policy
         self.ecfg = engine_config
-        self.scheduler = Scheduler(engine_config.max_batch)
+        self.scheduler = Scheduler(
+            engine_config.max_batch,
+            admit_lookahead=engine_config.admit_lookahead,
+        )
         self.step_count = 0
         self._uid = 0
         self.finished: list[Request] = []
+        # live-traffic state: pending timestamped arrivals (serve()) and
+        # which decode slots hold an installed (prefilled) request
+        self.arrivals: deque[RequestSpec] = deque()
+        self.installed = np.zeros(engine_config.max_batch, dtype=bool)
+        self.kv_pool: PagedKVPool | None = None
+        self.preemption_count = 0
 
         # GEM control plane (MoE archs only)
         self.profile = profile
@@ -243,6 +350,7 @@ class ServingEngine:
                         replication=engine_config.replication,
                         replan_cooldown=engine_config.replan_cooldown,
                         payback_horizon=engine_config.payback_horizon,
+                        staggered_replan=engine_config.staggered_replan,
                     ),
                     initial_placements=self.current_placements,
                     initial_rplacements=self.current_rplacements,
@@ -260,18 +368,55 @@ class ServingEngine:
 
         # decode cache pool (same storage dtype as the params)
         cache_dtype = jax.tree.leaves(params)[0].dtype
-        self.caches = init_decode_cache(
-            config, engine_config.max_batch, engine_config.max_len, policy,
-            dtype=cache_dtype,
-        )
         self.cur_len = np.zeros(engine_config.max_batch, dtype=np.int32)
         self.last_token = np.zeros(engine_config.max_batch, dtype=np.int32)
-
-        self._decode = jax.jit(
-            lambda params, caches, cur_len, tokens, placements: decode_step(
-                params, caches, cur_len, tokens, config, policy, placements
+        self.block_tables: np.ndarray | None = None
+        if self.paged:
+            self.kv_pool = PagedKVPool(
+                self._kv_num_blocks, block_size,
+                watermark_blocks=engine_config.kv.watermark_blocks,
             )
-        )
+            self.caches = init_paged_decode_cache(
+                config, self._kv_num_blocks, block_size, policy,
+                dtype=cache_dtype,
+            )
+            # (B, n_max) attention-side view; null-block rows for idle slots
+            self.block_tables = np.zeros(
+                (engine_config.max_batch, self._n_max), dtype=np.int32
+            )
+            self._decode = jax.jit(
+                lambda params, caches, cur_len, tables, tokens, placements:
+                decode_step(
+                    params, caches, cur_len, tokens, config, policy,
+                    placements, block_tables=tables,
+                )
+            )
+            KV, hd = config.num_kv_heads, config.head_dim
+
+            def _install(pool, new, blocks):
+                # new (L, 1, P, KV, hd): pad P up to n·bs, reshape to
+                # blocks, scatter into the pool rows this request owns
+                L, _, P = new.shape[:3]
+                n = blocks.shape[0]
+                newp = jnp.pad(
+                    new[:, 0],
+                    ((0, 0), (0, n * block_size - P), (0, 0), (0, 0)),
+                ).reshape(L, n, block_size, KV, hd)
+                return pool.at[:, blocks].set(newp)
+
+            self._paged_install = jax.jit(_install)
+        else:
+            self.caches = init_decode_cache(
+                config, engine_config.max_batch, engine_config.max_len,
+                policy, dtype=cache_dtype,
+            )
+            self._decode = jax.jit(
+                lambda params, caches, cur_len, tokens, placements:
+                decode_step(
+                    params, caches, cur_len, tokens, config, policy,
+                    placements,
+                )
+            )
         self._prefill = jax.jit(
             lambda params, batch, placements: prefill(
                 params, batch, config, policy, placements
@@ -279,15 +424,64 @@ class ServingEngine:
         )
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> int:
+    def submit(self, prompt, max_new_tokens: int, *,
+               arrival_time: float | None = None, task: str = "") -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if self.kv_pool is not None:
+            total = int(prompt.shape[0]) + int(max_new_tokens)
+            need = self.kv_pool.blocks_for(total)
+            if need > self.kv_pool.usable_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks but the pool only has "
+                    f"{self.kv_pool.usable_blocks} — it could never be "
+                    "served (grow PagedKVConfig.num_blocks or shorten it)"
+                )
         self._uid += 1
         req = Request(
-            self._uid, np.asarray(prompt, np.int32), max_new_tokens,
-            arrival_step=self.step_count,
+            self._uid, prompt, max_new_tokens,
+            arrival_step=self.step_count, task=task,
         )
-        req.arrival_time = self.sim_time
+        req.arrival_time = (
+            self.sim_time if arrival_time is None else float(arrival_time)
+        )
         self.scheduler.submit(req)
         return self._uid
+
+    def serve(self, specs: Iterable[RequestSpec], *, max_steps: int = 100_000
+              ) -> list[Request]:
+        """Run a timestamped arrival stream to completion.
+
+        Requests enter the scheduler queue when the simulated clock
+        reaches their ``arrival_time``; when the engine is idle the clock
+        jumps to the next arrival. ``submit()+run()`` is the degenerate
+        all-at-``t=0`` case of this path.
+        """
+        merged = sorted(
+            list(self.arrivals) + list(specs),
+            key=lambda s: s.arrival_time,  # stable: ties keep list order
+        )
+        self.arrivals = deque(merged)
+        steps = 0
+        while (self.arrivals or self.scheduler.has_work()) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    def _ingest_arrivals(self) -> None:
+        """Move arrivals whose timestamp has passed into the queue; jump
+        the clock forward when the engine is otherwise idle."""
+        if self.arrivals and not self.scheduler.has_work():
+            self.sim_time = max(
+                self.sim_time, self.arrivals[0].arrival_time
+            )
+        while self.arrivals and \
+                self.arrivals[0].arrival_time <= self.sim_time:
+            spec = self.arrivals.popleft()
+            self.submit(
+                spec.prompt, spec.max_new_tokens,
+                arrival_time=spec.arrival_time, task=spec.task,
+            )
 
     # ------------------------------------------------------------------
     def _write_slot(self, slot: int, req: Request) -> None:
@@ -334,7 +528,109 @@ class ServingEngine:
                         )
         self.cur_len[slot] = req.prompt_len
         self.last_token[slot] = int(np.asarray(jnp.argmax(logits[0])))
-        req.start_step = self.step_count
+        self.installed[slot] = True
+
+    def _install_paged_slot(self, slot: int, req: Request) -> None:
+        """Prefill one request and scatter its KV into its owned blocks."""
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, caches = self._prefill(self.params, batch, self.placements)
+        table = self.kv_pool.block_table(req.uid)
+        blocks = jnp.asarray(np.asarray(table, np.int32))
+        c = self.caches["attn"]
+        c["k"] = self._paged_install(c["k"], caches["attn"]["k"], blocks)
+        c["v"] = self._paged_install(c["v"], caches["attn"]["v"], blocks)
+        self.block_tables[slot, :] = 0
+        self.block_tables[slot, : len(table)] = table
+        self.cur_len[slot] = req.prompt_len
+        self.last_token[slot] = int(np.asarray(jnp.argmax(logits[0])))
+        self.installed[slot] = True
+
+    def _prefill_phase(self) -> float:
+        """Advance prefill for admitted-but-uninstalled slots; returns the
+        simulated prefill time charged to this step.
+
+        With ``prefill_chunk=0`` a request prefills atomically in its
+        admission step (the legacy behaviour). With a positive chunk the
+        *simulated* cost is spread over ``ceil(P/chunk)`` steps — decode
+        for already-installed slots interleaves with this accounting — and
+        the prefill kernel runs once, when the last chunk lands.
+        """
+        chunk = self.ecfg.prefill_chunk
+        charge = 0.0
+        installed_now: list[Request] = []
+        for slot, req in sorted(self.scheduler.active.items()):
+            if self.installed[slot]:
+                continue
+            advance = req.prompt_len - req.prefill_progress
+            if chunk > 0:
+                advance = min(advance, chunk)
+            req.prefill_progress += advance
+            charge += advance * self.ecfg.prefill_time_per_token
+            if req.prefilled:
+                if self.paged:
+                    self._install_paged_slot(slot, req)
+                else:
+                    self._write_slot(slot, req)
+                installed_now.append(req)
+        self.sim_time += charge
+        for req in installed_now:
+            if req.first_token_time < 0:  # keep TTFT across preemptions
+                req.first_token_time = self.sim_time
+        return charge
+
+    def _kv_admit(self, req: Request) -> bool:
+        """Scheduler admission gate: reserve the prompt's KV blocks.
+
+        Admission holds only the *prompt* blocks (decode growth allocates
+        on demand, preempting under pressure) but keeps the configured
+        watermark free as a growth reserve.
+        """
+        if not self.kv_pool.can_allocate(req.prompt_len):
+            return False
+        return self.kv_pool.allocate(req.uid, req.prompt_len)
+
+    def _preempt(self, slot: int, req: Request) -> None:
+        """Evict a running request: free its blocks, requeue it at the
+        head, and recompute its tokens on re-admission (greedy decode
+        regenerates them bit-identically)."""
+        self.kv_pool.release(req.uid)
+        self.scheduler.release(slot)
+        req.generated.clear()
+        req.preemptions += 1
+        self.preemption_count += 1
+        self.scheduler.requeue_front(req)
+        self.installed[slot] = False
+        self.cur_len[slot] = 0
+        self.last_token[slot] = 0
+        self.block_tables[slot, :] = 0
+
+    def _ensure_decode_capacity(self) -> None:
+        """Grow each running row's block table to cover this step's write;
+        when the pool runs dry, preempt the youngest-arrival request
+        (FCFS protects the oldest) and retry."""
+        for slot in list(np.nonzero(self.installed)[0]):
+            req = self.scheduler.active.get(int(slot))
+            if req is None:
+                continue
+            want = int(self.cur_len[slot]) + 1
+            while not self.kv_pool.allocate(req.uid, want):
+                victims = sorted(
+                    (
+                        (s, r) for s, r in self.scheduler.active.items()
+                        if self.installed[s]
+                    ),
+                    key=lambda sr: (sr[1].arrival_time, sr[1].uid),
+                    reverse=True,
+                )
+                if not victims:
+                    raise RuntimeError("KV pool dry with no one to preempt")
+                vslot, victim = victims[0]
+                self._preempt(vslot, victim)
+                if victim is req:
+                    break  # evicted itself: row is no longer runnable
+            else:
+                table = self.kv_pool.block_table(req.uid)
+                self.block_tables[slot, : len(table)] = table
 
     # ------------------------------------------------------------------
     def _replica_tables(self, rplacements) -> jnp.ndarray:
@@ -696,21 +992,48 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> dict[str, Any]:
-        """One engine iteration: admit → decode → sample → bookkeeping."""
-        for slot, req in self.scheduler.admit():
-            self._write_slot(slot, req)
+        """One engine iteration: ingest arrivals → admit → prefill-chunk →
+        decode → sample → bookkeeping (continuous batching)."""
+        self._ingest_arrivals()
+        can_admit = self._kv_admit if self.kv_pool is not None else None
+        for slot, req in self.scheduler.admit(can_admit=can_admit):
+            req.start_step = self.step_count
 
         if not self.scheduler.active:
             return {"active": 0}
 
+        prefill_charge = self._prefill_phase()
+        if self.paged:
+            self._ensure_decode_capacity()
+        if not self.installed.any():
+            # prefill-only step (chunked prefill in flight, or everything
+            # was preempted): charge the prefill time, no decode
+            if prefill_charge > 0:
+                self.sim_step_latencies.append(prefill_charge)
+            self.step_count += 1
+            return {
+                "active": self.scheduler.num_active,
+                "finished": len(self.finished),
+                "sim_latency": prefill_charge,
+                "placement_applied": self.placement_applied,
+            }
+
         tokens = jnp.asarray(self.last_token[:, None])
-        # single shared cur_len is not enough for ragged slots: use per-slot
-        # max — attention masks per-slot validity through cache zero panels;
-        # host-scale engine keeps it simple with per-slot loop-free decode.
-        cur = jnp.asarray(int(self.cur_len.max()))
-        logits, new_caches, moe_aux = self._decode(
-            self.params, self.caches, cur, tokens, self.placements
-        )
+        if self.paged:
+            # per-row lengths + block tables: ragged slots attend at their
+            # true positions through the paged view
+            logits, new_caches, moe_aux = self._decode(
+                self.params, self.caches, jnp.asarray(self.cur_len),
+                jnp.asarray(self.block_tables), tokens, self.placements,
+            )
+        else:
+            # single shared cur_len is not enough for ragged slots: use
+            # per-slot max — attention masks per-slot validity through
+            # cache zero panels (the dense fallback's approximation)
+            cur = jnp.asarray(int(self.cur_len.max()))
+            logits, new_caches, moe_aux = self._decode(
+                self.params, self.caches, cur, tokens, self.placements
+            )
         self.caches = new_caches
         next_tokens = np.asarray(
             sample(logits, temperature=self.ecfg.temperature,
@@ -719,7 +1042,7 @@ class ServingEngine:
 
         # GEM Step-1: per-layer expert counts from the staged dispatch
         # plane's MoEAux struct (scan-stacked RouterOutput.expert_counts)
-        sim_latency = self.ecfg.other_time_per_step
+        sim_latency = prefill_charge + self.ecfg.other_time_per_step
         if moe_aux is not None and self.planner is not None:
             counts = np.asarray(moe_aux.expert_counts)  # (L, E)
             counts_virt = np.repeat(counts, self.config.expert_tp, axis=1)
@@ -732,10 +1055,14 @@ class ServingEngine:
                 for layer in range(self.config.num_layers):
                     self.planner.observe_step(layer, counts_virt[layer])
         self.sim_step_latencies.append(sim_latency)
-        self.sim_time += sim_latency
+        # _prefill_phase already advanced the clock by its charge (the
+        # TTFT stamp needs it); advance by the decode remainder only
+        self.sim_time += sim_latency - prefill_charge
 
         done_slots = []
         for slot, req in list(self.scheduler.active.items()):
+            if not self.installed[slot]:
+                continue  # still prefilling (chunked): no token this step
             tok = int(next_tokens[slot])
             req.generated.append(tok)
             self.last_token[slot] = tok
@@ -744,10 +1071,14 @@ class ServingEngine:
                 req.finish_step = self.step_count
                 req.finish_time = self.sim_time
                 self.finished.append(req)
-                done_slots.append(slot)
-        for slot in done_slots:
+                done_slots.append((slot, req))
+        for slot, req in done_slots:
             self.scheduler.release(slot)
             self.cur_len[slot] = 0
+            self.installed[slot] = False
+            if self.kv_pool is not None:
+                self.kv_pool.release(req.uid)
+                self.block_tables[slot, :] = 0
 
         self.step_count += 1
         self._maybe_replan()
@@ -766,7 +1097,23 @@ class ServingEngine:
         return self.finished
 
     # ------------------------------------------------------------------
+    def slo_report(self) -> dict[str, float]:
+        """Per-request percentile TTFT/TPOT/E2E (serving/slo.py)."""
+        return slo_report(self.finished)
+
+    def kv_stats(self) -> dict[str, float]:
+        """Paged-pool occupancy/pressure counters (empty when dense)."""
+        if self.kv_pool is None:
+            return {}
+        out = self.kv_pool.stats()
+        out["kv_preemptions"] = float(self.preemption_count)
+        return out
+
     def latency_report(self) -> dict[str, float]:
+        """Step-level latency stats (legacy keys: ``mean_tpot`` etc. are
+        *step* latencies) merged with the per-request SLO percentiles
+        (``ttft_p99``/``tpot_p99``/``e2e_p99`` — the serving gates) and
+        the paged-pool counters."""
         lat = np.asarray(self.sim_step_latencies)
         lat = lat[lat > 0]
         e2e = np.asarray(
@@ -781,6 +1128,8 @@ class ServingEngine:
             )
         if len(e2e):
             out["mean_e2e"] = float(e2e.mean())
+        out.update(self.slo_report())
+        out.update(self.kv_stats())
         if self.controller is not None:
             out.update(
                 replans=float(len(self.controller.replans)),

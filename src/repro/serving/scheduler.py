@@ -1,11 +1,27 @@
-"""Request scheduling: FCFS slot assignment with a token budget.
+"""Request scheduling: FCFS slot assignment with token + KV-block budgets.
 
 The engine runs a fixed pool of ``max_batch`` decode slots (continuous
 batching: a finished request's slot is immediately refillable). The
-scheduler decides which queued requests to admit each step; its token budget
-guards prefill cost per step, and the optional variability-aware mode
-(beyond-paper, §Perf) weights the budget by the profiled speed of the
-slowest device so admission bursts don't amplify stragglers.
+scheduler decides which queued requests to admit each step:
+
+  * the **prefill token budget** guards prefill cost per step; the
+    variability-aware mode (beyond-paper, §Perf) weights it by the
+    profiled speed of the slowest device so admission bursts don't
+    amplify stragglers;
+  * the **KV-block budget** (``can_admit`` callback from the engine's
+    paged pool) refuses requests the physical cache can't hold;
+  * admission scans a bounded ``lookahead`` window past a budget-blocked
+    head instead of stopping at it — an over-budget request at the head
+    no longer starves smaller queued requests of free slots (head-of-line
+    fix). Skipped requests keep their queue position, and the head is
+    always first in line for the replenished budget next step, so FCFS
+    completion-order fairness survives. A *KV*-blocked request stops the
+    scan entirely: blocks only free on completion, so skipping past a
+    memory-blocked request would let later arrivals starve it.
+
+``requeue_front`` supports preemption: a request evicted when the KV pool
+runs dry re-enters at the head of the queue (its service order is
+preserved; its generated tokens are recomputed on re-admission).
 """
 from __future__ import annotations
 
@@ -31,6 +47,11 @@ class Request:
     finish_step: int = -1
     arrival_time: float = 0.0
     finish_time: float = 0.0
+    # serving-plane lifecycle (continuous batching)
+    first_token_time: float = -1.0  # sim-time of the prefill's output token
+    prefill_progress: int = 0  # prompt tokens prefilled so far (chunked)
+    preemptions: int = 0  # times evicted by KV-pool pressure
+    task: str = ""  # arrival-process task name (mix accounting)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, dtype=np.int32)
@@ -40,13 +61,18 @@ class Request:
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    @property
+    def prefilled(self) -> bool:
+        return self.prefill_progress >= self.prompt_len
+
 
 class Scheduler:
     def __init__(self, max_batch: int, *, prefill_token_budget: int = 8192,
-                 slow_device_factor: float = 1.0):
+                 slow_device_factor: float = 1.0, admit_lookahead: int = 8):
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.slow_device_factor = slow_device_factor  # <1 ⇒ tighter budget
+        self.admit_lookahead = admit_lookahead
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot → request
 
@@ -65,20 +91,46 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def requeue_front(self, req: Request) -> None:
+        """Re-queue a preempted request at the head (service order kept)."""
+        req.slot = -1
+        req.prefill_progress = 0
+        self.queue.appendleft(req)
+
     def free_slots(self) -> list[int]:
         return [s for s in range(self.max_batch) if s not in self.active]
 
-    def admit(self) -> list[tuple[int, Request]]:
-        """Assign queued requests to free slots within the prefill budget."""
+    def admit(self, *, can_admit=None) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots within the budgets.
+
+        ``can_admit(req) -> bool`` is the engine's KV-pool gate (None when
+        the pool is dense/unpaged). Scans up to ``admit_lookahead`` queue
+        entries: budget-blocked entries are skipped in place, the first
+        KV-blocked entry ends the scan (see module docstring for why the
+        two budgets starve differently).
+        """
         admissions: list[tuple[int, Request]] = []
         budget = int(self.prefill_token_budget * self.slow_device_factor)
-        for slot in self.free_slots():
-            if not self.queue:
-                break
-            if self.queue[0].prompt_len > budget and admissions:
-                break  # out of prefill budget this step
-            req = self.queue.popleft()
+        free = self.free_slots()
+        idx = 0
+        scanned = 0
+        while free and idx < len(self.queue) and scanned < self.admit_lookahead:
+            req = self.queue[idx]
+            scanned += 1
+            # the head always has first claim on a fresh budget: admit it
+            # even over-budget when nothing else was admitted this step
+            # (progress guarantee for prompts larger than the budget)
+            fits_budget = req.prompt_len <= budget or not admissions
+            if not fits_budget:
+                idx += 1  # skipped in place — keeps its queue position
+                continue
+            # the engine's can_admit may reserve KV blocks on success, so
+            # it runs only after every cheaper gate has passed
+            if can_admit is not None and not can_admit(req):
+                break  # KV-blocked: blocks free on completion only
+            del self.queue[idx]
             budget -= req.prompt_len
+            slot = free.pop(0)
             req.slot = slot
             self.active[slot] = req
             admissions.append((slot, req))

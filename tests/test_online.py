@@ -705,3 +705,90 @@ def test_online_config_rejects_replication_without_gem():
     with pytest.raises(ValueError, match="gem"):
         OnlineConfig(policy="eplb",
                      replication=ReplicationConfig(replica_slots=1))
+
+
+# ---------------------------------------------------------------------------
+# staggered (per-layer) replans
+# ---------------------------------------------------------------------------
+
+def _single_layer_shift_stream(shift_layer=2, num_steps=120, t_shift=40):
+    """Counts with one concentrated hot-expert change on ``shift_layer``
+    plus a mild sub-threshold drift on every other layer — a full replan
+    re-optimises them all, a staggered one may only touch the shifted one."""
+    rng = np.random.default_rng(7)
+    base = np.full((L, E), 10, dtype=np.int64)
+    base[:, 0] = 40
+    for t in range(num_steps):
+        counts = base.copy()
+        if t >= t_shift:
+            counts[shift_layer, 0] = 10
+            counts[shift_layer, 5] = 200
+            for l in range(L):
+                if l != shift_layer:
+                    counts[l, (l + 1) % E] += 25
+        yield t, counts + rng.integers(0, 3, size=counts.shape)
+
+
+def _run_staggered(staggered):
+    profile = _profile(setup_speeds("high", G))
+    planner = GEMPlanner(E, G, L, GEMConfig(trace_length=8, num_restarts=2))
+    planner.set_profile(profile)
+    ocfg = OnlineConfig(
+        policy="gem", online=True,
+        drift=DriftConfig(threshold=0.3, min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=64),
+        replan_cooldown=4, payback_horizon=10**6,
+        staggered_replan=staggered, truncate_rejected=False,
+    )
+    ctl = OnlineController(planner, ocfg.migration.cost_model(1e6), ocfg)
+    post_shift_moves, layers_touched = 0, set()
+    for t, counts in _single_layer_shift_stream():
+        d = ctl.observe_step(counts, None)
+        if d.migration_step is not None and t >= 40:
+            post_shift_moves += d.migration_step.num_moves
+            layers_touched |= {s.layer for s in d.migration_step.swaps}
+    return ctl, post_shift_moves, layers_touched
+
+
+def test_staggered_replan_shrinks_single_layer_shift_payload():
+    _, full_moves, full_layers = _run_staggered(False)
+    ctl, stag_moves, stag_layers = _run_staggered(True)
+    # the detector localised the shift and the replan recorded it
+    stag_records = [
+        r["staggered_layers"] for r in ctl.replans if "staggered_layers" in r
+    ]
+    assert stag_records == [[2]]
+    # skipped layers contribute ZERO moves by construction...
+    assert stag_layers == {2}
+    # ...so the migration payload strictly shrinks vs the full replan,
+    # which also re-optimises the mildly-drifted other layers
+    assert 0 < stag_moves < full_moves
+    assert 2 in full_layers and len(full_layers) > 1
+
+
+def test_staggered_replan_full_when_drift_is_common_mode():
+    """A broad (every-layer) shift must fall back to the full replan —
+    drifted_layers() covers all layers, so no stagger is recorded."""
+    profile = _profile(setup_speeds("high", G))
+    planner = GEMPlanner(E, G, L, GEMConfig(trace_length=8, num_restarts=2))
+    planner.set_profile(profile)
+    ocfg = OnlineConfig(
+        policy="gem", online=True,
+        drift=DriftConfig(threshold=0.3, min_steps=4),
+        migration=MigrationConfig(max_moves_per_step=64),
+        replan_cooldown=4, payback_horizon=10**6, staggered_replan=True,
+    )
+    ctl = OnlineController(planner, ocfg.migration.cost_model(1e6), ocfg)
+    rng = np.random.default_rng(9)
+    base = np.full((L, E), 10, dtype=np.int64)
+    base[:, 0] = 40
+    for t in range(120):
+        counts = base.copy()
+        if t >= 40:  # common-mode: every layer's hot expert changes
+            counts[:, 0] = 10
+            counts[:, 5] = 200
+        d = ctl.observe_step(
+            counts + rng.integers(0, 3, size=counts.shape), None
+        )
+    assert ctl.planned and len(ctl.replans) >= 2
+    assert not any("staggered_layers" in r for r in ctl.replans)
