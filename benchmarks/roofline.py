@@ -73,7 +73,9 @@ def moe_kernel_tiles(d_model: int, expert_d_ff: int, *, block_c: int = 128,
 
 
 VMEM_BUDGET_BYTES = 16 * 2**20  # v5e per-core VMEM
-BLOCK_C_SWEEP = (8, 16, 32, 64, 128, 256, 512, 1024)
+# 4 is the skinny decode row tile (kernels.moe_gemm.SKINNY_BLOCK_C): only
+# reachable through the clamp when C ≤ 4, where the 8-row floor pads 100%
+BLOCK_C_SWEEP = (4, 8, 16, 32, 64, 128, 256, 512, 1024)
 BLOCK_F_SWEEP = (128, 256, 512, 1024)
 
 
@@ -96,6 +98,7 @@ def sweep_pallas_blocks(mesh_data: int = 16, mesh_model: int = 16,
     """
     from repro.configs import ARCHS, SHAPES, shape_applicable
     from repro.kernels.compat import round_up as _round_up  # one staircase
+    from repro.kernels.sharded import effective_block_c  # the kernel clamp
 
     rows = []
     for arch, cfg in sorted(ARCHS.items()):
@@ -123,7 +126,7 @@ def sweep_pallas_blocks(mesh_data: int = 16, mesh_model: int = 16,
             seen_tiles = set()
             for bc in BLOCK_C_SWEEP:
                 for bf in BLOCK_F_SWEEP:
-                    bc_eff = min(bc, _round_up(C, 8))
+                    bc_eff = effective_block_c(bc, C)
                     bf_eff = min(bf, _round_up(Fv, 128))
                     if (bc_eff, bf_eff) in seen_tiles:  # clamping dedups
                         continue

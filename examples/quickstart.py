@@ -130,6 +130,12 @@ engine = ServingEngine(
         max_batch=4, max_len=64, placement_policy="gem", replan_after=8,
         kv=PagedKVConfig(block_size=4, num_blocks=48),
         prefill_chunk=16, other_time_per_step=2e-5,
+        # decode_mode="scan" (the default) compiles the whole decode step as
+        # one lax.scan executable with per-layer router/replica tables as
+        # scanned operands — one trace serves any placement, including
+        # mid-run migrations. decode_mode="python" unrolls per layer for
+        # debugging; both generate identical tokens.
+        decode_mode="scan",
     ),
     profile=prof.profile, num_devices=G,
 )

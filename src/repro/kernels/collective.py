@@ -33,6 +33,25 @@ serving engine records against the cost model's charge and feeds the
 Specs come from :meth:`ShardingPolicy.expert_collective_axis`; with
 ``mesh=None`` there is no interconnect and callers take the host gather
 path instead (see :func:`repro.models.moe.apply_layer_permutation`).
+
+**Schedule-generic executable.** :func:`apply_row_sources` bakes its
+lowered schedule into the traced program, so every applied batch pays a
+fresh jit (~0.3 s) — fine at load time, fatal at decode cadence.
+:class:`MigrationExecutable` is the serving-loop form: one jit traced
+*once* whose (L, S) row-source map is a **traced operand** (a scanned
+operand of an internal ``lax.scan`` over layers). ``ppermute``'s
+permutation must be static, so the operand-driven exchange uses
+``lax.all_to_all`` instead — every shard offers each peer the local rows
+that peer's slots want (readable off the traced map), and each receiver
+selects by owner shard; a dense exchange whose *program* is
+batch-independent, which is exactly what makes applying any migration —
+including mid-run ones — compile-free and allocation-free (weight buffers
+are donated, so the swap is in-place at the XLA level). Identity rows pass
+through untouched, so one dense (L, S) operand covers the whole stack
+(:func:`repro.online.migration.dense_step_sources`). Traffic accounting
+still comes from the host-side schedule lowering
+(:func:`stats_for_dense_sources`) — the measured-vs-modeled contract is
+about the *minimal* schedule a hardware transport would ship.
 """
 from __future__ import annotations
 
@@ -52,7 +71,9 @@ from .compat import get_shard_map
 
 __all__ = [
     "CollectiveStats",
+    "MigrationExecutable",
     "apply_row_sources",
+    "stats_for_dense_sources",
     "swap_expert_rows",
     "broadcast_expert_row",
 ]
@@ -202,6 +223,140 @@ def swap_expert_rows(arrays, swaps, *, mesh, axis: str = "model"):
     for a, b in swaps:
         src[[a, b]] = src[[b, a]]
     return apply_row_sources(arrays, src, mesh=mesh, axis=axis)
+
+
+def stats_for_dense_sources(src, num_shards: int, row_bytes: int):
+    """Per-layer measured traffic for a dense (L, S) row-source operand.
+
+    The executable ships a dense ``all_to_all`` whose wire traffic XLA
+    owns; the *accountable* traffic — what a row-level transport would
+    ship, and what the cost model prices — is the minimal schedule each
+    layer's map lowers to. Returns ``[(layer, CollectiveStats), …]`` for
+    layers whose map is not the identity (``row_bytes`` = one slot's
+    bytes summed over the weight arrays).
+    """
+    src = np.asarray(src)
+    out = []
+    for layer in range(src.shape[0]):
+        row = src[layer]
+        if np.array_equal(row, np.arange(row.shape[0])):
+            continue
+        sched = lower_row_sources(row, num_shards)
+        out.append((layer, CollectiveStats(
+            rows_rewritten=sched.cross_rows + sched.local_rows,
+            cross_rows=sched.cross_rows,
+            local_rows=sched.local_rows,
+            rounds=sched.num_rounds,
+            payload_bytes=sched.cross_rows * row_bytes,
+        )))
+    return out
+
+
+def _swap_tables(tables, src):
+    """Device-side router-table update for a permutation source map.
+
+    ``new_e2s[l, e] = inv_src[l, e2s[l, e]]`` where ``inv_src`` is the
+    per-layer inverse permutation (``inv_src[l, src[l, s]] = s``): the
+    expert that lived at slot ``s`` now lives at the slot that *sourced
+    from* ``s``. Only valid when every layer's map is a permutation —
+    migration swap batches always are; replica add/drops are not and
+    keep the host-side table recompute.
+    """
+    L, S = src.shape
+    inv = jnp.zeros((L, S), jnp.int32).at[
+        jnp.arange(L)[:, None], src
+    ].set(jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (L, S)))
+    return jnp.take_along_axis(inv, tables.astype(jnp.int32), axis=1)
+
+
+class MigrationExecutable:
+    """One jitted, schedule-generic migration apply for the serving loop.
+
+    ``__call__(src, tables, w_gate, w_up, w_down)`` rewrites the stacked
+    ``(L, S, …)`` expert pool to ``new[l] = old[l][src[l]]`` and, when
+    ``tables`` (the (L, E_v) expert→slot map) is given, swaps it on
+    device in the same dispatch — the router-table update rides the same
+    executable as the weight exchange. Returns
+    ``((w_gate, w_up, w_down), new_tables_or_None)``.
+
+    The row-source map is a traced operand, so the jit is traced once
+    per signature (tables present/absent) and **every subsequent
+    migration batch — any swap set, any layer subset, mid-run — reuses
+    the compiled executable**: zero traces on apply, which the engine's
+    trace counters assert. With ``mesh`` the exchange runs as a
+    ``lax.all_to_all`` under ``shard_map`` over mesh axis ``axis``; with
+    ``mesh=None`` it is the jitted host gather. Weight buffers are
+    donated (in-place rewrite) except on the CPU backend, where XLA
+    does not implement donation and would warn per call; callers that
+    reuse their input arrays pass ``donate=False``.
+    """
+
+    def __init__(self, *, mesh=None, axis: str = "model",
+                 donate: bool = True):
+        self.mesh = mesh
+        self.axis = axis
+        self.trace_count = 0  # bumped by the traced closure: 1 per trace
+
+        if mesh is None:
+            fn = self._host_apply
+        else:
+            n = int(mesh.shape[axis])
+
+            def exchange(src, *blks):
+                # blks: this shard's (L, per, …) blocks; src replicated
+                me = jax.lax.axis_index(axis)
+
+                def body(_, xs):
+                    src_l, blk_l = xs[0], xs[1:]
+                    per = blk_l[0].shape[0]
+                    wants = src_l.reshape(n, per)  # rows each shard needs
+                    owner = wants // per
+                    loc = wants % per
+                    own_me = jax.lax.dynamic_index_in_dim(
+                        owner, me, 0, keepdims=False)
+                    new_l = []
+                    for b in blk_l:
+                        # offer every peer the local rows its slots want
+                        # (identity rows ride along; XLA owns the wire),
+                        # then keep what this shard's true owners sent
+                        outgoing = b[loc]  # (n, per, …)
+                        recv = jax.lax.all_to_all(outgoing, axis, 0, 0)
+                        new_l.append(recv[own_me, jnp.arange(per)])
+                    return None, tuple(new_l)
+
+                _, new = jax.lax.scan(body, None, (src, *blks))
+                return new
+
+            def fn(src, tables, *ws):
+                self.trace_count += 1
+                wspecs = tuple(
+                    P(*((None, axis) + (None,) * (w.ndim - 2)))
+                    for w in ws
+                )
+                mapped = _shard_map(
+                    exchange, mesh,
+                    in_specs=(P(None, None),) + wspecs,
+                    out_specs=wspecs,
+                )
+                new_ws = mapped(src, *ws)
+                new_tables = (None if tables is None
+                              else _swap_tables(tables, src))
+                return new_ws, new_tables
+
+        donate_ws = donate and jax.default_backend() != "cpu"
+        self._apply = jax.jit(
+            fn, donate_argnums=(2, 3, 4) if donate_ws else ())
+
+    def _host_apply(self, src, tables, *ws):
+        self.trace_count += 1
+        gather = jax.vmap(lambda a, s: jnp.take(a, s, axis=0))
+        new_ws = tuple(gather(w, src) for w in ws)
+        new_tables = None if tables is None else _swap_tables(tables, src)
+        return new_ws, new_tables
+
+    def __call__(self, src, tables, w_gate, w_up, w_down):
+        src = jnp.asarray(src, jnp.int32)
+        return self._apply(src, tables, w_gate, w_up, w_down)
 
 
 def broadcast_expert_row(arrays, src_slot: int, dst_slots, *, mesh,

@@ -20,6 +20,14 @@ BlockSpecs; accumulation is fp32 in the output ref, cast once at the end.
 VMEM budget per step (bf16): x (block_c·D) + Wg,Wu (2·D·block_f) +
 Wd (block_f·D) + out fp32 (block_c·D) — e.g. D=4096, block_c=128,
 block_f=256: ≈ 1 + 4 + 2 + 2 MB ≈ 9 MB < 16 MB v5e VMEM.
+
+**Skinny decode row tile.** Decode capacities are tiny (C≈4 on decode_32k),
+so an 8-row ``block_c`` floor pads the row dim 100%. ``block_c`` may drop to
+``SKINNY_BLOCK_C`` (= 4): below the f32 (8, 128) sublane tile Mosaic pads
+the *registers* internally, but HBM→VMEM traffic and the FLOPs fed to the
+MXU halve — the staircase waste the profiler samples. The sweep in
+``benchmarks/roofline.py`` grids this tile and the clamp in
+``kernels.sharded.effective_block_c`` applies it exactly when C ≤ 4.
 """
 from __future__ import annotations
 
@@ -31,7 +39,12 @@ from jax.experimental import pallas as pl
 
 from .compat import pallas_compiler_params
 
-__all__ = ["moe_ffn_pallas"]
+__all__ = ["moe_ffn_pallas", "SKINNY_BLOCK_C"]
+
+# the skinny decode row tile: the smallest legal block_c. Tiles below the
+# f32 sublane minimum (8) are register-padded by Mosaic but still halve the
+# row-dim memory traffic at decode's C≈4 capacities.
+SKINNY_BLOCK_C = 4
 
 
 def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
@@ -67,6 +80,11 @@ def moe_ffn_pallas(
     """
     E, C, D = x_e.shape
     F = w_gate.shape[-1]
+    if block_c < SKINNY_BLOCK_C:
+        raise ValueError(
+            f"block_c={block_c} below the skinny decode tile "
+            f"{SKINNY_BLOCK_C}"
+        )
     if C % block_c or F % block_f:
         raise ValueError(
             f"C={C} must divide block_c={block_c}, F={F} block_f={block_f}"

@@ -38,10 +38,24 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .compat import get_shard_map, round_up as _round_up
-from .moe_gemm import moe_ffn_pallas
+from .moe_gemm import SKINNY_BLOCK_C, moe_ffn_pallas
 from .topk_router import topk_router_pallas
 
-__all__ = ["moe_ffn_sharded", "topk_router_sharded"]
+__all__ = ["moe_ffn_sharded", "topk_router_sharded", "effective_block_c"]
+
+
+def effective_block_c(block_c: int, C: int) -> int:
+    """Per-call row-tile clamp shared by the kernel call site, the autotune
+    sweep (``benchmarks/roofline.py``), and its pinning test.
+
+    The configured ``block_c`` clamps down to the capacity's staircase so a
+    single configured tile serves every shape: ``round_up(C, 8)`` keeps the
+    f32 sublane tile for train/prefill capacities, and capacities at or
+    below :data:`~repro.kernels.moe_gemm.SKINNY_BLOCK_C` take the skinny
+    decode tile instead — decode's C≈4 would otherwise pad its row dim
+    100% against the 8-row floor."""
+    floor = SKINNY_BLOCK_C if C <= SKINNY_BLOCK_C else 8
+    return min(block_c, _round_up(C, floor))
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -77,7 +91,21 @@ def moe_ffn_sharded(
     local (Gd/data, E_v/model, C_pad, D) buffer shard and (E_v/model, D, F)
     weight shards and loops its (static, usually 1) local data groups.
     Without one, the same per-group loop runs directly.
+
+    A 5-D ``x_e`` carries a stacked leading layer dim: (L, Gd, E_v, C, D)
+    buffers with (L, E_v, D, F) weights scan the per-layer call over L —
+    the whole-stack entry the scan-fused decode executable composes with.
     """
+    if x_e.ndim == 5:
+        def layer_call(_, xs):
+            xl, wg, wu, wd = xs
+            return None, moe_ffn_sharded(
+                xl, wg, wu, wd, mesh=mesh, data_spec=data_spec,
+                expert_spec=expert_spec, block_c=block_c, block_f=block_f,
+                interpret=interpret, pad_expert_to=pad_expert_to,
+            )
+        _, y = jax.lax.scan(layer_call, None, (x_e, w_gate, w_up, w_down))
+        return y
     Gd, Ev, C, D = x_e.shape
     F = w_gate.shape[-1]
     Ev_real = Ev
@@ -88,7 +116,7 @@ def moe_ffn_sharded(
         w_up = jnp.pad(w_up, ((0, ep), (0, 0), (0, 0)))
         w_down = jnp.pad(w_down, ((0, ep), (0, 0), (0, 0)))
         Ev = pad_expert_to
-    bc = min(block_c, _round_up(C, 8))
+    bc = effective_block_c(block_c, C)
     Cp = _round_up(C, bc)
     bf = min(block_f, _round_up(F, 128))
     Fp = _round_up(F, bf)

@@ -251,6 +251,17 @@ def build_dispatch(
     replica-split table (see the module docstring); ``num_slots`` is the
     physical slot count S of the weight pool (default E_v — required when
     the pool carries replica slots, since table contents are traced values).
+
+    **Replica-aware capacity.** With replica slots (S > E_v and a 2-D
+    table) the expected per-slot load shrinks by E_v/S — the split spreads
+    each replicated expert's tokens over its copies — so C scales by the
+    same static factor instead of staying single-copy sized, cutting the
+    (Gd, S, C, D) buffer growth replica slots add (the capacity factor
+    still absorbs routing skew, exactly as before). Budget 0 (S = E_v)
+    reduces to the original formula bit-for-bit. Both S and E_v are
+    static, so migrations and share retargets never change C — the
+    scan-fused decode executable's zero-recompile guarantee depends on
+    that.
     """
     Gd, Ng, k = router.ids.shape
     E = config.num_experts
@@ -282,7 +293,10 @@ def build_dispatch(
     )
     a_gates = jnp.repeat(router.gates.reshape(Gd, -1), tp, axis=1)
 
-    C = int(np.ceil(Ng * k / E * capacity_factor))
+    cf = capacity_factor
+    if table.ndim == 2 and S > Ev:
+        cf = capacity_factor * Ev / S  # share-weighted per-slot load
+    C = int(np.ceil(Ng * k / E * cf))
     C = max(C, 1)
     keep = pos < C
     slot_safe = jnp.where(keep, slots, S)

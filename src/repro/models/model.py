@@ -135,6 +135,30 @@ def _slice_layer(tree, idx):
     return jax.tree.map(lambda t: t[idx], tree)
 
 
+def _scan_or_unroll(f, init, xs, mode: str):
+    """Run the layer-stack body ``f`` over stacked ``xs``.
+
+    ``"scan"`` lowers the stack to one ``lax.scan`` — a single traced
+    body whose per-layer weights, placement tables, and caches are
+    *scanned operands*, so one jitted executable serves any placement /
+    replica layout / mid-run migration without retracing. ``"python"``
+    unrolls the same body as a host loop (one program per layer) — the
+    debugging/baseline mode the parity gates compare against
+    token-for-token. Outputs are stacked to match scan's (L, …) layout.
+    """
+    if mode == "scan":
+        return jax.lax.scan(f, init, xs)
+    if mode != "python":
+        raise ValueError(f"unknown layer-stack mode {mode!r}")
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = f(carry, _slice_layer(xs, i))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
 # ---------------------------------------------------------------------------
 # Blocks (train / prefill path: residual sequence-sharded)
 # ---------------------------------------------------------------------------
@@ -188,7 +212,8 @@ def _moe_aux_zero(config: ModelConfig):
 
 def _stack_forward(x, params, placements, config: ModelConfig,
                    policy: ShardingPolicy, *, return_cache: bool,
-                   remat: bool, capacity_factor=None):
+                   remat: bool, capacity_factor=None,
+                   stack_mode: str = "scan"):
     """Run the whole layer stack. Returns (x, caches, moe_aux)."""
     blocks = params["blocks"]
 
@@ -205,7 +230,7 @@ def _stack_forward(x, params, placements, config: ModelConfig,
                 return xc2, cache
             if remat:
                 inner = jax.checkpoint(inner)
-            xc, ssm_caches = jax.lax.scan(inner, xc, stage_blocks)
+            xc, ssm_caches = _scan_or_unroll(inner, xc, stage_blocks, stack_mode)
             # shared attention + MLP block (one weight copy)
             sp = _slice_layer(shared, 0)
 
@@ -233,7 +258,9 @@ def _stack_forward(x, params, placements, config: ModelConfig,
             lambda t: t[:staged].reshape(n_stages, config.attn_every, *t.shape[1:]),
             blocks,
         )
-        x, (ssm_caches, attn_caches) = jax.lax.scan(stage_body, x, staged_blocks)
+        x, (ssm_caches, attn_caches) = _scan_or_unroll(
+            stage_body, x, staged_blocks, stack_mode
+        )
         tail_caches = None
         if leftover:
             tail_blocks = jax.tree.map(lambda t: t[staged:], blocks)
@@ -245,7 +272,7 @@ def _stack_forward(x, params, placements, config: ModelConfig,
                 return xc, cache
             if remat:
                 tail = jax.checkpoint(tail)
-            x, tail_caches = jax.lax.scan(tail, x, tail_blocks)
+            x, tail_caches = _scan_or_unroll(tail, x, tail_blocks, stack_mode)
         caches = {
             "ssm_staged": ssm_caches, "attn": attn_caches, "ssm_tail": tail_caches,
         } if return_cache else None
@@ -259,7 +286,7 @@ def _stack_forward(x, params, placements, config: ModelConfig,
             return xc, cache
         if remat:
             body = jax.checkpoint(body)
-        x, caches = jax.lax.scan(body, x, blocks)
+        x, caches = _scan_or_unroll(body, x, blocks, stack_mode)
         return x, ({"ssm": caches} if return_cache else None), None
 
     # attention families
@@ -276,7 +303,9 @@ def _stack_forward(x, params, placements, config: ModelConfig,
         body = jax.checkpoint(body)
     if placements is None:
         placements = identity_placement(config, config.num_layers)
-    x, (caches, auxes) = jax.lax.scan(body, x, (blocks, placements))
+    x, (caches, auxes) = _scan_or_unroll(
+        body, x, (blocks, placements), stack_mode
+    )
     moe_aux = auxes if config.is_moe else None
     return x, ({"attn": caches} if return_cache else None), moe_aux
 
@@ -291,14 +320,16 @@ def _embed_input(params, batch, config: ModelConfig, policy: ShardingPolicy):
 
 
 def forward_train(params, batch, config: ModelConfig, policy: ShardingPolicy,
-                  placements=None, *, remat: bool = True):
+                  placements=None, *, remat: bool = True,
+                  stack_mode: str = "scan"):
     """batch: tokens (B, S[-P]), optional patches (B, P, D), labels (B, S).
 
     Returns (logits (B, S, V) sequence-sharded, aux dict).
     """
     x = _embed_input(params, batch, config, policy)
     x, _, moe_aux = _stack_forward(
-        x, params, placements, config, policy, return_cache=False, remat=remat
+        x, params, placements, config, policy, return_cache=False,
+        remat=remat, stack_mode=stack_mode,
     )
     x = rms_norm(x, params["final_norm"], config.norm_eps)
     logits = lm_logits(x, params, config, policy, mode="train")
@@ -312,9 +343,11 @@ def forward_train(params, batch, config: ModelConfig, policy: ShardingPolicy,
 
 
 def loss_fn(params, batch, config: ModelConfig, policy: ShardingPolicy,
-            placements=None, *, remat: bool = True):
+            placements=None, *, remat: bool = True,
+            stack_mode: str = "scan"):
     logits, aux = forward_train(
-        params, batch, config, policy, placements, remat=remat
+        params, batch, config, policy, placements, remat=remat,
+        stack_mode=stack_mode,
     )
     mask = batch.get("loss_mask")
     loss = cross_entropy_loss(logits, batch["labels"], mask=mask)
@@ -328,11 +361,12 @@ def loss_fn(params, batch, config: ModelConfig, policy: ShardingPolicy,
 # ---------------------------------------------------------------------------
 
 def prefill(params, batch, config: ModelConfig, policy: ShardingPolicy,
-            placements=None):
+            placements=None, *, stack_mode: str = "scan"):
     """Returns (last-position logits (B, V), caches)."""
     x = _embed_input(params, batch, config, policy)
     x, caches, _ = _stack_forward(
-        x, params, placements, config, policy, return_cache=True, remat=False
+        x, params, placements, config, policy, return_cache=True,
+        remat=False, stack_mode=stack_mode,
     )
     x = rms_norm(x, params["final_norm"], config.norm_eps)
     last = policy.constrain(x[:, -1:], policy.batch, None, None)
@@ -408,7 +442,7 @@ def _ssm_tree(config, batch, leading, dtype, policy: ShardingPolicy):
 
 def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 policy: ShardingPolicy, placements=None, *,
-                block_tables=None):
+                block_tables=None, decode_mode: str = "scan"):
     """One serving step: tokens (B, 1) int32.
 
     Dense mode (``block_tables=None``): ``cur_len`` is a scalar int32
@@ -418,6 +452,15 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
     (see :func:`init_paged_decode_cache`) — ragged batches attend at
     their true lengths. Returns (logits (B, V), new caches, moe aux or
     None).
+
+    ``decode_mode`` picks the layer-stack lowering contract
+    (:func:`_scan_or_unroll`): ``"scan"`` compiles the whole MoE decode
+    step as **one** ``lax.scan`` executable whose per-layer router
+    tables, replica tables, slot layouts (``placements``) and caches
+    are scanned operands — any placement or mid-run migration reuses
+    the same compiled program; ``"python"`` unrolls the identical body
+    per layer, the baseline the scan≡python token-parity gates diff
+    against.
     """
     x = embed_tokens(tokens, params["embed"], config, policy)
     x = policy.act_bsd(x)
@@ -443,7 +486,9 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 )
                 return xc2 + y, new_c.tree()
 
-            xc, new_ssm = jax.lax.scan(inner, xc, (stage_blocks, ssm_c))
+            xc, new_ssm = _scan_or_unroll(
+                inner, xc, (stage_blocks, ssm_c), decode_mode
+            )
             h = rms_norm(xc, sp["ln1"], config.norm_eps)
             a, new_attn = attention_decode(
                 h, sp["attn"], AttnCache(attn_c["k"], attn_c["v"]), cur_len,
@@ -460,9 +505,9 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
             lambda t: t[:staged].reshape(n_stages, config.attn_every, *t.shape[1:]),
             blocks,
         )
-        x, (new_ssm, new_attn) = jax.lax.scan(
+        x, (new_ssm, new_attn) = _scan_or_unroll(
             stage_body, x, (staged_blocks, _ssm_xs(caches["ssm_staged"]),
-                            caches["attn"])
+                            caches["attn"]), decode_mode
         )
         new_caches = {"ssm_staged": _ssm_named(new_ssm), "attn": new_attn}
         if leftover:
@@ -475,8 +520,8 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                     h, lp["ssm"], SSMCache.from_tree(cache_t), config, policy
                 )
                 return xc + y, new_c.tree()
-            x, new_tail = jax.lax.scan(
-                tail, x, (tail_blocks, _ssm_xs(caches["ssm_tail"]))
+            x, new_tail = _scan_or_unroll(
+                tail, x, (tail_blocks, _ssm_xs(caches["ssm_tail"])), decode_mode
             )
             new_caches["ssm_tail"] = _ssm_named(new_tail)
     elif config.is_ssm:
@@ -487,7 +532,9 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 h, lp["ssm"], SSMCache.from_tree(cache_t), config, policy
             )
             return xc + y, new_c.tree()
-        x, new_ssm = jax.lax.scan(body, x, (blocks, _ssm_xs(caches["ssm"])))
+        x, new_ssm = _scan_or_unroll(
+            body, x, (blocks, _ssm_xs(caches["ssm"])), decode_mode
+        )
         new_caches = {"ssm": _ssm_named(new_ssm)}
     else:
         if placements is None:
@@ -524,8 +571,8 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 aux = _moe_aux_zero(config)
             return xc + y, ({"k": new_c.k, "v": new_c.v}, aux)
 
-        x, (new_attn, auxes) = jax.lax.scan(
-            body, x, (blocks, placements, caches["attn"])
+        x, (new_attn, auxes) = _scan_or_unroll(
+            body, x, (blocks, placements, caches["attn"]), decode_mode
         )
         new_caches = {"attn": new_attn}
         if config.is_moe:

@@ -48,6 +48,7 @@ from .migration import (
     ReplicaMove,
     RowTransfer,
     SlotSwap,
+    dense_step_sources,
     lower_collective_step,
     lower_row_sources,
     migration_cycles,
@@ -79,6 +80,7 @@ __all__ = [
     "ReplicaMove",
     "RowTransfer",
     "SlotSwap",
+    "dense_step_sources",
     "lower_collective_step",
     "lower_row_sources",
     "migration_cycles",

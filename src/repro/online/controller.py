@@ -50,6 +50,7 @@ from .migration import (
     MigrationStep,
     ReplicaMigrationStep,
     ReplicaMove,
+    dense_step_sources,
     migration_cycles,
     plan_migration,
     plan_replica_migration,
@@ -199,6 +200,17 @@ class OnlineController:
     def num_slots(self) -> int:
         """Physical slots per layer (E_v, plus the replica budget)."""
         return int(len(self.slot_layouts[0]))
+
+    def dense_migration_sources(self, step) -> np.ndarray:
+        """One batch as a dense (L, S) row-source map — the *scanned
+        operand* form the data plane's schedule-generic executable takes
+        (untouched layers are identity rows), instead of per-layer maps
+        each paying their own jit. Works for both swap batches
+        (:class:`MigrationStep`) and replica add/drops
+        (:class:`ReplicaMigrationStep`)."""
+        return dense_step_sources(
+            step, self.planner.num_layers, self.num_slots
+        )
 
     def expert_to_slot_tables(self) -> np.ndarray:
         """Router remap tables matching the physical slot layouts — what

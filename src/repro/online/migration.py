@@ -688,6 +688,27 @@ def lower_row_sources(src, num_shards: int) -> CollectiveSchedule:
     return CollectiveSchedule(S, num_shards, local_src, rounds)
 
 
+def dense_step_sources(
+    step: "MigrationStep | ReplicaMigrationStep",
+    num_layers: int,
+    num_slots: int,
+) -> np.ndarray:
+    """One batch as a dense (L, S) row-source operand: the batch's per-layer
+    maps on the layers it touches, identity rows everywhere else.
+
+    This is the *scanned-operand* form the schedule-generic migration
+    executable (:func:`repro.kernels.collective.make_migration_executable`)
+    consumes — one traced array covering the whole layer stack, so applying
+    any batch is a single pre-compiled call instead of per-layer dispatches
+    each jitting their own collective schedule."""
+    src = np.tile(
+        np.arange(num_slots, dtype=np.int32), (int(num_layers), 1)
+    )
+    for layer, s in step.sources_by_layer(num_slots).items():
+        src[layer] = s
+    return src
+
+
 def lower_collective_step(
     step: "MigrationStep | ReplicaMigrationStep",
     num_slots: int,

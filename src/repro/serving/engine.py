@@ -19,11 +19,14 @@ step-counter replan with the :mod:`repro.online` adaptation plane: an
 :class:`~repro.online.controller.OnlineController` watches the same Step-1
 counts for task-mix drift and the per-device latencies for variability
 drift, replans when either fires, and hands back budgeted migration
-batches. The engine mirrors each batch as a *partial per-layer* expert-row
-permutation (:func:`~repro.models.moe.apply_layer_permutation`) between
-decode steps — router tables swap in the same step, so weights and routing
-never disagree — and charges the batch's migration cost to that step's
-simulated latency. ``set_true_profile`` lets a harness inject a mid-run
+batches. Each batch flattens to one dense (L, S) row-source operand
+(:func:`~repro.online.migration.dense_step_sources`) applied through the
+schedule-generic
+:class:`~repro.kernels.collective.MigrationExecutable` between decode
+steps — one jit traced at engine construction, zero new traces per batch,
+with the router tables swapped on device in the same dispatch so weights
+and routing never disagree — and charges the batch's migration cost to
+that step's simulated latency. ``set_true_profile`` lets a harness inject a mid-run
 fleet change (e.g. a power cap) the believed profile doesn't know about;
 the controller's variability detector then repairs the belief from the
 observed/predicted ratio, exactly as wall-clock timers would on hardware.
@@ -56,7 +59,6 @@ from ..models.model import (
     prefill,
 )
 from ..models.moe import (
-    apply_layer_permutation,
     apply_placement,
     identity_placement,
 )
@@ -65,6 +67,10 @@ from ..online import (
     MigrationConfig,
     OnlineConfig,
     OnlineController,
+)
+from ..kernels.collective import (
+    MigrationExecutable,
+    stats_for_dense_sources,
 )
 from ..online.migration import (
     replica_install_phases,
@@ -105,6 +111,13 @@ class EngineConfig:
     other_time_per_step: float = 0.0  # simulated non-MoE per-step latency
     moe_backend: str | None = None  # override ModelConfig.moe_backend for
     # the engine's data plane (einsum | pallas | dense_ref)
+    # --- whole-model decode executable (models/model.py) ---
+    # "scan" compiles the decode step as ONE lax.scan executable whose
+    # per-layer router/replica tables and slot layouts are scanned
+    # operands — any placement or mid-run migration reuses the compiled
+    # program (jit_trace_counts stays flat). "python" unrolls the same
+    # body per layer: the parity baseline.
+    decode_mode: str = "scan"
     # --- expert replication plane (repro.replication) ---
     # replica_slots>0 installs a replicated weight pool (E_v + G·slots rows
     # per layer) and replica-split router tables; plans come from the
@@ -167,6 +180,11 @@ class ServingEngine:
             raise ValueError(
                 f"migration_via={engine_config.migration_via!r} not in "
                 "('host', 'collective')"
+            )
+        if engine_config.decode_mode not in ("scan", "python"):
+            raise ValueError(
+                f"decode_mode={engine_config.decode_mode!r} not in "
+                "('scan', 'python')"
             )
         # --- paged-KV resolution (continuous-batching serving plane) ---
         family_ok = (
@@ -273,6 +291,9 @@ class ServingEngine:
         # ground truth when it departs the believed profile (set_true_profile)
         self.planner: GEMPlanner | None = None
         self.controller: OnlineController | None = None
+        self._migrate: MigrationExecutable | None = None
+        self._collective_axis: str | None = None
+        self._trace_counts = {"decode": 0, "prefill": 0}
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
@@ -330,6 +351,22 @@ class ServingEngine:
                     for _ in range(config.num_layers)
                 ]
                 self._install_replicated_pool(self.current_rplacements)
+            # schedule-generic migration executable: one jit, traced once,
+            # whose (L, S) row-source map is an operand — every migration
+            # batch (any swap set, any layer subset, mid-run) reuses the
+            # compiled program. Collective when the policy has a live
+            # expert sharding axis; the host gather (bit-identical)
+            # otherwise.
+            num_slots = int(self.params["blocks"]["moe"]["w_gate"].shape[1])
+            self._collective_axis = None
+            if engine_config.migration_via == "collective":
+                self._collective_axis = policy.expert_collective_axis(
+                    num_slots
+                )
+            self._migrate = MigrationExecutable(
+                mesh=policy.mesh if self._collective_axis else None,
+                axis=self._collective_axis or "model",
+            )
             # one cost model for both replan paths: the online plane prices
             # its batches with it, and the one-shot swap charges the same
             # model so the two modes' latency reports stay comparable
@@ -384,13 +421,17 @@ class ServingEngine:
             self.block_tables = np.zeros(
                 (engine_config.max_batch, self._n_max), dtype=np.int32
             )
-            self._decode = jax.jit(
-                lambda params, caches, cur_len, tables, tokens, placements:
-                decode_step(
+            def _decode_paged(params, caches, cur_len, tables, tokens,
+                              placements):
+                self._trace_counts["decode"] += 1  # python side effect:
+                # runs once per trace, never on compiled-executable reuse
+                return decode_step(
                     params, caches, cur_len, tokens, config, policy,
                     placements, block_tables=tables,
+                    decode_mode=engine_config.decode_mode,
                 )
-            )
+
+            self._decode = jax.jit(_decode_paged)
             KV, hd = config.num_kv_heads, config.head_dim
 
             def _install(pool, new, blocks):
@@ -410,18 +451,20 @@ class ServingEngine:
                 config, engine_config.max_batch, engine_config.max_len,
                 policy, dtype=cache_dtype,
             )
-            self._decode = jax.jit(
-                lambda params, caches, cur_len, tokens, placements:
-                decode_step(
+            def _decode_dense(params, caches, cur_len, tokens, placements):
+                self._trace_counts["decode"] += 1
+                return decode_step(
                     params, caches, cur_len, tokens, config, policy,
-                    placements,
+                    placements, decode_mode=engine_config.decode_mode,
                 )
-            )
-        self._prefill = jax.jit(
-            lambda params, batch, placements: prefill(
-                params, batch, config, policy, placements
-            )
-        )
+
+            self._decode = jax.jit(_decode_dense)
+
+        def _prefill_fn(params, batch, placements):
+            self._trace_counts["prefill"] += 1
+            return prefill(params, batch, config, policy, placements)
+
+        self._prefill = jax.jit(_prefill_fn)
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *,
@@ -633,6 +676,52 @@ class ServingEngine:
                 self.block_tables[slot, : len(table)] = table
 
     # ------------------------------------------------------------------
+    @property
+    def jit_trace_counts(self) -> dict[str, int]:
+        """Traces per jitted entry point: ``decode``, ``prefill``,
+        ``migrate``. Under ``decode_mode="scan"`` the contract is one
+        decode trace per (mode, shapes) signature and **zero** new
+        traces when a migration applies — the fig24 CI gate."""
+        out = dict(self._trace_counts)
+        out["migrate"] = (
+            self._migrate.trace_count if self._migrate is not None else 0
+        )
+        return out
+
+    def _apply_migration_sources(
+        self, src: np.ndarray, *, swap_tables: bool
+    ) -> list:
+        """Rewrite the stacked expert pool through the schedule-generic
+        executable: one compiled call for the whole (L, S) row-source
+        operand, no per-layer jits, no retracing. With ``swap_tables``
+        the (L, E_v) router tables swap on device in the same dispatch
+        (permutation batches only) and ``self.placements`` follows.
+        Returns per-layer :class:`CollectiveStats` (empty when the
+        collective plane isn't live — host applies carry no measurement).
+        """
+        moe = dict(self.params["blocks"]["moe"])
+        tables = self.placements if swap_tables else None
+        (wg, wu, wd), new_tables = self._migrate(
+            src, tables, moe["w_gate"], moe["w_up"], moe["w_down"]
+        )
+        moe["w_gate"], moe["w_up"], moe["w_down"] = wg, wu, wd
+        new_blocks = dict(self.params["blocks"])
+        new_blocks["moe"] = moe
+        self.params = {**self.params, "blocks": new_blocks}
+        if swap_tables:
+            self.placements = new_tables
+        if self._collective_axis is None:
+            return []
+        row_bytes = sum(
+            int(np.prod(w.shape[2:])) * w.dtype.itemsize
+            for w in (wg, wu, wd)
+        )
+        return [
+            s for _, s in stats_for_dense_sources(
+                src, self.policy.model_axis_size, row_bytes
+            )
+        ]
+
     def _replica_tables(self, rplacements) -> jnp.ndarray:
         """(L, E_v, P) replica-split router tables for the data plane."""
         P = self.ecfg.replication.pattern_period
@@ -662,35 +751,35 @@ class ServingEngine:
         schedules' :class:`~repro.kernels.collective.CollectiveStats`
         (empty on the host path)."""
         assert self.current_rplacements is not None
-        stats: list = []
-        moe = self.params["blocks"]["moe"]
-        if self.ecfg.migration_via == "collective":
+        if self._collective_axis is not None:
             # two-phase install: one interconnect fetch per (device, new
             # expert), then local HBM fan-out — the traffic
-            # replica_fetch_rows models, exactly
+            # replica_fetch_rows models, exactly. Each phase is one dense
+            # (L, S) operand through the schedule-generic executable.
             spd = rplacements[0].slots_per_device
-            for layer, (cur, new) in enumerate(
-                zip(self.current_rplacements, rplacements)
-            ):
-                fetch, fanout = replica_install_phases(
+            fetch, fanout = [], []
+            for cur, new in zip(self.current_rplacements, rplacements):
+                f1, f2 = replica_install_phases(
                     cur.slot_layout(), new.slot_layout(), spd
                 )
-                for src in (fetch, fanout):
-                    moe = apply_layer_permutation(
-                        moe, layer, src, via="collective",
-                        policy=self.policy, stats_out=stats,
-                    )
+                fetch.append(f1)
+                fanout.append(f2)
+            stats = self._apply_migration_sources(
+                np.stack(fetch).astype(np.int32), swap_tables=False
+            )
+            stats += self._apply_migration_sources(
+                np.stack(fanout).astype(np.int32), swap_tables=False
+            )
         else:
-            srcs = [
+            srcs = np.stack([
                 replica_source_permutation(
                     cur.slot_layout(), new.slot_layout()
                 )
                 for cur, new in zip(self.current_rplacements, rplacements)
-            ]
-            moe = apply_placement(moe, jnp.asarray(np.stack(srcs)))
-        new_blocks = dict(self.params["blocks"])
-        new_blocks["moe"] = moe
-        self.params = {**self.params, "blocks": new_blocks}
+            ])
+            stats = self._apply_migration_sources(
+                srcs.astype(np.int32), swap_tables=False
+            )
         self.placements = self._replica_tables(rplacements)
         return stats
 
@@ -812,28 +901,15 @@ class ServingEngine:
             return
         else:
             placements = self.planner.plan().placements
-        # Step-4: permute expert weights + swap router remap tables
-        slot_to_expert = jnp.asarray(
-            np.stack([p.slot_to_expert() for p in placements])
+        # Step-4: permute expert weights + swap router remap tables — one
+        # call through the schedule-generic executable (the pool is still
+        # in virtual order here, so each layer's row-source map IS its
+        # slot_to_expert table, and the in-dispatch table swap inverts it
+        # into expert_to_slot)
+        slot_to_expert = np.stack([p.slot_to_expert() for p in placements])
+        stats = self._apply_migration_sources(
+            slot_to_expert.astype(np.int32), swap_tables=True
         )
-        expert_to_slot = jnp.asarray(
-            np.stack([p.expert_to_slot() for p in placements])
-        )
-        stats: list = []
-        moe = self.params["blocks"]["moe"]
-        if self.ecfg.migration_via == "collective":
-            # the pool is still in virtual order here, so each layer's
-            # row-source map IS its slot_to_expert table
-            for layer, p in enumerate(placements):
-                moe = apply_layer_permutation(
-                    moe, layer, p.slot_to_expert(), via="collective",
-                    policy=self.policy, stats_out=stats,
-                )
-        else:
-            moe = apply_placement(moe, slot_to_expert)
-        new_blocks = dict(self.params["blocks"])
-        new_blocks["moe"] = moe
-        self.params = {**self.params, "blocks": new_blocks}
         # the one-shot swap moves weights too: charge it to the step that
         # performs it (unbudgeted, one batch), with the same cost model the
         # online mode pays per batch — otherwise comparing the two modes'
@@ -848,7 +924,6 @@ class ServingEngine:
         if self.sim_step_latencies:
             self.sim_step_latencies[-1] += swap_cost
         self.sim_time += swap_cost
-        self.placements = expert_to_slot
         self.current_placements = placements
         self.placement_applied = True
 
@@ -869,37 +944,29 @@ class ServingEngine:
         decision = self.controller.observe_step(counts_virt, observed)
         migration_charge = decision.migration_cost
         if decision.migration_step is not None:
-            new_blocks = dict(self.params["blocks"])
-            moe = dict(new_blocks["moe"])
-            # both batch types reduce to per-layer row-source maps applied
-            # as one parallel gather (a swap is {a←b, b←a}; a replica
-            # add/drop is a single one-row broadcast); under
-            # migration_via="collective" each map lowers to ppermute
-            # rounds on the expert-sharded rows instead, and the executed
-            # schedules report their measured interconnect traffic
-            stats: list = []
-            sources = decision.migration_step.sources_by_layer(
-                self.controller.num_slots
+            # both batch types reduce to one dense (L, S) row-source
+            # operand (a swap is {a←b, b←a}; a replica add/drop a one-row
+            # broadcast) applied through the schedule-generic executable —
+            # no per-batch jit, zero new traces at decode cadence. Swap
+            # batches are permutations, so the router tables ride the
+            # same dispatch on device; replica batches are not and keep
+            # the host-side table recompute from the controller's shares.
+            src = self.controller.dense_migration_sources(
+                decision.migration_step
             )
-            for layer, src in sources.items():
-                moe = apply_layer_permutation(
-                    moe, layer, src,
-                    via=self.ecfg.migration_via, policy=self.policy,
-                    stats_out=stats,
-                )
-            new_blocks["moe"] = moe
-            self.params = {**self.params, "blocks": new_blocks}
+            stats = self._apply_migration_sources(
+                src, swap_tables=not self.controller.replicated
+            )
             migration_charge = self._record_migration(
                 decision.migration_step.num_moves,
                 decision.migration_cost,
                 stats,
                 cost_mx,
             )
-            # router remap tables follow the physical layout atomically
-            self.placements = jnp.asarray(
-                self.controller.expert_to_slot_tables()
-            )
             if self.controller.replicated:
+                self.placements = jnp.asarray(
+                    self.controller.expert_to_slot_tables()
+                )
                 self.current_rplacements = list(
                     self.controller.current_rplacements
                 )

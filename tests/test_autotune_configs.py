@@ -3,10 +3,12 @@
 ``benchmarks/roofline.py --sweep-blocks`` writes the per-(arch × shape)
 optimal ``(block_c, block_f)`` to ``results/pallas_autotune.json``; the
 configs feed those tiles back via ``pallas_block_c/f``. The kernel clamps
-the configured tile per call (``block_c`` to ``round_up(C, 8)``, ``block_f``
-to ``round_up(F, 128)``), so a single configured pair must land on the
-sweep's ``best`` for *every* cell — train/prefill pick the configured value,
-decode's tiny capacities clamp down to the sweep's decode optimum.
+the configured tile per call (``block_c`` through ``effective_block_c`` —
+``round_up(C, 8)`` with the skinny 4-row decode tile below C=5 — and
+``block_f`` to ``round_up(F, 128)``), so a single configured pair must land
+on the sweep's ``best`` for *every* cell — train/prefill pick the
+configured value, decode's tiny capacities clamp down to the sweep's
+decode optimum.
 """
 import json
 import pathlib
@@ -15,6 +17,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.kernels.compat import round_up
+from repro.kernels.sharded import effective_block_c
 
 RESULTS = pathlib.Path(__file__).parent.parent / "results" / "pallas_autotune.json"
 
@@ -34,7 +37,7 @@ def test_configs_match_sweep_frontier():
         seen_archs.add(cell["arch"])
         C, F = cell["capacity"], cell["f_virtual"]
         # the kernel's per-call clamp (kernels/sharded.py::moe_ffn_sharded)
-        eff_bc = min(cfg.pallas_block_c, round_up(C, 8))
+        eff_bc = effective_block_c(cfg.pallas_block_c, C)
         eff_bf = min(cfg.pallas_block_f, round_up(F, 128))
         best = cell["best"]
         assert eff_bc == best["block_c"], (
@@ -56,3 +59,19 @@ def test_sweep_covers_train_and_decode_regimes():
     cells = _cells()
     caps = {cell["capacity"] for cell in cells}
     assert any(c >= 1024 for c in caps) and any(c <= 8 for c in caps)
+
+
+def test_decode_cells_take_the_skinny_tile():
+    """Decode's tiny capacities must land on the 4-row skinny tile with no
+    row padding — the 8-row floor used to pad C=4 by 100%."""
+    from repro.kernels.moe_gemm import SKINNY_BLOCK_C
+
+    decode = [c for c in _cells() if c["capacity"] <= SKINNY_BLOCK_C]
+    assert decode, "sweep has no skinny-capacity cells"
+    for cell in decode:
+        assert cell["best"]["block_c"] == SKINNY_BLOCK_C, (
+            f"{cell['arch']}/{cell['shape']}: best block_c="
+            f"{cell['best']['block_c']}, expected the skinny tile"
+        )
+        if cell["capacity"] == SKINNY_BLOCK_C:
+            assert cell["best"]["pad_waste"] == 0.0

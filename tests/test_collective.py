@@ -531,3 +531,129 @@ def test_engine_collective_records_measured_traffic():
         assert r["measured_s"] <= r["modeled_s"] + 1e-12
     report = eng.latency_report()
     assert report["migration_payload_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# schedule-generic migration executable (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_migration_executable_matches_host_gather_and_traces_once():
+    """The (L, S) row-source map is a traced operand: any batch reuses the
+    one compiled program, and the result is the per-layer row gather."""
+    from repro.kernels.collective import MigrationExecutable
+
+    rng = np.random.default_rng(21)
+    L, S = 3, 8
+    ws = [
+        jnp.asarray(rng.normal(size=(L, S, 4, 6)).astype(np.float32))
+        for _ in range(3)
+    ]
+    ex = MigrationExecutable(mesh=None, donate=False)
+    for trial in range(4):
+        src = np.stack(
+            [rng.permutation(S).astype(np.int32) for _ in range(L)]
+        )
+        out, _ = ex(src, None, *ws)
+        for got, w in zip(out, ws):
+            ref = np.stack([np.asarray(w)[l][src[l]] for l in range(L)])
+            np.testing.assert_array_equal(np.asarray(got), ref)
+    assert ex.trace_count == 1
+
+
+@needs_devices
+def test_migration_executable_collective_matches_host():
+    """mesh all_to_all exchange ≡ host gather, for permutations AND
+    non-permutation (broadcast/replica) maps, reusing one trace."""
+    from repro.kernels.collective import MigrationExecutable
+
+    mesh, _ = _mesh_policy()
+    rng = np.random.default_rng(22)
+    L, S = 2, 8
+    ws = [
+        jnp.asarray(rng.normal(size=(L, S, 4, 6)).astype(np.float32))
+        for _ in range(3)
+    ]
+    ex = MigrationExecutable(mesh=mesh, axis="model", donate=False)
+    host = MigrationExecutable(mesh=None, donate=False)
+    for trial in range(3):
+        src = rng.integers(0, S, size=(L, S)).astype(np.int32)  # any map
+        got, _ = ex(src, None, *ws)
+        ref, _ = host(src, None, *ws)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+    assert ex.trace_count == 1
+
+
+def test_device_table_swap_matches_host_inverse():
+    """The in-executable router-table swap equals the host-side recompute
+    (inverse of the permutation composed with the old table)."""
+    from repro.kernels.collective import MigrationExecutable
+
+    rng = np.random.default_rng(23)
+    L, S = 3, 8
+    ws = [
+        jnp.asarray(rng.normal(size=(L, S, 4, 6)).astype(np.float32))
+        for _ in range(3)
+    ]
+    ex = MigrationExecutable(mesh=None, donate=False)
+    tables = np.stack(
+        [rng.permutation(S).astype(np.int32) for _ in range(L)]
+    )
+    src = np.stack([rng.permutation(S).astype(np.int32) for _ in range(L)])
+    _, new_tables = ex(src, jnp.asarray(tables), *ws)
+    inv = np.empty((L, S), np.int32)
+    for layer in range(L):
+        inv[layer, src[layer]] = np.arange(S)
+    ref = np.stack([inv[layer][tables[layer]] for layer in range(L)])
+    np.testing.assert_array_equal(np.asarray(new_tables), ref)
+
+
+@needs_devices
+def test_engine_device_tables_match_controller_host_tables():
+    """Online engine on the mesh: after collectively-applied migration
+    batches, the device-side router tables the executable swapped in the
+    same dispatch are bit-identical to the controller's host recompute."""
+    from repro.configs import get_smoke_config
+    from repro.core import (
+        DeviceFleet, GEMConfig, profile_fleet, setup_speeds,
+        simulator_measure_fn,
+    )
+    from repro.models import init_params
+    from repro.online import DriftConfig
+    from repro.serving import EngineConfig, ServingEngine
+
+    mesh, policy = _mesh_policy()
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", 4), tile=1, tile_time=50e-6, base=10e-6
+    )
+    profile = profile_fleet(
+        simulator_measure_fn(fleet, seed=0), 4, max_tokens=64, tile=1,
+        repeats=5,
+    ).profile
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=4, max_len=96,
+            gem=GEMConfig(trace_length=8, num_restarts=4),
+            other_time_per_step=1e-4, online=True,
+            drift=DriftConfig(min_steps=4, threshold=3.0),
+            migration=MigrationConfig(
+                max_moves_per_step=2, base_overhead=0.0
+            ),
+            replan_cooldown=8, payback_horizon=100_000,
+            migration_via="collective",
+        ),
+        profile=profile, num_devices=4,
+    )
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), 20)
+    eng.run(max_steps=120)
+    assert any("measured_s" in r for r in eng.migration_records)
+    np.testing.assert_array_equal(
+        np.asarray(eng.placements), eng.controller.expert_to_slot_tables()
+    )

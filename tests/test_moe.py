@@ -130,3 +130,44 @@ def test_virtual_expert_tp_equivalence():
     y1, _ = moe_layer(x, lp1, identity_placement(cfg1, 1)[0], cfg1, policy)
     y2, _ = moe_layer(x, lp2, identity_placement(cfg2, 1)[0], cfg2, policy)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-5, atol=2e-5)
+
+
+def test_replica_aware_capacity_sizing(setup):
+    """With replica slots (S > E_v, 2-D table) the per-slot capacity C
+    shrinks by the static E_v/S share factor; budget 0 — a 1-D table OR a
+    2-D table with S == E_v — keeps the original formula bit-for-bit."""
+    from repro.models.dispatch import build_dispatch, route
+    from repro.replication import ReplicatedPlacement
+
+    cfg, policy, lp, x = setup
+    Ev = cfg.num_experts * cfg.expert_tp
+    Gd, Ng, D = 1, x.shape[0] * x.shape[1], cfg.d_model
+    router = route(x.reshape(Gd, Ng, D), lp["router"], cfg, policy,
+                   backend="einsum")
+    base_C = int(np.ceil(Ng * cfg.experts_per_token / cfg.num_experts * 8.0))
+
+    plan_1d = build_dispatch(
+        router, identity_placement(cfg, 1)[0], cfg, policy,
+        capacity_factor=8.0,
+    )
+    assert plan_1d.capacity == base_C
+
+    rp0 = ReplicatedPlacement.linear(Ev, 4, 0)
+    plan_b0 = build_dispatch(
+        router, jnp.asarray(rp0.replica_table(8)), cfg, policy,
+        capacity_factor=8.0, num_slots=rp0.num_slots,
+    )
+    assert rp0.num_slots == Ev
+    assert plan_b0.capacity == base_C  # budget-0 regression: unchanged
+
+    rp1 = ReplicatedPlacement.linear(Ev, 4, 1)
+    S = rp1.num_slots
+    assert S > Ev
+    plan_rep = build_dispatch(
+        router, jnp.asarray(rp1.replica_table(8)), cfg, policy,
+        capacity_factor=8.0, num_slots=S,
+    )
+    want = max(int(np.ceil(
+        Ng * cfg.experts_per_token / cfg.num_experts * 8.0 * Ev / S
+    )), 1)
+    assert plan_rep.capacity == want < base_C

@@ -1,0 +1,237 @@
+"""Scan-fused whole-model decode: parity, trace-count, and grad gates.
+
+``decode_mode="scan"`` compiles the entire decode step as one ``lax.scan``
+executable whose per-layer router tables, replica tables, and slot layouts
+are scanned operands; ``"python"`` unrolls the identical body per layer.
+The contract these tests pin down:
+
+* **Token parity** — scan ≡ python bit-for-bit, per MoE backend, on the
+  host policy and on the forced 8-device mesh, *through* mid-run
+  migrations (the online controller's budgeted batches reshuffle the
+  expert pool while requests are decoding).
+* **Trace counts** — one decode trace per (mode, shapes) signature, one
+  migration-executable trace per tables-signature, and **zero** new
+  traces when further migration batches apply (the schedule-generic
+  executable carries any placement as an operand).
+* **Grad parity** — the trainable path (``loss_fn(stack_mode=...)``)
+  produces matching gradients, so the scan lowering is safe for training
+  too.
+* **Family parity** — SSM / hybrid / dense archs run the same
+  ``_scan_or_unroll`` contract through ``prefill`` + ``decode_step``.
+
+Mesh cases need ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(CI: the ``scan-smoke`` matrix entry).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    DeviceFleet,
+    GEMConfig,
+    profile_fleet,
+    setup_speeds,
+    simulator_measure_fn,
+)
+from repro.models import init_params
+from repro.models.model import decode_step, init_decode_cache, loss_fn, prefill
+from repro.online import DriftConfig, MigrationConfig
+from repro.serving import EngineConfig, ServingEngine
+from repro.sharding import host_policy
+
+BACKENDS = ("einsum", "pallas", "dense_ref")
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _mesh_policy():
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.policy import ShardingPolicy
+
+    mesh = make_host_mesh(2, 4)
+    return mesh, ShardingPolicy(mesh=mesh)
+
+
+def _profile():
+    fleet = DeviceFleet.from_speeds(
+        setup_speeds("high", 4), tile=1, tile_time=50e-6, base=10e-6
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet, seed=0), 4, max_tokens=64, tile=1,
+        repeats=5,
+    ).profile
+
+
+def _run_engine(decode_mode, backend, policy=None, *, migration_via="host",
+                max_steps=120):
+    """Serve a small burst through an online engine that migrates mid-run;
+    returns (engine, {uid: generated tokens})."""
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=4.0
+    )
+    policy = policy or host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=4, max_len=96, decode_mode=decode_mode,
+            moe_backend=backend,
+            gem=GEMConfig(trace_length=8, num_restarts=4),
+            other_time_per_step=1e-4, online=True,
+            drift=DriftConfig(min_steps=4, threshold=3.0),
+            migration=MigrationConfig(max_moves_per_step=2, base_overhead=0.0),
+            replan_cooldown=8, payback_horizon=100_000,
+            migration_via=migration_via,
+        ),
+        profile=_profile(), num_devices=4,
+    )
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), 20)
+    eng.run(max_steps=max_steps)
+    return eng, {r.uid: list(r.generated) for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# token parity (host + mesh, through mid-run migration)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scan_matches_python_tokens_host(backend):
+    eng_s, toks_s = _run_engine("scan", backend)
+    eng_p, toks_p = _run_engine("python", backend)
+    # the migration plane must actually have fired mid-run for this to
+    # gate what it claims to gate
+    assert eng_s.migration_records and eng_p.migration_records
+    assert toks_s and toks_s == toks_p
+
+
+@needs_devices
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scan_matches_python_tokens_mesh(backend):
+    """Forced 8-device mesh + collective migration plane: the scanned
+    executable and the python unroll agree token-for-token through
+    collectively-applied mid-run batches."""
+    _, policy_s = _mesh_policy()
+    eng_s, toks_s = _run_engine(
+        "scan", backend, policy_s, migration_via="collective"
+    )
+    _, policy_p = _mesh_policy()
+    eng_p, toks_p = _run_engine(
+        "python", backend, policy_p, migration_via="collective"
+    )
+    assert eng_s.migration_records and eng_p.migration_records
+    assert toks_s and toks_s == toks_p
+
+
+# ---------------------------------------------------------------------------
+# trace-count contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decode_mode", ("scan", "python"))
+def test_one_decode_trace_per_mode_and_shapes(decode_mode):
+    eng, toks = _run_engine(decode_mode, "einsum")
+    assert toks
+    counts = eng.jit_trace_counts
+    # every step reuses the one compiled decode executable — placements
+    # are operands, so the mid-run migrations never retraced it
+    assert counts["decode"] == 1, counts
+    assert counts["prefill"] == 1, counts
+
+
+def test_zero_migrate_traces_on_apply():
+    """The schedule-generic executable traces once (per tables signature)
+    and every subsequent batch — different swaps, different layers —
+    reuses the compiled program."""
+    eng, _ = _run_engine("scan", "einsum")
+    assert eng.migration_records, "no migration batch fired"
+    counts = eng.jit_trace_counts
+    assert counts["migrate"] == 1, counts
+    # apply one more, different, batch directly: still zero new traces
+    S = eng.controller.num_slots
+    src = np.tile(np.arange(S, dtype=np.int32), (eng.config.num_layers, 1))
+    src[0, [0, 1]] = src[0, [1, 0]]
+    eng._apply_migration_sources(src, swap_tables=True)
+    eng._apply_migration_sources(src, swap_tables=True)  # and undo it
+    assert eng.jit_trace_counts["migrate"] == 1
+
+
+def test_decode_mode_validated():
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    with pytest.raises(ValueError, match="decode_mode"):
+        ServingEngine(params, cfg, policy, EngineConfig(decode_mode="eager"))
+
+
+# ---------------------------------------------------------------------------
+# grad parity (trainable path)
+# ---------------------------------------------------------------------------
+
+def test_grad_parity_scan_vs_python():
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(1), policy, jnp.float32)
+    rng = np.random.default_rng(3)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16))),
+    }
+
+    def grads(mode):
+        g, _ = jax.grad(
+            lambda p: loss_fn(p, batch, cfg, policy, stack_mode=mode),
+            has_aux=True,
+        )(params)
+        return g
+
+    gs, gp = grads("scan"), grads("python")
+    for ls, lp in zip(jax.tree.leaves(gs), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(
+            np.asarray(ls), np.asarray(lp), rtol=1e-5, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# family parity (ssm / hybrid / dense through the same contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ("mamba2-1.3b", "zamba2-1.2b", "qwen1.5-4b"))
+def test_decode_mode_parity_all_families(arch):
+    cfg = get_smoke_config(arch)
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(2), policy, jnp.float32)
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)))
+    logits0, _ = prefill(params, {"tokens": prompt}, cfg, policy)
+    tok = jnp.argmax(logits0, axis=-1)[:, None].astype(jnp.int32)
+
+    outs, caches_out = {}, {}
+    for mode in ("scan", "python"):
+        caches = init_decode_cache(cfg, 1, 16, policy, dtype=jnp.float32)
+        logits, new_caches, _ = decode_step(
+            params, caches, jnp.asarray(8, jnp.int32), tok, cfg, policy,
+            decode_mode=mode,
+        )
+        outs[mode] = np.asarray(logits)
+        caches_out[mode] = jax.tree.map(np.asarray, new_caches)
+    # the serving contract is token-level: greedy tokens must agree (the
+    # logits only to fusion-order fp noise — eager unroll vs compiled scan)
+    assert np.array_equal(
+        outs["scan"].argmax(-1), outs["python"].argmax(-1)
+    )
+    np.testing.assert_allclose(
+        outs["scan"], outs["python"], rtol=1e-5, atol=1e-6
+    )
+    for ls, lp in zip(
+        jax.tree.leaves(caches_out["scan"]),
+        jax.tree.leaves(caches_out["python"]),
+    ):
+        np.testing.assert_allclose(ls, lp, rtol=1e-5, atol=1e-6)
