@@ -70,8 +70,10 @@ from repro.serving import (
     generate_arrivals,
 )
 from repro.sharding import host_policy
+from repro.telemetry import Telemetry, read_jsonl, write_chrome_trace, write_jsonl
 
 from .common import NUM_DEVICES, add_seed_arg, seeded
+from .telemetry_report import attribution_summary, parse_chrome_trace
 
 MAX_BATCH = 4
 MAX_LEN = 64
@@ -230,7 +232,83 @@ def check_parity(*, params, cfg, believed, violations: list) -> bool:
     return ok
 
 
-def run(*, smoke: bool = False, seed: int = 0) -> dict:
+def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
+                    seed: int, violations: list, out_dir: str) -> dict:
+    """The CI telemetry gate: rerun the poisson/gem-online scenario with
+    the telemetry plane attached and check
+
+      (a) token bit-parity — a live hub must not change a single sampled
+          token vs the telemetry-off run on the identical stream;
+      (b) the JSONL + Chrome exports round-trip through the
+          ``telemetry_report`` parsers (schema validation included);
+      (c) the attribution invariant holds on the exported metrics
+          (slack components sum to the total).
+    """
+    specs = _arrival_stream(
+        "poisson", cfg.vocab_size, num_requests=num_requests, seed=seed
+    )
+    tel = Telemetry()
+    tokens: dict = {}
+    report: dict = {}
+    for mode, hub in (("off", None), ("on", tel)):
+        eng = ServingEngine(
+            params, cfg, host_policy(), _engine_config("gem", online=True),
+            profile=believed, num_devices=NUM_DEVICES, telemetry=hub,
+        )
+        scen = ServeScenario(
+            f"telemetry-{mode}", list(specs),
+            profile_schedule={SLOWDOWN_STEP: true_slow},
+        )
+        done = serve_scenario(eng, scen, max_steps=5_000)
+        tokens[mode] = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+        if hub is not None:
+            report = eng.latency_report()
+    parity = tokens["on"] == tokens["off"]
+    if not parity:
+        violations.append(
+            "telemetry on/off token parity broken: attaching the hub "
+            "changed sampled tokens"
+        )
+
+    os.makedirs(out_dir, exist_ok=True)
+    events_path = os.path.join(out_dir, "fig23_events.jsonl")
+    trace_path = os.path.join(out_dir, "fig23_trace.json")
+    meta = {"figure": "fig23", "scenario": "poisson/gem-online", "seed": seed}
+    write_jsonl(tel, events_path, **meta)
+    n_trace = write_chrome_trace(tel, trace_path, **meta)
+    out = {"token_parity": parity, "events_path": events_path,
+           "trace_path": trace_path, "trace_events": n_trace}
+    try:
+        doc = read_jsonl(events_path)
+        parse_chrome_trace(trace_path)
+        attr = attribution_summary(doc)  # raises on a broken invariant
+    except ValueError as e:
+        violations.append(f"telemetry export round-trip: {e}")
+        return out
+    spans = [ev for ev in doc["events"] if ev["kind"] == "span"]
+    device_tracks = {
+        ev["track"] for ev in spans if ev["track"].startswith("device")
+    }
+    if not spans:
+        violations.append("telemetry export carries no spans")
+    if len(device_tracks) != NUM_DEVICES:
+        violations.append(
+            f"telemetry export has {len(device_tracks)} device tracks, "
+            f"expected {NUM_DEVICES}"
+        )
+    if attr is None:
+        violations.append("telemetry export carries no attribution metrics")
+    else:
+        out["attribution"] = attr
+    out["events"] = len(doc["events"])
+    out["report"] = {
+        k: v for k, v in report.items() if k.startswith("attr_")
+    }
+    return out
+
+
+def run(*, smoke: bool = False, seed: int = 0, telemetry: bool = False,
+        out_dir: str = "results") -> dict:
     cfg = _model_config()
     params, _ = init_params(
         cfg, jax.random.PRNGKey(seeded(0, seed)), host_policy(), jnp.float32
@@ -257,6 +335,12 @@ def run(*, smoke: bool = False, seed: int = 0) -> dict:
         params=params, cfg=cfg, believed=believed,
         violations=out["violations"],
     )
+    if telemetry:
+        out["telemetry"] = check_telemetry(
+            params=params, cfg=cfg, believed=believed, true_slow=true_slow,
+            num_requests=num_requests, seed=seed,
+            violations=out["violations"], out_dir=out_dir,
+        )
     return out
 
 
@@ -267,10 +351,15 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small request count (CI)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="rerun gem-online with the telemetry plane: token "
+                         "bit-parity gate + Chrome/JSONL export round-trip")
     ap.add_argument("--out", default="results/fig23_serving.json")
     add_seed_arg(ap)
     args = ap.parse_args()
-    out = run(smoke=args.smoke, seed=args.seed)
+    out_dir = os.path.dirname(args.out) or "results"
+    out = run(smoke=args.smoke, seed=args.seed, telemetry=args.telemetry,
+              out_dir=out_dir)
     for process, rows in out["scenarios"].items():
         print(f"== {process}")
         for name, rep in rows.items():
@@ -283,6 +372,20 @@ def main() -> int:
                 f"  replans={rep.get('replans', 0):.0f}"
             )
     print(f"parity(serve==submit): {out['parity']}")
+    if "telemetry" in out:
+        t = out["telemetry"]
+        print(
+            f"telemetry: token_parity={t['token_parity']} "
+            f"events={t.get('events', 0)} trace_events={t['trace_events']}"
+        )
+        attr = t.get("attribution")
+        if attr:
+            print(
+                f"  slack split: total={attr['slack_total_s']*1e3:.3f}ms "
+                f"load={attr['slack_load_s']*1e3:.3f}ms "
+                f"var={attr['slack_var_s']*1e3:.3f}ms "
+                f"(load share {attr['load_frac']:.1%})"
+            )
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

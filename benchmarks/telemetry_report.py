@@ -1,0 +1,158 @@
+"""Render a telemetry export into a per-device straggler summary.
+
+Consumes the artifacts the serving engine's telemetry plane writes
+(:mod:`repro.telemetry.export`):
+
+  * the **JSONL event log** (``repro.telemetry/v1``: header, span/instant
+    events, metrics trailer) — parsed and schema-validated by
+    :func:`repro.telemetry.read_jsonl`;
+  * optionally the **Chrome trace** twin — validated here for structural
+    sanity (``traceEvents`` list, known phases, named device tracks) so CI
+    can gate that both exports stay loadable.
+
+The summary table answers the operator question the attribution plane
+exists for: *which device is the straggler, and is it slow or just
+overloaded?* Per device it reports busy time from the ``expert_compute``
+spans and the straggler-cell tally; the footer splits the fleet's total
+slack into its load-imbalance and speed-variability components from the
+``attr.*`` metrics.
+
+Run:  PYTHONPATH=src python -m benchmarks.telemetry_report \
+          results/fig23_events.jsonl [--trace results/fig23_trace.json]
+
+Exits non-zero on a schema violation or a broken attribution invariant
+(components must sum to the total).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.telemetry import read_jsonl
+
+_CHROME_PHASES = {"M", "X", "i"}
+
+
+def parse_chrome_trace(path: str) -> dict:
+    """Load + structurally validate a Chrome trace-event export.
+
+    Raises ``ValueError`` on anything chrome://tracing / Perfetto would
+    choke on: missing ``traceEvents``, unknown phases, complete events
+    without ``ts``/``dur``. Returns the parsed document.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: no traceEvents list")
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in _CHROME_PHASES:
+            raise ValueError(f"{path}: event {i} has unknown phase {ph!r}")
+        if ph == "X" and ("ts" not in ev or "dur" not in ev):
+            raise ValueError(f"{path}: complete event {i} missing ts/dur")
+        if ph != "M" and "name" not in ev:
+            raise ValueError(f"{path}: event {i} missing name")
+    return doc
+
+
+def straggler_table(doc: dict) -> list[dict]:
+    """Per-device rows from a parsed JSONL export (``read_jsonl`` output).
+
+    Busy time and straggler cells come from the ``expert_compute`` device
+    spans; rows are sorted by busy time descending so the straggler of the
+    run reads first.
+    """
+    per_device: dict[str, dict] = {}
+    for ev in doc["events"]:
+        if ev.get("kind") != "span" or ev.get("name") != "expert_compute":
+            continue
+        row = per_device.setdefault(
+            ev["track"], {"device": ev["track"], "busy_s": 0.0,
+                          "steps": 0, "straggler_steps": 0}
+        )
+        row["busy_s"] += float(ev["dur"])
+        row["steps"] += 1
+        if ev.get("args", {}).get("straggler"):
+            row["straggler_steps"] += 1
+    return sorted(
+        per_device.values(), key=lambda r: r["busy_s"], reverse=True
+    )
+
+
+def attribution_summary(doc: dict) -> dict | None:
+    """Slack split from the metrics trailer; None when no attribution ran.
+
+    Raises ``ValueError`` when the decomposition invariant is broken
+    (total must equal load + variability within fp tolerance).
+    """
+    metrics = doc.get("metrics") or {}
+    counters = metrics.get("counters", {})
+    gauges = metrics.get("gauges", {})
+    if "attr.slack_total_s" not in counters:
+        return None
+    total = counters["attr.slack_total_s"]
+    load = counters.get("attr.slack_load_s", 0.0)
+    var = gauges.get("attr.slack_var_s", {}).get("value", 0.0)
+    if abs(total - (load + var)) > 1e-9 + 1e-6 * abs(total):
+        raise ValueError(
+            f"attribution invariant broken: total {total} != "
+            f"load {load} + var {var}"
+        )
+    frac = (load / total) if total else 0.0
+    return {"slack_total_s": total, "slack_load_s": load,
+            "slack_var_s": var, "load_frac": frac}
+
+
+def render(doc: dict) -> str:
+    lines = []
+    meta = doc.get("meta", {})
+    if meta:
+        lines.append("meta: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(meta.items()) if k != "schema"
+        ))
+    rows = straggler_table(doc)
+    if rows:
+        lines.append(
+            f"{'device':10s} {'busy':>12s} {'steps':>6s} "
+            f"{'straggler':>10s} {'share':>7s}"
+        )
+        for r in rows:
+            share = r["straggler_steps"] / r["steps"] if r["steps"] else 0.0
+            lines.append(
+                f"{r['device']:10s} {r['busy_s']*1e3:10.3f}ms "
+                f"{r['steps']:6d} {r['straggler_steps']:10d} {share:6.1%}"
+            )
+    else:
+        lines.append("(no expert_compute device spans in this export)")
+    attr = attribution_summary(doc)
+    if attr is not None:
+        lines.append(
+            f"slack: total={attr['slack_total_s']*1e3:.3f}ms  "
+            f"load={attr['slack_load_s']*1e3:.3f}ms  "
+            f"variability={attr['slack_var_s']*1e3:.3f}ms  "
+            f"(load share {attr['load_frac']:.1%})"
+        )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("events", help="JSONL event log (repro.telemetry/v1)")
+    ap.add_argument("--trace", default=None,
+                    help="also validate this Chrome trace export")
+    args = ap.parse_args()
+    try:
+        doc = read_jsonl(args.events)
+        if args.trace:
+            chrome = parse_chrome_trace(args.trace)
+            print(f"chrome trace ok: {len(chrome['traceEvents'])} events")
+        print(render(doc))
+    except ValueError as e:
+        print(f"VIOLATION: {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

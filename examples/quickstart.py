@@ -116,6 +116,7 @@ from repro.serving import (  # noqa: E402
     ArrivalConfig, EngineConfig, PagedKVConfig, ServingEngine, TaskProfile,
     generate_arrivals,
 )
+from repro.telemetry import Telemetry, write_chrome_trace  # noqa: E402
 
 serve_cfg = dataclasses.replace(
     get_smoke_config("mixtral-8x7b"),
@@ -138,6 +139,9 @@ engine = ServingEngine(
         decode_mode="scan",
     ),
     profile=prof.profile, num_devices=G,
+    # the unified telemetry plane: span tracing on the simulated clock,
+    # per-step straggler attribution, and a Chrome-trace export at the end
+    telemetry=Telemetry(),
 )
 chat = TaskProfile("chat", prompt_buckets=(8, 16), output_mean=8.0,
                    output_bounds=(4, 12), vocab_band=(0.0, 1.0))
@@ -152,3 +156,14 @@ print(f"served {len(done)} live requests [{args.moe_backend}]: "
       f"tpot_p99={rep['tpot_p99']*1e3:.3f} ms "
       f"kv_peak={rep['kv_peak_used_blocks']:.0f} blocks "
       f"replans={rep.get('replans', 0):.0f}")
+
+# The run's telemetry: per-step straggler attribution (how much of the
+# fleet's slack was load imbalance vs slow hardware) and a Chrome trace —
+# load it in chrome://tracing or https://ui.perfetto.dev (one row per
+# device, engine phases on top). JSONL export + schema: src/repro/telemetry/.
+n_events = write_chrome_trace(engine.telemetry, "quickstart_trace.json",
+                              example="quickstart")
+print(f"straggler slack: total={rep.get('attr_slack_total_s', 0)*1e3:.3f} ms "
+      f"(load {rep.get('attr_load_frac', 0):.0%} / "
+      f"variability {rep.get('attr_var_frac', 0):.0%}) — "
+      f"wrote quickstart_trace.json ({n_events} trace events)")

@@ -40,6 +40,7 @@ from .score import (
     per_step_latency,
     score,
     step_cost_matrix,
+    step_token_matrix,
 )
 from .search import SearchResult, gem_place, initial_mapping, refine
 from .simulate import SimulationResult, latency_reduction, simulate_serving
@@ -67,6 +68,7 @@ __all__ = [
     "StaircaseLatencyModel", "DeviceFleet", "tile_boundary_grid", "dense_grid",
     # step 3
     "IncrementalScorer", "score", "per_step_latency", "step_cost_matrix",
+    "step_token_matrix",
     "SearchResult", "gem_place", "initial_mapping", "refine",
     # online adaptation hooks
     "MigrationCostModel", "migration_net_benefit", "BandwidthEstimator",

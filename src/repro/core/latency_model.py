@@ -182,6 +182,11 @@ class BandwidthEstimator:
     bandwidth_hat: float | None = None
     num_samples: int = 0
 
+    def bind_telemetry(self, telemetry) -> None:
+        """Mirror the running estimate onto a telemetry gauge
+        (``bandwidth.estimate_gbps``); pure host-side, optional."""
+        self._telemetry = telemetry
+
     def observe(
         self, payload_bytes: float, seconds: float, *,
         base_overhead: float = 0.0,
@@ -201,6 +206,11 @@ class BandwidthEstimator:
         else:
             self.bandwidth_hat += self.alpha * (sample - self.bandwidth_hat)
         self.num_samples += 1
+        tel = getattr(self, "_telemetry", None)
+        if tel is not None:
+            tel.gauge("bandwidth.estimate_gbps").set(
+                self.bandwidth_hat / 1e9
+            )
         return self.bandwidth_hat
 
     def calibrated(self, model: MigrationCostModel) -> MigrationCostModel:

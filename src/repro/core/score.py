@@ -20,6 +20,7 @@ from .types import ExpertTrace, Placement, VariabilityProfile
 __all__ = [
     "score",
     "per_step_latency",
+    "step_token_matrix",
     "step_cost_matrix",
     "migration_net_benefit",
     "IncrementalScorer",
@@ -42,6 +43,31 @@ def score(
     return float(per_step_latency(trace, profile, placement).sum())
 
 
+def step_token_matrix(
+    counts: np.ndarray,
+    num_devices: int,
+    placements: list[Placement],
+) -> np.ndarray:
+    """One engine step's (L, G) per-layer per-device token loads.
+
+    ``counts`` (L, E): per-layer per-expert token counts of a single
+    step, binned onto devices by each layer's placement. This is the
+    input both to :func:`step_cost_matrix` and to the telemetry plane's
+    straggler attribution (:mod:`repro.telemetry.attribution`).
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    L = counts.shape[0]
+    if L != len(placements):
+        raise ValueError("need one placement per MoE layer")
+    tokens = np.empty((L, num_devices), dtype=np.float64)
+    for layer, placement in enumerate(placements):
+        tokens[layer] = np.bincount(
+            placement.expert_to_device, weights=counts[layer],
+            minlength=num_devices,
+        )
+    return tokens
+
+
 def step_cost_matrix(
     counts: np.ndarray,
     profile: VariabilityProfile,
@@ -54,16 +80,7 @@ def step_cost_matrix(
     column sums feed the online plane's variability-drift detector (observed
     vs predicted device time under the same placement).
     """
-    counts = np.asarray(counts, dtype=np.float64)
-    L = counts.shape[0]
-    if L != len(placements):
-        raise ValueError("need one placement per MoE layer")
-    G = profile.num_devices
-    tokens = np.empty((L, G), dtype=np.float64)
-    for layer, placement in enumerate(placements):
-        tokens[layer] = np.bincount(
-            placement.expert_to_device, weights=counts[layer], minlength=G
-        )
+    tokens = step_token_matrix(counts, profile.num_devices, placements)
     return profile.cost_all(tokens)
 
 

@@ -292,10 +292,14 @@ class MigrationExecutable:
     """
 
     def __init__(self, *, mesh=None, axis: str = "model",
-                 donate: bool = True):
+                 donate: bool = True, telemetry=None):
         self.mesh = mesh
         self.axis = axis
         self.trace_count = 0  # bumped by the traced closure: 1 per trace
+        # optional repro.telemetry.Telemetry hub: mirrors each trace onto
+        # the ``jit.trace.migrate`` counter (the registry is the engine's
+        # single source of truth for trace counts)
+        self.telemetry = telemetry
 
         if mesh is None:
             fn = self._host_apply
@@ -328,7 +332,7 @@ class MigrationExecutable:
                 return new
 
             def fn(src, tables, *ws):
-                self.trace_count += 1
+                self._count_trace()
                 wspecs = tuple(
                     P(*((None, axis) + (None,) * (w.ndim - 2)))
                     for w in ws
@@ -347,8 +351,13 @@ class MigrationExecutable:
         self._apply = jax.jit(
             fn, donate_argnums=(2, 3, 4) if donate_ws else ())
 
-    def _host_apply(self, src, tables, *ws):
+    def _count_trace(self) -> None:
         self.trace_count += 1
+        if self.telemetry is not None:
+            self.telemetry.counter("jit.trace.migrate").inc()
+
+    def _host_apply(self, src, tables, *ws):
+        self._count_trace()
         gather = jax.vmap(lambda a, s: jnp.take(a, s, axis=0))
         new_ws = tuple(gather(w, src) for w in ws)
         new_tables = None if tables is None else _swap_tables(tables, src)

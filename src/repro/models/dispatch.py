@@ -122,12 +122,14 @@ class DispatchPlan:
     by each capacity row; ``Ng`` marks the zero pad token. ``dispatch_gate``
     (Gd, E_v, C) f32 — the gate each row is combined with (0 for pad/
     dropped). ``dropped`` () f32 — fraction of assignments dropped at
-    capacity.
+    capacity; ``dropped_tokens`` () i32 — the absolute count behind that
+    fraction (telemetry's capacity-overflow counter).
     """
 
     dispatch_idx: jax.Array
     dispatch_gate: jax.Array
     dropped: jax.Array
+    dropped_tokens: jax.Array
 
     @property
     def capacity(self) -> int:
@@ -145,7 +147,10 @@ class DispatchPlan:
         return self.dispatch_idx.reshape(Gd, -1)
 
 
-_register(DispatchPlan, ("dispatch_idx", "dispatch_gate", "dropped"))
+_register(
+    DispatchPlan,
+    ("dispatch_idx", "dispatch_gate", "dropped", "dropped_tokens"),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,12 +163,15 @@ class MoEAux:
     expert_counts: jax.Array
     aux_loss: jax.Array
     dropped: jax.Array
+    dropped_tokens: jax.Array
 
     def __getitem__(self, key: str):
         return getattr(self, key)
 
 
-_register(MoEAux, ("expert_counts", "aux_loss", "dropped"))
+_register(
+    MoEAux, ("expert_counts", "aux_loss", "dropped", "dropped_tokens")
+)
 
 
 def route(
@@ -318,10 +326,14 @@ def build_dispatch(
     _, es = policy.moe_shard_spec(Gd, S)
     dispatch_idx = policy.constrain(dispatch_idx, b, es, None)
     dispatch_gate = policy.constrain(dispatch_gate, b, es, None)
-    dropped = 1.0 - jnp.sum(keep) / (Gd * Ag)
+    kept = jnp.sum(keep)
+    dropped = 1.0 - kept / (Gd * Ag)
+    # absolute count of capacity-dropped assignments — today's silent
+    # drops, surfaced for the telemetry plane (`dispatch.dropped_tokens`)
+    dropped_tokens = jnp.asarray(Gd * Ag, jnp.int32) - kept.astype(jnp.int32)
     return DispatchPlan(
         dispatch_idx=dispatch_idx, dispatch_gate=dispatch_gate,
-        dropped=dropped,
+        dropped=dropped, dropped_tokens=dropped_tokens,
     )
 
 

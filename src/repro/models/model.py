@@ -207,6 +207,7 @@ def _moe_aux_zero(config: ModelConfig):
         expert_counts=jnp.zeros((config.num_experts,), jnp.int32),
         aux_loss=jnp.asarray(0.0, jnp.float32),
         dropped=jnp.asarray(0.0, jnp.float32),
+        dropped_tokens=jnp.asarray(0, jnp.int32),
     )
 
 
@@ -339,6 +340,7 @@ def forward_train(params, batch, config: ModelConfig, policy: ShardingPolicy,
         aux["expert_counts"] = moe_aux.expert_counts  # (L, E)
         aux["aux_loss"] = jnp.mean(moe_aux.aux_loss)
         aux["dropped"] = jnp.mean(moe_aux.dropped)
+        aux["dropped_tokens"] = jnp.sum(moe_aux.dropped_tokens)
     return logits, aux
 
 

@@ -277,6 +277,7 @@ def moe_layer(
             expert_counts=router.expert_counts,
             aux_loss=router.aux_loss,
             dropped=jnp.asarray(0.0, jnp.float32),
+            dropped_tokens=jnp.asarray(0, jnp.int32),
         )
 
     plan = build_dispatch(
@@ -289,6 +290,7 @@ def moe_layer(
         expert_counts=router.expert_counts,
         aux_loss=router.aux_loss,
         dropped=plan.dropped,
+        dropped_tokens=plan.dropped_tokens,
     )
 
 

@@ -34,7 +34,12 @@ import numpy as np
 from ..core.eplb import eplb_placement, linear_placement
 from ..core.gem import GEMPlanner
 from ..core.latency_model import BandwidthEstimator, MigrationCostModel
-from ..core.score import migration_net_benefit, score, step_cost_matrix
+from ..core.score import (
+    migration_net_benefit,
+    score,
+    step_cost_matrix,
+    step_token_matrix,
+)
 from ..core.search import refine
 from ..core.types import ExpertTrace, Placement, VariabilityProfile
 from ..replication import (
@@ -43,7 +48,9 @@ from ..replication import (
     plan_replicated,
     replicated_score,
     replicated_step_cost_matrix,
+    replicated_step_token_matrix,
 )
+from ..telemetry import Telemetry
 from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
 from .migration import (
     MigrationConfig,
@@ -122,12 +129,19 @@ class OnlineController:
         *,
         initial_placements: list[Placement] | None = None,
         initial_rplacements: list[ReplicatedPlacement] | None = None,
+        telemetry: Telemetry | None = None,
     ):
         if planner.profile is None:
             raise ValueError("planner must have a profile (set_profile)")
         self.planner = planner
         self.cost_model = cost_model
         self.config = config
+        # decision counters/events (replans, gate rejections, truncations,
+        # drift fires) flow through the telemetry hub; a disabled instance
+        # keeps the counters live without event recording
+        self.telemetry = (
+            telemetry if telemetry is not None else Telemetry(enabled=False)
+        )
         L, Ev, G = planner.num_layers, planner.num_experts, planner.num_devices
         self.replicated = config.replication.replica_slots > 0
         if self.replicated:
@@ -162,8 +176,12 @@ class OnlineController:
             self.slot_layouts = [p.slot_to_expert() for p in initial]
             self.current_placements = initial
             self.current_rplacements = []
-        self.load_detector = LoadDriftDetector(L, Ev, config.drift)
-        self.var_detector = VariabilityDriftDetector(G, config.drift)
+        self.load_detector = LoadDriftDetector(
+            L, Ev, config.drift, telemetry=self.telemetry
+        )
+        self.var_detector = VariabilityDriftDetector(
+            G, config.drift, telemetry=self.telemetry
+        )
         self._pending: deque[MigrationStep] = deque()
         self._pending_unbudgeted = False
         self._step = 0
@@ -184,6 +202,7 @@ class OnlineController:
         # the engine reports what each executed batch actually shipped, and
         # the estimator turns those samples into a calibrated bandwidth
         self.bandwidth_estimator = BandwidthEstimator()
+        self.bandwidth_estimator.bind_telemetry(self.telemetry)
         self.migration_measurements: list[dict] = []
 
     # ------------------------------------------------------------------
@@ -257,6 +276,9 @@ class OnlineController:
                 "modeled_s": float(modeled_s),
             }
         )
+        self.telemetry.counter("migrate.model_abs_err_s").inc(
+            abs(float(measured_s) - float(modeled_s))
+        )
         self.bandwidth_estimator.observe(
             payload_bytes, measured_s,
             base_overhead=self.cost_model.base_overhead,
@@ -276,6 +298,18 @@ class OnlineController:
                 counts, profile, self.current_rplacements
             )
         return step_cost_matrix(counts, profile, self.current_placements)
+
+    def token_matrix(self, counts: np.ndarray) -> np.ndarray:
+        """(L, G) per-layer per-device token loads of one step's counts
+        under the live placements — the straggler-attribution input
+        (:mod:`repro.telemetry.attribution`), replica-split aware."""
+        if self.replicated:
+            return replicated_step_token_matrix(
+                counts, self.planner.num_devices, self.current_rplacements
+            )
+        return step_token_matrix(
+            counts, self.planner.num_devices, self.current_placements
+        )
 
     def predicted_device_latency(self, counts: np.ndarray) -> np.ndarray:
         """(G,) per-device MoE time this step *should* take per the believed
@@ -446,6 +480,18 @@ class OnlineController:
             out.append(warm_p if warm_s <= res.score else res.placement)
         return out
 
+    def _record_replan(self, record: dict) -> None:
+        """Append one replan record and mirror it onto the telemetry plane
+        (``controller.replans*`` counters + a ``replan`` instant event)."""
+        self.replans.append(record)
+        tel = self.telemetry
+        tel.counter("controller.replans").inc()
+        if record["applied"]:
+            tel.counter("controller.replans.applied").inc()
+        if record.get("truncated"):
+            tel.counter("controller.truncations").inc()
+        tel.instant("replan", **record)
+
     def _staggered_layers(self, reason: str) -> set[int] | None:
         """Layer subset for a staggered replan, or ``None`` for a full one.
 
@@ -516,7 +562,7 @@ class OnlineController:
         if layers is not None:
             record["staggered_layers"] = sorted(layers)
         if schedule.total_moves == 0:
-            self.replans.append(record)
+            self._record_replan(record)
             self._reset_reference(traces)
             return
         schedule_cost = (
@@ -530,6 +576,9 @@ class OnlineController:
         )
         record["net_benefit_s"] = net
         if net <= 0.0:
+            # the full plan failed the net-benefit gate, whether or not a
+            # profitable cycle prefix survives truncation below
+            self.telemetry.counter("controller.gate_rejections").inc()
             truncated = None
             if self.config.truncate_rejected and not self.replicated:
                 truncated = self._truncate_schedule(
@@ -538,14 +587,14 @@ class OnlineController:
             if truncated is None:
                 record["applied"] = False
                 decision.migration_skipped = True
-                self.replans.append(record)
+                self._record_replan(record)
                 self._reset_reference(traces)
                 return
             schedule = truncated
             decision.migration_truncated = True
             record["truncated"] = True
             record["moves"] = schedule.total_moves
-        self.replans.append(record)
+        self._record_replan(record)
         self._pending = deque(schedule.steps)
         self._pending_unbudgeted = (
             first_plan and self.config.unbudgeted_first_swap

@@ -92,10 +92,13 @@ class LoadDriftDetector:
     """Per-layer EWMA routing distribution vs the planning-time reference."""
 
     def __init__(self, num_layers: int, num_experts: int,
-                 config: DriftConfig = DriftConfig()):
+                 config: DriftConfig = DriftConfig(), *, telemetry=None):
         self.num_layers = num_layers
         self.num_experts = num_experts
         self.config = config
+        # optional repro.telemetry.Telemetry hub: divergence-level gauge
+        # + fire counter/instant (the controller binds its own)
+        self.telemetry = telemetry
         self._ref: np.ndarray | None = None  # (L, E) distributions
         self._ewma: np.ndarray | None = None  # (L, E) distributions
         self._steps_since_ref = 0
@@ -155,6 +158,10 @@ class LoadDriftDetector:
         self._ewma = (1.0 - a) * self._ewma + a * _normalize(counts)
         self._steps_since_ref += 1
         self.last_divergence = self.divergence()
+        if self.telemetry is not None:
+            self.telemetry.gauge("controller.drift.load_level").set(
+                float(self.last_divergence.mean())
+            )
         if self._steps_since_ref < self.config.min_steps:
             return False
         level = float(self.last_divergence.mean())
@@ -178,7 +185,11 @@ class LoadDriftDetector:
             return False
         # fire on the layer *mean*: bursts are layer-independent, a task-mix
         # change is common-mode across layers
-        return bool(level > threshold)
+        fired = bool(level > threshold)
+        if fired and self.telemetry is not None:
+            self.telemetry.counter("controller.drift.load_fires").inc()
+            self.telemetry.instant("drift.load", level=level)
+        return fired
 
     def drifted_layers(self) -> np.ndarray:
         """Layer ids whose *individual* divergence exceeds the threshold.
@@ -199,9 +210,11 @@ class LoadDriftDetector:
 class VariabilityDriftDetector:
     """EWMA of observed/predicted per-device latency — curve departure."""
 
-    def __init__(self, num_devices: int, config: DriftConfig = DriftConfig()):
+    def __init__(self, num_devices: int, config: DriftConfig = DriftConfig(),
+                 *, telemetry=None):
         self.num_devices = num_devices
         self.config = config
+        self.telemetry = telemetry
         self.ratios = np.ones(num_devices)
         self._steps = 0
 
@@ -223,9 +236,16 @@ class VariabilityDriftDetector:
         a = self.config.var_alpha
         self.ratios = (1.0 - a) * self.ratios + a * ratio
         self._steps += 1
+        departure = float(np.abs(self.ratios - 1.0).max())
+        if self.telemetry is not None:
+            self.telemetry.gauge("controller.drift.var_ratio").set(departure)
         if self._steps < self.config.min_steps:
             return False
-        return bool(np.abs(self.ratios - 1.0).max() > self.config.var_threshold)
+        fired = bool(departure > self.config.var_threshold)
+        if fired and self.telemetry is not None:
+            self.telemetry.counter("controller.drift.var_fires").inc()
+            self.telemetry.instant("drift.var", departure=departure)
+        return fired
 
     def drifted_devices(self) -> np.ndarray:
         """Device ids whose smoothed ratio is outside the threshold band."""

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core.gem import GEMPlanner
 from ..core.types import GEMConfig, VariabilityProfile
+from ..telemetry import AttributionAccumulator, attribute_step
 from .controller import OnlineConfig, OnlineController
 
 __all__ = [
@@ -72,6 +73,9 @@ class ReplayResult:
     moves_per_step: np.ndarray  # (T,) expert-weight rows rewritten
     replans: list[dict]
     total_migration_cost: float
+    # per-step straggler attribution aggregate (repro.telemetry) — priced
+    # with each step's *true* profile under the live placement
+    attribution: AttributionAccumulator | None = None
 
     @property
     def total_time(self) -> float:
@@ -118,7 +122,7 @@ class ReplayResult:
         output_lengths: np.ndarray,
         arrival_steps: np.ndarray | None = None,
     ) -> dict:
-        return {
+        out = {
             "policy": self.policy,
             "total_s": self.total_time,
             "mean_e2e_s": self.mean_e2e(output_lengths, arrival_steps),
@@ -128,6 +132,14 @@ class ReplayResult:
             "max_moves_per_step": int(self.moves_per_step.max(initial=0)),
             "replans": len(self.replans),
         }
+        if self.attribution is not None and self.attribution.steps > 0:
+            summ = self.attribution.summary()
+            # rows stay scalar-valued: the per-device tally is on the
+            # accumulator for telemetry_report-style consumers
+            out.update(
+                (k, v) for k, v in summ.items() if isinstance(v, float)
+            )
+        return out
 
 
 @dataclasses.dataclass
@@ -212,6 +224,7 @@ def replay_online(
     step_lat = np.zeros(T)
     mig_cost = np.zeros(T)
     moves = np.zeros(T, dtype=np.int64)
+    attribution = AttributionAccumulator(G)
     for t in range(T):
         counts = scenario.counts[t]
         true_profile = scenario.true_profile_at(t)
@@ -220,6 +233,9 @@ def replay_online(
         mat = controller.cost_matrix(counts, true_profile)
         observed = mat.sum(axis=0)  # (G,) per-device time, summed over layers
         lat = float(mat.max(axis=1).sum()) + scenario.other_time_per_step
+        attribution.observe(
+            attribute_step(controller.token_matrix(counts), true_profile)
+        )
         decision = controller.observe_step(counts, observed)
         if decision.migration_step is not None:
             lat += decision.migration_cost
@@ -233,4 +249,5 @@ def replay_online(
         moves_per_step=moves,
         replans=controller.replans,
         total_migration_cost=controller.total_migration_cost,
+        attribution=attribution,
     )

@@ -42,6 +42,7 @@ from .score import (
     replicated_per_step_latency,
     replicated_score,
     replicated_step_cost_matrix,
+    replicated_step_token_matrix,
 )
 from .types import ReplicatedPlacement, ReplicationConfig
 
@@ -59,4 +60,5 @@ __all__ = [
     "replicated_per_step_latency",
     "replicated_score",
     "replicated_step_cost_matrix",
+    "replicated_step_token_matrix",
 ]

@@ -27,6 +27,7 @@ __all__ = [
     "replicated_per_device_tokens",
     "replicated_per_step_latency",
     "replicated_score",
+    "replicated_step_token_matrix",
     "replicated_step_cost_matrix",
     "replica_fetch_rows",
 ]
@@ -54,6 +55,23 @@ def replicated_score(
     return float(replicated_per_step_latency(trace, profile, rp).sum())
 
 
+def replicated_step_token_matrix(
+    counts: np.ndarray,
+    num_devices: int,
+    rplacements: list[ReplicatedPlacement],
+) -> np.ndarray:
+    """One engine step's (L, G) per-layer per-device token loads under
+    the replica share split (telemetry attribution + cost input)."""
+    counts = np.asarray(counts, dtype=np.float64)
+    L = counts.shape[0]
+    if L != len(rplacements):
+        raise ValueError("need one replicated placement per MoE layer")
+    tokens = np.empty((L, num_devices), dtype=np.float64)
+    for layer, rp in enumerate(rplacements):
+        tokens[layer] = counts[layer] @ rp.share_matrix()
+    return tokens
+
+
 def replicated_step_cost_matrix(
     counts: np.ndarray,
     profile: VariabilityProfile,
@@ -64,14 +82,9 @@ def replicated_step_cost_matrix(
     The replicated analogue of :func:`repro.core.score.step_cost_matrix`:
     ``counts`` (L, E) per-layer per-expert token counts of a single step.
     """
-    counts = np.asarray(counts, dtype=np.float64)
-    L = counts.shape[0]
-    if L != len(rplacements):
-        raise ValueError("need one replicated placement per MoE layer")
-    G = profile.num_devices
-    tokens = np.empty((L, G), dtype=np.float64)
-    for layer, rp in enumerate(rplacements):
-        tokens[layer] = counts[layer] @ rp.share_matrix()
+    tokens = replicated_step_token_matrix(
+        counts, profile.num_devices, rplacements
+    )
     return profile.cost_all(tokens)
 
 

@@ -50,7 +50,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.gem import GEMPlanner
-from ..core.score import step_cost_matrix
+from ..core.score import step_cost_matrix, step_token_matrix
 from ..core.types import GEMConfig, Placement, VariabilityProfile
 from ..models.model import (
     decode_step,
@@ -82,8 +82,10 @@ from ..replication import (
     plan_replicated_layers,
     replica_fetch_rows,
     replicated_step_cost_matrix,
+    replicated_step_token_matrix,
 )
 from ..sharding.policy import ShardingPolicy
+from ..telemetry import AttributionAccumulator, Telemetry, attribute_step
 from .arrivals import RequestSpec
 from .kv_cache import (
     PagedKVConfig,
@@ -97,6 +99,10 @@ from .scheduler import Request, Scheduler
 from .slo import slo_report
 
 __all__ = ["EngineConfig", "ServingEngine"]
+
+# fixed histogram buckets for per-step straggler slack (seconds) —
+# deterministic boundaries so CI can pin exported snapshots
+_ATTR_SLACK_BOUNDS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +177,7 @@ class ServingEngine:
         *,
         profile: VariabilityProfile | None = None,
         num_devices: int | None = None,
+        telemetry: Telemetry | None = None,
     ):
         if engine_config.moe_backend is not None:
             config = dataclasses.replace(
@@ -271,10 +278,21 @@ class ServingEngine:
         self.config = config
         self.policy = policy
         self.ecfg = engine_config
+        # Telemetry hub — always constructed: the registry is the single
+        # source of truth for jit trace counts and migration records even
+        # with telemetry=None (a disabled hub records no span/instant
+        # events, so the default run is bit-identical to an uninstrumented
+        # one — all instruments are pure host-side Python state). The
+        # clock binds to the simulated time the engine advances.
+        self.telemetry = (
+            telemetry if telemetry is not None else Telemetry(enabled=False)
+        )
+        self.telemetry.set_clock(lambda: self.sim_time)
         self.scheduler = Scheduler(
             engine_config.max_batch,
             admit_lookahead=engine_config.admit_lookahead,
         )
+        self.scheduler.telemetry = self.telemetry
         self.step_count = 0
         self._uid = 0
         self.finished: list[Request] = []
@@ -293,7 +311,9 @@ class ServingEngine:
         self.controller: OnlineController | None = None
         self._migrate: MigrationExecutable | None = None
         self._collective_axis: str | None = None
-        self._trace_counts = {"decode": 0, "prefill": 0}
+        # per-step straggler attribution (load vs variability split) —
+        # populated on MoE engines with a profile; see latency_report()
+        self.attribution: AttributionAccumulator | None = None
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
@@ -332,6 +352,7 @@ class ServingEngine:
                 config.num_layers,
                 engine_config.gem,
             )
+            self.attribution = AttributionAccumulator(nd)
             if profile is not None:
                 self.planner.set_profile(profile)
             self.placements = identity_placement(config, config.num_layers)
@@ -366,6 +387,7 @@ class ServingEngine:
             self._migrate = MigrationExecutable(
                 mesh=policy.mesh if self._collective_axis else None,
                 axis=self._collective_axis or "model",
+                telemetry=self.telemetry,
             )
             # one cost model for both replan paths: the online plane prices
             # its batches with it, and the one-shot swap charges the same
@@ -391,16 +413,18 @@ class ServingEngine:
                     ),
                     initial_placements=self.current_placements,
                     initial_rplacements=self.current_rplacements,
+                    telemetry=self.telemetry,
                 )
 
         # simulated latency accounting
         self.sim_step_latencies: list[float] = []
         self.sim_time = 0.0
 
-        # migration data-plane accounting: one record per applied batch —
+        # migration data-plane accounting (one record per applied batch —
         # the cost model's charge next to what the executed collective
-        # schedule actually shipped (fig22's measured-vs-modeled gate)
-        self.migration_records: list[dict[str, Any]] = []
+        # schedule actually shipped; fig22's measured-vs-modeled gate) now
+        # lives on the telemetry hub; ``migration_records`` is a property
+        # read-through so no caller breaks
         self.true_interconnect: Any | None = None  # MigrationCostModel
 
         # decode cache pool (same storage dtype as the params)
@@ -413,6 +437,7 @@ class ServingEngine:
                 self._kv_num_blocks, block_size,
                 watermark_blocks=engine_config.kv.watermark_blocks,
             )
+            self.kv_pool.telemetry = self.telemetry
             self.caches = init_paged_decode_cache(
                 config, self._kv_num_blocks, block_size, policy,
                 dtype=cache_dtype,
@@ -423,8 +448,9 @@ class ServingEngine:
             )
             def _decode_paged(params, caches, cur_len, tables, tokens,
                               placements):
-                self._trace_counts["decode"] += 1  # python side effect:
-                # runs once per trace, never on compiled-executable reuse
+                # python side effect: runs once per trace, never on
+                # compiled-executable reuse
+                self.telemetry.counter("jit.trace.decode").inc()
                 return decode_step(
                     params, caches, cur_len, tokens, config, policy,
                     placements, block_tables=tables,
@@ -452,7 +478,7 @@ class ServingEngine:
                 policy, dtype=cache_dtype,
             )
             def _decode_dense(params, caches, cur_len, tokens, placements):
-                self._trace_counts["decode"] += 1
+                self.telemetry.counter("jit.trace.decode").inc()
                 return decode_step(
                     params, caches, cur_len, tokens, config, policy,
                     placements, decode_mode=engine_config.decode_mode,
@@ -461,7 +487,7 @@ class ServingEngine:
             self._decode = jax.jit(_decode_dense)
 
         def _prefill_fn(params, batch, placements):
-            self._trace_counts["prefill"] += 1
+            self.telemetry.counter("jit.trace.prefill").inc()
             return prefill(params, batch, config, policy, placements)
 
         self._prefill = jax.jit(_prefill_fn)
@@ -600,6 +626,7 @@ class ServingEngine:
         """
         chunk = self.ecfg.prefill_chunk
         charge = 0.0
+        advanced = 0
         installed_now: list[Request] = []
         for slot, req in sorted(self.scheduler.active.items()):
             if self.installed[slot]:
@@ -608,6 +635,7 @@ class ServingEngine:
             if chunk > 0:
                 advance = min(advance, chunk)
             req.prefill_progress += advance
+            advanced += advance
             charge += advance * self.ecfg.prefill_time_per_token
             if req.prefilled:
                 if self.paged:
@@ -616,6 +644,11 @@ class ServingEngine:
                     self._write_slot(slot, req)
                 installed_now.append(req)
         self.sim_time += charge
+        if advanced > 0:
+            self.telemetry.counter("engine.prefill_tokens").inc(advanced)
+            self.telemetry.emit_span(
+                "prefill", self.sim_time - charge, charge, tokens=advanced
+            )
         for req in installed_now:
             if req.first_token_time < 0:  # keep TTFT across preemptions
                 req.first_token_time = self.sim_time
@@ -641,6 +674,8 @@ class ServingEngine:
         req.generated.clear()
         req.preemptions += 1
         self.preemption_count += 1
+        self.telemetry.counter("engine.preemptions").inc()
+        self.telemetry.instant("preempt", request=req.uid)
         self.scheduler.requeue_front(req)
         self.installed[slot] = False
         self.cur_len[slot] = 0
@@ -681,12 +716,21 @@ class ServingEngine:
         """Traces per jitted entry point: ``decode``, ``prefill``,
         ``migrate``. Under ``decode_mode="scan"`` the contract is one
         decode trace per (mode, shapes) signature and **zero** new
-        traces when a migration applies — the fig24 CI gate."""
-        out = dict(self._trace_counts)
-        out["migrate"] = (
-            self._migrate.trace_count if self._migrate is not None else 0
-        )
-        return out
+        traces when a migration applies — the fig24 CI gate. Thin
+        read-through of the telemetry registry's ``jit.trace.*``
+        counters (the single source of truth)."""
+        reg = self.telemetry.registry
+        return {
+            "decode": int(reg.counter("jit.trace.decode").value),
+            "prefill": int(reg.counter("jit.trace.prefill").value),
+            "migrate": int(reg.counter("jit.trace.migrate").value),
+        }
+
+    @property
+    def migration_records(self) -> list[dict[str, Any]]:
+        """One record per applied migration batch — thin read-through of
+        the telemetry hub's record list (the single source of truth)."""
+        return self.telemetry.migration_records
 
     def _apply_migration_sources(
         self, src: np.ndarray, *, swap_tables: bool
@@ -844,6 +888,49 @@ class ServingEngine:
         return step_cost_matrix(
             counts_virt, self._sim_profile, self.current_placements
         )
+
+    def _step_token_matrix(self, counts_virt: np.ndarray) -> np.ndarray | None:
+        """(L, G) per-layer per-device token loads of this step — the
+        straggler-attribution input, replica-split aware."""
+        if self._sim_profile is None or self.current_placements is None:
+            return None
+        G = self._sim_profile.num_devices
+        if self.current_rplacements is not None:
+            return replicated_step_token_matrix(
+                counts_virt, G, self.current_rplacements
+            )
+        return step_token_matrix(counts_virt, G, self.current_placements)
+
+    def _observe_attribution(self, counts_virt: np.ndarray) -> None:
+        """Decompose this step's straggler slack into load vs variability
+        (repro.telemetry.attribution) and fold it into the run aggregate +
+        registry metrics. Host-side numpy only — never touches tokens."""
+        prof = self._sim_profile
+        tokens = self._step_token_matrix(counts_virt)
+        if prof is None or tokens is None or self.attribution is None:
+            return
+        att = attribute_step(tokens, prof)
+        self.attribution.observe(att)
+        tel = self.telemetry
+        # slack_total/slack_load are max−mean ⇒ non-negative (counters);
+        # the variability residual can be negative (fast devices carrying
+        # the extra tokens), so its cumulative sum rides a gauge
+        tel.counter("attr.slack_total_s").inc(att.total)
+        tel.counter("attr.slack_load_s").inc(att.load)
+        tel.gauge("attr.slack_var_s").set(self.attribution.sum_var)
+        tel.histogram("attr.step_slack_s", _ATTR_SLACK_BOUNDS).observe(
+            att.total
+        )
+        if tel.enabled:
+            cost = prof.cost_all(tokens)  # (L, G)
+            device_time = cost.sum(axis=0)
+            straggler = int(device_time.argmax())
+            for g in range(cost.shape[1]):
+                tel.emit_span(
+                    "expert_compute", self.sim_time, float(device_time[g]),
+                    track=f"device{g}", step=self.step_count,
+                    straggler=(g == straggler),
+                )
 
     def _maybe_replan(self) -> None:
         if (
@@ -1020,10 +1107,11 @@ class ServingEngine:
         record: dict[str, Any] = {
             "step": self.step_count,
             "via": self.ecfg.migration_via if stats else "host",
-            "moves": moves,
+            "moves": int(moves),
             "modeled_s": float(modeled_s),
         }
         charge = float(modeled_s)
+        tel = self.telemetry
         if stats:
             total = stats[0]
             for s in stats[1:]:
@@ -1041,20 +1129,30 @@ class ServingEngine:
             )
             charge = max(measured_s - overlap_s, 0.0)
             record.update(
-                measured_s=measured_s,
-                charged_s=charge,
-                payload_bytes=total.payload_bytes,
-                cross_rows=total.cross_rows,
-                local_rows=total.local_rows,
-                rounds=total.rounds,
-                overlap_s=overlap_s,
+                measured_s=float(measured_s),
+                charged_s=float(charge),
+                payload_bytes=int(total.payload_bytes),
+                cross_rows=int(total.cross_rows),
+                local_rows=int(total.local_rows),
+                rounds=int(total.rounds),
+                overlap_s=float(overlap_s),
             )
+            tel.counter("migrate.payload_bytes").inc(
+                float(total.payload_bytes)
+            )
+            tel.counter("migrate.rounds").inc(float(total.rounds))
             if self.controller is not None:
                 self.controller.observe_migration_measurement(
                     total.payload_bytes, measured_s, modeled_s=modeled_s,
                     step=self.step_count,
                 )
-        self.migration_records.append(record)
+        tel.counter("migrate.applies").inc()
+        record["sim_time"] = float(self.sim_time)
+        tel.record_migration(record)
+        tel.emit_span(
+            "migrate", self.sim_time, charge,
+            moves=record["moves"], via=record["via"],
+        )
         return charge
 
     # ------------------------------------------------------------------
@@ -1062,6 +1160,8 @@ class ServingEngine:
         """One engine iteration: ingest arrivals → admit → prefill-chunk →
         decode → sample → bookkeeping (continuous batching)."""
         self._ingest_arrivals()
+        tel = self.telemetry
+        t0 = self.sim_time
         can_admit = self._kv_admit if self.kv_pool is not None else None
         for slot, req in self.scheduler.admit(can_admit=can_admit):
             req.start_step = self.step_count
@@ -1077,6 +1177,11 @@ class ServingEngine:
             # was preempted): charge the prefill time, no decode
             if prefill_charge > 0:
                 self.sim_step_latencies.append(prefill_charge)
+            tel.counter("engine.steps").inc()
+            tel.emit_span(
+                "step", t0, self.sim_time - t0,
+                step=self.step_count, active=self.scheduler.num_active,
+            )
             self.step_count += 1
             return {
                 "active": self.scheduler.num_active,
@@ -1116,22 +1221,32 @@ class ServingEngine:
             cost_mx = self._step_cost_matrix(counts_virt)
             if cost_mx is not None:
                 sim_latency += float(cost_mx.max(axis=1).sum())
+            self._observe_attribution(counts_virt)
+            tel.counter("dispatch.dropped_tokens").inc(
+                int(np.asarray(moe_aux.dropped_tokens).sum())
+            )
             if self.controller is not None:
                 sim_latency += self._online_step(counts_virt, cost_mx)
             else:
                 for layer in range(self.config.num_layers):
                     self.planner.observe_step(layer, counts_virt[layer])
+        tel.emit_span(
+            "decode", self.sim_time, sim_latency - prefill_charge,
+            step=self.step_count, active=int(self.installed.sum()),
+        )
         self.sim_step_latencies.append(sim_latency)
         # _prefill_phase already advanced the clock by its charge (the
         # TTFT stamp needs it); advance by the decode remainder only
         self.sim_time += sim_latency - prefill_charge
 
         done_slots = []
+        decoded = 0
         for slot, req in list(self.scheduler.active.items()):
             if not self.installed[slot]:
                 continue  # still prefilling (chunked): no token this step
             tok = int(next_tokens[slot])
             req.generated.append(tok)
+            decoded += 1
             self.last_token[slot] = tok
             self.cur_len[slot] += 1
             if req.done or self.cur_len[slot] >= self.ecfg.max_len - 1:
@@ -1147,8 +1262,15 @@ class ServingEngine:
                 self.kv_pool.release(req.uid)
                 self.block_tables[slot, :] = 0
 
+        if decoded:
+            tel.counter("engine.decode_tokens").inc(decoded)
+        tel.counter("engine.steps").inc()
         self.step_count += 1
         self._maybe_replan()
+        tel.emit_span(
+            "step", t0, self.sim_time - t0,
+            step=self.step_count - 1, active=self.scheduler.num_active,
+        )
         return {
             "active": self.scheduler.num_active,
             "finished": len(self.finished),
@@ -1220,5 +1342,12 @@ class ServingEngine:
                 migration_overlap_s=float(
                     sum(r["overlap_s"] for r in measured)
                 ),
+            )
+        if self.attribution is not None and self.attribution.steps > 0:
+            summ = self.attribution.summary()
+            # report is dict[str, float]: the per-device straggler tally
+            # (a list) stays on the accumulator / telemetry snapshot
+            out.update(
+                (k, v) for k, v in summ.items() if isinstance(v, float)
             )
         return out

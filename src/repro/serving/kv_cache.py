@@ -95,6 +95,9 @@ class PagedKVPool:
         self.peak_used = 0
         self.alloc_failures = 0
         self.total_allocs = 0
+        # optional repro.telemetry.Telemetry hub (the engine binds its
+        # own): occupancy gauge (max = watermark) + failure counter
+        self.telemetry = None
 
     # -- capacity ------------------------------------------------------
     @property
@@ -129,11 +132,15 @@ class PagedKVPool:
             return True
         if need > self.free_blocks:
             self.alloc_failures += 1
+            if self.telemetry is not None:
+                self.telemetry.counter("kv.alloc_failures").inc()
             return False
         for _ in range(need):
             table.append(self._free.pop())
         self.total_allocs += need
         self.peak_used = max(self.peak_used, self.used_blocks)
+        if self.telemetry is not None:
+            self.telemetry.gauge("kv.used_blocks").set(self.used_blocks)
         return True
 
     def release(self, uid: int) -> int:
@@ -142,6 +149,8 @@ class PagedKVPool:
             raise KeyError(f"release of unknown/already-released uid {uid}")
         blocks = self._tables.pop(uid)
         self._free.extend(reversed(blocks))
+        if self.telemetry is not None:
+            self.telemetry.gauge("kv.used_blocks").set(self.used_blocks)
         return len(blocks)
 
     def block_table(self, uid: int) -> list[int]:

@@ -75,6 +75,9 @@ class Scheduler:
         self.admit_lookahead = admit_lookahead
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot → request
+        # optional repro.telemetry.Telemetry hub (the engine binds its
+        # own): admission outcome counters, pure host-side bookkeeping
+        self.telemetry = None
 
     def set_slow_device_factor(self, factor: float) -> None:
         """Tighten/relax the prefill budget to the fleet's slowest device.
@@ -122,11 +125,15 @@ class Scheduler:
             # (progress guarantee for prompts larger than the budget)
             fits_budget = req.prompt_len <= budget or not admissions
             if not fits_budget:
+                if self.telemetry is not None:
+                    self.telemetry.counter("sched.budget_skips").inc()
                 idx += 1  # skipped in place — keeps its queue position
                 continue
             # the engine's can_admit may reserve KV blocks on success, so
             # it runs only after every cheaper gate has passed
             if can_admit is not None and not can_admit(req):
+                if self.telemetry is not None:
+                    self.telemetry.counter("sched.kv_blocked").inc()
                 break  # KV-blocked: blocks free on completion only
             del self.queue[idx]
             budget -= req.prompt_len
@@ -134,6 +141,8 @@ class Scheduler:
             req.slot = slot
             self.active[slot] = req
             admissions.append((slot, req))
+        if admissions and self.telemetry is not None:
+            self.telemetry.counter("sched.admitted").inc(len(admissions))
         return admissions
 
     def release(self, slot: int) -> Request:

@@ -1,0 +1,36 @@
+"""Unified telemetry plane: metrics registry, simulated-clock span
+tracing, per-step straggler attribution, and Chrome-trace/JSONL export.
+
+See ``telemetry/README.md`` in this package for the event/metric schema
+reference and the versioning rule.
+"""
+from .attribution import (
+    AttributionAccumulator,
+    StepAttribution,
+    attribute_step,
+)
+from .export import (
+    SCHEMA,
+    read_jsonl,
+    to_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+from .registry import Counter, Gauge, Histogram, Registry
+from .spans import Telemetry
+
+__all__ = [
+    "AttributionAccumulator",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "SCHEMA",
+    "StepAttribution",
+    "Telemetry",
+    "attribute_step",
+    "read_jsonl",
+    "to_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]
