@@ -8,6 +8,8 @@ latency reductions (the paper's figure of merit) are scale-free.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import numpy as np
 
@@ -142,3 +144,39 @@ def request_lengths(n: int, seed: int = 0) -> np.ndarray:
     """Decode lengths for e2e accounting (ShareGPT-like mix)."""
     rng = np.random.default_rng(seed)
     return np.clip(rng.geometric(1.0 / 128, size=n), 8, 512)
+
+
+def _flatten_scalars(obj, prefix: str, into: dict) -> None:
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _flatten_scalars(v, f"{prefix}{k}." if prefix else f"{k}.", into)
+        return
+    key = prefix[:-1]
+    if isinstance(obj, (bool, np.bool_)):
+        into[key] = bool(obj)
+    elif isinstance(obj, (int, float, np.integer, np.floating)):
+        into[key] = float(obj)
+    elif isinstance(obj, (list, tuple)) and all(
+        isinstance(v, (int, float, np.integer, np.floating)) for v in obj
+    ):
+        into[key] = [float(v) for v in obj]
+    # non-scalar leaves (strings, nested lists) are presentation, not
+    # figures of merit — dropped from the machine-readable summary
+
+
+def write_bench_summary(name: str, *, seed: int, scalars: dict,
+                        out_dir: str = "results") -> str:
+    """Write ``results/BENCH_<name>.json``: the benchmark's seed + key
+    scalars (p50/p99/e2e figures of merit) as one flat machine-readable
+    dict with dotted keys. Every ``fig*`` script emits one, and CI's
+    results artifact (``results/*.json``) uploads them — a run's headline
+    numbers are diffable across commits without re-parsing each figure's
+    bespoke output document. Returns the path written."""
+    flat: dict = {}
+    _flatten_scalars(scalars, "", flat)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "seed": int(seed), "scalars": flat}, f,
+                  indent=1, sort_keys=True)
+    return path

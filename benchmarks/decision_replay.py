@@ -1,0 +1,305 @@
+"""Offline controller decision replay: the audit plane's proof of work.
+
+The online control plane logs every decision it takes as structured
+``audit.*`` instants (:mod:`repro.telemetry.audit`): one ``audit.init``
+with everything needed to reconstruct the controller (configs, cost
+model, initial slot layouts, believed-profile curves), one ``audit.step``
+per ``observe_step`` call carrying the raw inputs *and* the serialized
+:class:`~repro.online.controller.StepDecision`, plus ``audit.measure``
+(bandwidth-calibration inputs) and ``audit.retarget`` (the serving
+engine's one-shot replicated retarget) records.
+
+This script re-derives every decision **from the JSONL alone** and
+byte-compares it against the log:
+
+1. rebuild the controller from ``audit.init`` (the log is the only
+   input — no access to the original run's objects);
+2. walk the events in file order, re-feeding each ``audit.step``'s
+   counts/observed latencies and each ``audit.measure``'s calibration
+   sample, comparing ``dumps(decision_payload(...))`` of the recomputed
+   decision against the logged one — byte-exact or it's a mismatch;
+3. cross-check every ``replan`` instant against the reconstructed
+   controller's replan records (same canonical encoding), and re-derive
+   each ``audit.retarget``'s priced move count from its logged layouts
+   via :func:`repro.replication.replica_fetch_rows`.
+
+The controller is host-side numpy seeded from its own config, so a
+faithful log replays to 100% byte-exact decisions; anything less exits
+non-zero. This is part of the ``telemetry-smoke`` CI gate: it runs
+against the fig23 burst event log, and ``--run-fig20`` generates +
+verifies event logs for both fig20 shift scenarios in-process.
+
+Run:  PYTHONPATH=src python -m benchmarks.decision_replay \
+          results/fig23_events.jsonl [--run-fig20 --smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import GEMConfig, MigrationCostModel, VariabilityProfile
+from repro.core.gem import GEMPlanner
+from repro.core.types import Placement
+from repro.online import (
+    DriftConfig,
+    MigrationConfig,
+    OnlineConfig,
+    OnlineController,
+    replay_online,
+)
+from repro.replication import (
+    ReplicatedPlacement,
+    ReplicationConfig,
+    replica_fetch_rows,
+)
+from repro.telemetry import Telemetry, read_jsonl, write_jsonl
+from repro.telemetry.audit import decision_payload, dumps
+
+from .common import add_seed_arg
+
+
+def build_controller(init: dict) -> OnlineController:
+    """Reconstruct the controller from an ``audit.init`` record — configs,
+    cost model, profile curves, and initial slot layouts all come from the
+    log, nothing from the original process."""
+    cfg = dict(init["config"])
+    ocfg = OnlineConfig(
+        drift=DriftConfig(**cfg.pop("drift")),
+        migration=MigrationConfig(**cfg.pop("migration")),
+        replication=ReplicationConfig(**cfg.pop("replication")),
+        **cfg,
+    )
+    profile = VariabilityProfile(
+        token_counts=np.asarray(init["profile"]["token_counts"]),
+        latencies=np.asarray(init["profile"]["latencies"]),
+        tile_size=int(init["profile"]["tile_size"]),
+    )
+    Ev, G, L = init["num_experts"], init["num_devices"], init["num_layers"]
+    planner = GEMPlanner(Ev, G, L, GEMConfig(**init["gem"]))
+    planner.set_profile(profile)
+    cost_model = MigrationCostModel(**init["cost_model"])
+    layouts = [
+        np.asarray(lay, dtype=np.int32) for lay in init["slot_layouts"]
+    ]
+    if init["replicated"]:
+        rinitial = []
+        for lay in layouts:
+            rp = ReplicatedPlacement(lay.copy(), G, Ev)
+            rp.compute_speed_shares(profile, config=ocfg.replication)
+            rinitial.append(rp)
+        return OnlineController(
+            planner, cost_model, ocfg, initial_rplacements=rinitial
+        )
+    ctrl = OnlineController(
+        planner, cost_model, ocfg,
+        initial_placements=[Placement.from_slots(lay, G) for lay in layouts],
+    )
+    # the logged layouts are the raw physical truth; Placement.from_slots →
+    # slot_to_expert canonicalises within-device order, so restore the
+    # exact bytes (a mid-migration handoff layout need not be canonical)
+    ctrl.slot_layouts = [lay.copy() for lay in layouts]
+    return ctrl
+
+
+def _verify_retarget(args: dict) -> int:
+    """Re-derive the one-shot replicated retarget's priced move count from
+    the logged live + target layouts (multiset fetch accounting — same
+    function the engine priced with)."""
+    G, Ev = int(args["num_devices"]), int(args["num_experts"])
+    return sum(
+        replica_fetch_rows(
+            ReplicatedPlacement(np.asarray(cur, dtype=np.int32), G, Ev),
+            ReplicatedPlacement(np.asarray(tgt, dtype=np.int32), G, Ev),
+        )
+        for cur, tgt in zip(args["slot_layouts"], args["target_layouts"])
+    )
+
+
+def replay_log(path: str, *, recover_tail: bool = False) -> dict:
+    """Replay one event log; returns the match summary (``mismatches``
+    non-empty or ``steps == 0`` ⇒ the log fails the gate)."""
+    doc = read_jsonl(path, recover_tail=recover_tail)
+    result = {
+        "path": path, "controllers": 0, "steps": 0, "measures": 0,
+        "retargets": 0, "replans_logged": 0, "replans_replayed": 0,
+        "mismatches": [],
+    }
+
+    def mismatch(kind: str, step, got: str, want: str) -> None:
+        result["mismatches"].append(
+            {"kind": kind, "step": step, "got": got, "want": want}
+        )
+
+    ctrl: OnlineController | None = None
+    replayed_replans: list[dict] = []
+
+    def flush_replans() -> None:
+        if ctrl is not None:
+            replayed_replans.extend(ctrl.replans)
+            result["replans_replayed"] += len(ctrl.replans)
+
+    for ev in doc["events"]:
+        name, args = ev["name"], ev.get("args") or {}
+        if name == "audit.init":
+            flush_replans()
+            ctrl = build_controller(args)
+            result["controllers"] += 1
+        elif name == "audit.step":
+            if ctrl is None:
+                mismatch("orphan", args.get("step"),
+                         "audit.step before audit.init", "audit.init first")
+                continue
+            counts = np.asarray(args["counts"], dtype=np.int64)
+            observed = (
+                None if args["observed"] is None
+                else np.asarray(args["observed"], dtype=np.float64)
+            )
+            decision = ctrl.observe_step(counts, observed)
+            got = dumps(decision_payload(decision))
+            want = dumps(args["decision"])
+            result["steps"] += 1
+            if got != want:
+                mismatch("decision", args["step"], got, want)
+        elif name == "audit.measure":
+            if ctrl is None:
+                continue
+            ctrl.observe_migration_measurement(
+                args["payload_bytes"], args["measured_s"],
+                modeled_s=args["modeled_s"], step=args["step"],
+            )
+            result["measures"] += 1
+        elif name == "audit.retarget":
+            moves = _verify_retarget(args)
+            result["retargets"] += 1
+            if moves != int(args["moves"]):
+                mismatch("retarget", args["step"],
+                         f"moves={moves}", f"moves={args['moves']}")
+        elif name == "replan":
+            result["replans_logged"] += 1
+    flush_replans()
+
+    # every logged replan instant must match the reconstructed
+    # controller's replan record, byte-exactly and in order (the instants
+    # carry the record dicts verbatim — scores, gate inputs, truncation)
+    logged = [
+        ev.get("args") or {}
+        for ev in doc["events"] if ev["name"] == "replan"
+    ]
+    for i, (want_rec, got_rec) in enumerate(zip(logged, replayed_replans)):
+        got, want = dumps(got_rec), dumps(want_rec)
+        if got != want:
+            mismatch("replan", want_rec.get("step"), got, want)
+    if len(logged) != len(replayed_replans):
+        mismatch("replan-count", None, f"{len(replayed_replans)} replayed",
+                 f"{len(logged)} logged")
+    return result
+
+
+def run_fig20_logs(*, smoke: bool, seed: int, out_dir: str) -> list[str]:
+    """Generate event logs for both fig20 shift scenarios (gem-online,
+    telemetry attached) — the acceptance runs the replayer verifies."""
+    from .fig20_online import (
+        MODEL,
+        TASK_SHIFT_DRIFT,
+        build_scenarios,
+        policy_configs,
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    expert_bytes = MigrationCostModel.for_expert_dims(
+        MODEL.d_model, MODEL.expert_d_ff
+    ).expert_bytes
+    gem_cfg = GEMConfig(trace_length=16, num_restarts=6 if smoke else 12)
+    for scenario in build_scenarios(smoke=smoke, seed=seed):
+        drift = (
+            TASK_SHIFT_DRIFT if scenario.name == "task_shift"
+            else DriftConfig()
+        )
+        tel = Telemetry()
+        replay_online(
+            scenario, scenario.profiles[0], gem_cfg,
+            policy_configs(drift)["gem-online"],
+            expert_bytes=expert_bytes, telemetry=tel,
+        )
+        path = os.path.join(out_dir, f"fig20_{scenario.name}_events.jsonl")
+        write_jsonl(
+            tel, path, figure="fig20", scenario=scenario.name,
+            policy="gem-online", seed=seed,
+        )
+        print(f"generated {path}")
+        paths.append(path)
+    return paths
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    help="repro.telemetry/v1 JSONL event logs to replay")
+    ap.add_argument("--run-fig20", action="store_true",
+                    help="generate + verify event logs for both fig20 "
+                         "shift scenarios (gem-online) in-process")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller fig20 search (CI)")
+    ap.add_argument("--recover-tail", action="store_true",
+                    help="accept crash-consistent logs (torn final line / "
+                         "missing metrics trailer)")
+    ap.add_argument("--out-dir", default="results",
+                    help="where --run-fig20 writes its event logs")
+    ap.add_argument("--out", default="results/decision_replay.json")
+    add_seed_arg(ap)
+    args = ap.parse_args()
+
+    paths = list(args.paths)
+    if args.run_fig20:
+        paths += run_fig20_logs(
+            smoke=args.smoke, seed=args.seed, out_dir=args.out_dir
+        )
+    if not paths:
+        ap.error("no event logs: pass JSONL paths and/or --run-fig20")
+
+    out: dict = {"logs": [], "violations": []}
+    for path in paths:
+        res = replay_log(path, recover_tail=args.recover_tail)
+        out["logs"].append(res)
+        n_bad = len(res["mismatches"])
+        print(
+            f"{path}: controllers={res['controllers']} "
+            f"steps={res['steps']} measures={res['measures']} "
+            f"retargets={res['retargets']} "
+            f"replans={res['replans_replayed']}/{res['replans_logged']} "
+            f"mismatches={n_bad}"
+        )
+        if res["controllers"] == 0 or res["steps"] == 0:
+            out["violations"].append(
+                f"{path}: no audited controller decisions to replay"
+            )
+        for m in res["mismatches"][:5]:
+            out["violations"].append(
+                f"{path}: {m['kind']} mismatch at step {m['step']}: "
+                f"replayed {m['got']!r} != logged {m['want']!r}"
+            )
+        if n_bad > 5:
+            out["violations"].append(
+                f"{path}: ... and {n_bad - 5} more mismatches"
+            )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.out}")
+    if out["violations"]:
+        for v in out["violations"]:
+            print(f"FAIL: {v}")
+        return 1
+    total = sum(r["steps"] for r in out["logs"])
+    print(f"PASS: {total} decisions across {len(paths)} log(s) replayed "
+          "byte-exactly")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core import generate_layer_traces
 
-from .common import PAPER_MODELS, workload_for
+from .common import PAPER_MODELS, workload_for, write_bench_summary
 
 QWEN = next(m for m in PAPER_MODELS if m.name == "Qwen3-30B-A3B")
 
@@ -56,4 +56,6 @@ if __name__ == "__main__":
     for r in rows:
         print(f"layer {r['layer']}: max/uniform={r['max_over_uniform']:.2f} "
               f"top8={r['top8']}")
-    print(summarize(rows, extra))
+    summary = summarize(rows, extra)
+    print(summary)
+    write_bench_summary("fig02_utilization", seed=0, scalars=summary)

@@ -24,6 +24,7 @@ from .common import (
     fleet_profile,
     identity_seed_for,
     workload_for,
+    write_bench_summary,
 )
 
 LENGTHS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -90,4 +91,6 @@ if __name__ == "__main__":
     for r in rows:
         print(f"{r['model']:16s} T={r['trace_length']:3d} "
               f"{r['reduction_pct']:+6.2f}%")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig10_trace_length", seed=0, scalars=summary)

@@ -26,6 +26,7 @@ from .common import (
     identity_seed_for,
     request_lengths,
     workload_for,
+    write_bench_summary,
 )
 
 # layers simulated per model (MoE layers dominate; a subset keeps the
@@ -110,4 +111,6 @@ if __name__ == "__main__":
     for r in rows:
         print(f"{r['model']:16s} {r['dataset']:13s} {r['setup']:9s} "
               f"GEM {r['gem']:+6.2f}%   EPLB {r['eplb']:+6.2f}%")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig15_e2e", seed=0, scalars=summary)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import DATASETS, PAPER_MODELS, SETUPS
+from .common import DATASETS, PAPER_MODELS, SETUPS, write_bench_summary
 from .fig15_e2e import run_cell
 
 
@@ -67,4 +67,6 @@ if __name__ == "__main__":
         if r["policy"] == "gem":
             print(f"{r['model']:16s} {r['dataset']:13s} mean {r['mean_reduction_pct']:+6.2f}% "
                   f"p90 {r['p90_reduction_pct']:+6.2f}% p99 {r['p99_reduction_pct']:+6.2f}%")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig16_tpot", seed=0, scalars=summary)

@@ -23,7 +23,13 @@ from repro.core import (
     score,
 )
 
-from .common import NUM_DEVICES, PAPER_MODELS, fleet_profile, workload_for
+from .common import (
+    NUM_DEVICES,
+    PAPER_MODELS,
+    fleet_profile,
+    workload_for,
+    write_bench_summary,
+)
 
 SCOUT = next(m for m in PAPER_MODELS if m.name == "Llama-4-Scout")
 
@@ -86,4 +92,6 @@ if __name__ == "__main__":
               f"slow-device-share={r['slow_device_token_share']:.3f} "
               f"group-spread={r['temporal_group_spread']:.2f} "
               f"hot-on-slow={r['hot_on_slow']}")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig17_policies", seed=0, scalars=summary)

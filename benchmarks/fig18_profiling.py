@@ -18,7 +18,7 @@ from repro.core import (
     tile_boundary_grid,
 )
 
-from .common import NUM_DEVICES, PAPER_MODELS
+from .common import NUM_DEVICES, PAPER_MODELS, write_bench_summary
 
 MAX_TOKENS = 16_384
 REPEATS = 500
@@ -73,4 +73,6 @@ if __name__ == "__main__":
               f"fast={r['fast_device_minutes']:6.2f} min  "
               f"dense={r['dense_device_hours']:6.2f} h  "
               f"speedup={r['speedup']:6.1f}x")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig18_profiling", seed=0, scalars=summary)

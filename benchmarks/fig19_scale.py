@@ -8,6 +8,8 @@ from __future__ import annotations
 
 from repro.core import L40_FLEET, MI300X_FLEET, TRAINIUM_FLEET, expected_gap_curve
 
+from .common import write_bench_summary
+
 SIZES = (2, 4, 8, 16, 32, 64, 128)
 
 
@@ -35,4 +37,6 @@ if __name__ == "__main__":
     rows = run(4000)
     for r in rows:
         print(f"{r['platform']:9s} N={r['n']:4d} gap={r['gap_pct']:5.1f}%")
-    print(summarize(rows))
+    summary = summarize(rows)
+    print(summary)
+    write_bench_summary("fig19_scale", seed=0, scalars=summary)

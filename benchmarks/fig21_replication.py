@@ -64,6 +64,7 @@ from .common import (
     request_lengths,
     seeded,
     workload_for,
+    write_bench_summary,
 )
 
 MODEL = PAPER_MODELS[0]  # Mixtral-8x7B — few large experts, worst skew
@@ -272,6 +273,21 @@ def main() -> int:
             f"  best budget {res['best_budget']}/device: "
             f"{res['e2e_reduction_vs_gem_pct']:+.1f}% e2e vs plain GEM"
         )
+    write_bench_summary(
+        "fig21_replication", seed=args.seed,
+        scalars={
+            name: {
+                "best_budget": res["best_budget"],
+                "e2e_reduction_vs_gem_pct": res["e2e_reduction_vs_gem_pct"],
+                "baselines": {
+                    p: {k: row[k] for k in ("mean_e2e_s", "p99_tpot_s")
+                        if k in row}
+                    for p, row in res["baselines"].items()
+                },
+            }
+            for name, res in out["workloads"].items()
+        },
+    )
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

@@ -56,7 +56,7 @@ from repro.replication import (
     replica_fetch_rows,
 )
 
-from .common import NUM_DEVICES, add_seed_arg, seeded
+from .common import NUM_DEVICES, add_seed_arg, seeded, write_bench_summary
 from .fig20_online import (
     MAX_MOVES_PER_STEP,
     MODEL,
@@ -525,6 +525,30 @@ def main() -> int:
         f"learned bandwidth "
         f"{'none' if learned is None else format(learned, '.3g')} "
         f"(true {eng['collective-calibrated']['true_bandwidth']:.3g})"
+    )
+    write_bench_summary(
+        "fig22_collective", seed=args.seed,
+        scalars={
+            "scenarios": {
+                name: {
+                    k: res[k]
+                    for k in ("batches", "final_bit_exact", "measured_bytes",
+                              "modeled_cross_bytes", "charge_rel_gap")
+                    if k in res
+                }
+                for name, res in out["scenarios"].items()
+            },
+            "replica_install": {
+                k: v for k, v in rep.items()
+                if isinstance(v, (bool, int, float))
+            },
+            "engine": {
+                "tokens_host_eq_collective": eng["tokens_host_eq_collective"],
+                "learned_bandwidth": learned if learned is not None else 0.0,
+                "true_bandwidth":
+                    eng["collective-calibrated"]["true_bandwidth"],
+            },
+        },
     )
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -72,8 +72,12 @@ from repro.serving import (
 from repro.sharding import host_policy
 from repro.telemetry import Telemetry, read_jsonl, write_chrome_trace, write_jsonl
 
-from .common import NUM_DEVICES, add_seed_arg, seeded
-from .telemetry_report import attribution_summary, parse_chrome_trace
+from .common import NUM_DEVICES, add_seed_arg, seeded, write_bench_summary
+from .telemetry_report import (
+    attribution_summary,
+    parse_chrome_trace,
+    regret_summary,
+)
 
 MAX_BATCH = 4
 MAX_LEN = 64
@@ -83,6 +87,10 @@ MAX_MOVES_PER_STEP = 2
 # Smoke-scale p99 over a handful of requests is a max statistic; allow this
 # much tail noise before calling the online plane a regression.
 TPOT_GATE_MARGIN = 1.15
+# TTFT service target (sim-seconds) wired into the scheduler so admission
+# exports per-request queue-age and TTFT-slack instruments; burst spikes
+# are expected to push some admissions past it (sched.slo_at_risk).
+TTFT_SLO_S = 0.05
 
 # Task mix sized to MAX_LEN (prompt + output always fit the KV budget);
 # disjoint vocab bands make the mid-run mix shift router-visible.
@@ -129,6 +137,7 @@ def _engine_config(policy_name: str, *, online: bool) -> EngineConfig:
         kv=PagedKVConfig(block_size=4, num_blocks=40, watermark_blocks=1),
         prefill_chunk=16,
         prefill_time_per_token=2e-6,
+        ttft_slo_s=TTFT_SLO_S,
     )
 
 
@@ -234,7 +243,7 @@ def check_parity(*, params, cfg, believed, violations: list) -> bool:
 
 def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
                     seed: int, violations: list, out_dir: str) -> dict:
-    """The CI telemetry gate: rerun the poisson/gem-online scenario with
+    """The CI telemetry gate: rerun the burst/gem-online scenario with
     the telemetry plane attached and check
 
       (a) token bit-parity — a live hub must not change a single sampled
@@ -242,10 +251,17 @@ def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
       (b) the JSONL + Chrome exports round-trip through the
           ``telemetry_report`` parsers (schema validation included);
       (c) the attribution invariant holds on the exported metrics
-          (slack components sum to the total).
+          (slack components sum to the total);
+      (d) the regret invariants hold (per-step regret ≥ 0 up to the noise
+          floor, components sum to the total, total = actual − oracle).
+
+    The burst stream is the audited scenario on purpose: queue spikes +
+    the mid-run slowdown exercise every controller decision path, and
+    ``benchmarks/decision_replay.py`` replays the exported
+    ``fig23_events.jsonl`` byte-exactly in CI.
     """
     specs = _arrival_stream(
-        "poisson", cfg.vocab_size, num_requests=num_requests, seed=seed
+        "burst", cfg.vocab_size, num_requests=num_requests, seed=seed
     )
     tel = Telemetry()
     tokens: dict = {}
@@ -273,7 +289,7 @@ def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
     os.makedirs(out_dir, exist_ok=True)
     events_path = os.path.join(out_dir, "fig23_events.jsonl")
     trace_path = os.path.join(out_dir, "fig23_trace.json")
-    meta = {"figure": "fig23", "scenario": "poisson/gem-online", "seed": seed}
+    meta = {"figure": "fig23", "scenario": "burst/gem-online", "seed": seed}
     write_jsonl(tel, events_path, **meta)
     n_trace = write_chrome_trace(tel, trace_path, **meta)
     out = {"token_parity": parity, "events_path": events_path,
@@ -282,6 +298,7 @@ def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
         doc = read_jsonl(events_path)
         parse_chrome_trace(trace_path)
         attr = attribution_summary(doc)  # raises on a broken invariant
+        reg = regret_summary(doc)  # raises on a broken regret invariant
     except ValueError as e:
         violations.append(f"telemetry export round-trip: {e}")
         return out
@@ -300,9 +317,30 @@ def check_telemetry(*, params, cfg, believed, true_slow, num_requests: int,
         violations.append("telemetry export carries no attribution metrics")
     else:
         out["attribution"] = attr
+    if reg is None:
+        violations.append("telemetry export carries no regret metrics")
+    else:
+        out["regret"] = reg
+    hists = (doc.get("metrics") or {}).get("histograms", {})
+    for hname in ("sched.queue_age_s", "sched.ttft_slack_s"):
+        if hists.get(hname, {}).get("total", 0) <= 0:
+            violations.append(
+                f"telemetry export carries no {hname} samples — the "
+                "admission-time queue-age/TTFT-slack instruments went dark"
+            )
+    audit_steps = sum(
+        1 for ev in doc["events"] if ev["name"] == "audit.step"
+    )
+    if audit_steps == 0:
+        violations.append(
+            "telemetry export carries no audit.step records — "
+            "decision_replay would have nothing to verify"
+        )
+    out["audit_steps"] = audit_steps
     out["events"] = len(doc["events"])
     out["report"] = {
-        k: v for k, v in report.items() if k.startswith("attr_")
+        k: v for k, v in report.items()
+        if k.startswith(("attr_", "regret_"))
     }
     return out
 
@@ -386,6 +424,26 @@ def main() -> int:
                 f"var={attr['slack_var_s']*1e3:.3f}ms "
                 f"(load share {attr['load_frac']:.1%})"
             )
+        reg = t.get("regret")
+        if reg:
+            print(
+                f"  regret: total={reg['regret_total_s']*1e3:.3f}ms "
+                f"placement={reg['regret_placement_s']*1e3:.3f}ms "
+                f"lag={reg['regret_migration_lag_s']*1e3:.3f}ms "
+                f"unrecoverable={reg['regret_unrecoverable_s']*1e3:.3f}ms "
+                f"({reg['regret_frac']:.1%} of MoE step time, "
+                f"{t['audit_steps']} audited decisions)"
+            )
+    write_bench_summary(
+        "fig23_serving", seed=args.seed,
+        scalars={
+            scen: {
+                name: {k: rep[k] for k in _COLS if k in rep}
+                for name, rep in rows.items()
+            }
+            for scen, rows in out["scenarios"].items()
+        },
+    )
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

@@ -33,7 +33,7 @@ import time
 
 import numpy as np
 
-from .common import add_seed_arg, seeded
+from .common import add_seed_arg, seeded, write_bench_summary
 
 MODEL = "mixtral-8x7b"
 MAX_MOVES_PER_STEP = 2
@@ -178,6 +178,20 @@ def main() -> int:
             f"(p90 {w['p90']:.1f}ms, max {w['max']:.1f}ms)"
         )
     print(f"== tokens scan≡python: {out['tokens_scan_eq_python']}")
+    write_bench_summary(
+        "fig24_scan_decode", seed=args.seed,
+        scalars={
+            "modes": {
+                mode: {
+                    "steps": res["steps"],
+                    "migration_batches": res["migration_batches"],
+                    "step_wall_ms": res["step_wall_ms"],
+                }
+                for mode, res in out["modes"].items()
+            },
+            "tokens_scan_eq_python": out["tokens_scan_eq_python"],
+        },
+    )
     if args.out:
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:

@@ -17,18 +17,27 @@ spans and the straggler-cell tally; the footer splits the fleet's total
 slack into its load-imbalance and speed-variability components from the
 ``attr.*`` metrics.
 
+The **fleet-health** section (PR 9) reads the regret plane
+(:mod:`repro.telemetry.regret`): a per-step regret timeline from the
+``regret`` instants, and the slack ledger split into what a replan could
+recover right now (placement regret), what a replan already in flight
+will recover (migration-lag regret), and what no placement can fix (the
+oracle's distance to the placement-free floor). Its invariants are CI
+gates: per-step regret ≥ 0 up to the declared noise floor, the
+components sum to the total, and total = actual − oracle.
+
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_report \
           results/fig23_events.jsonl [--trace results/fig23_trace.json]
 
-Exits non-zero on a schema violation or a broken attribution invariant
-(components must sum to the total).
+Exits non-zero on a schema violation or a broken attribution/regret
+invariant.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-from repro.telemetry import read_jsonl
+from repro.telemetry import NOISE_FLOOR, read_jsonl
 
 _CHROME_PHASES = {"M", "X", "i"}
 
@@ -104,6 +113,101 @@ def attribution_summary(doc: dict) -> dict | None:
             "slack_var_s": var, "load_frac": frac}
 
 
+def regret_summary(doc: dict) -> dict | None:
+    """Regret ledger from the metrics trailer; None when no regret ran.
+
+    Raises ``ValueError`` when a regret invariant is broken:
+
+    - the run total must be ≥ 0 up to the declared ``NOISE_FLOOR``;
+    - the placement + migration-lag components must sum to the total
+      (each step lands in exactly one component);
+    - total must equal actual − oracle, and the oracle must sit at or
+      above the placement-free lower bound.
+    """
+    counters = (doc.get("metrics") or {}).get("counters", {})
+    if "regret.total_s" not in counters:
+        return None
+    total = counters["regret.total_s"]
+    placement = counters.get("regret.placement_s", 0.0)
+    lag = counters.get("regret.migration_lag_s", 0.0)
+    actual = counters.get("regret.actual_s", 0.0)
+    oracle = counters.get("regret.oracle_s", 0.0)
+    lb = counters.get("regret.lower_bound_s", 0.0)
+    if total < -NOISE_FLOOR:
+        raise ValueError(f"regret invariant broken: total {total} < 0")
+    tol = 1e-9 + 1e-6 * abs(total)
+    if abs(total - (placement + lag)) > tol:
+        raise ValueError(
+            f"regret invariant broken: total {total} != placement "
+            f"{placement} + migration-lag {lag}"
+        )
+    if abs(total - (actual - oracle)) > 1e-9 + 1e-6 * abs(actual):
+        raise ValueError(
+            f"regret invariant broken: total {total} != actual {actual} "
+            f"- oracle {oracle}"
+        )
+    if oracle - lb < -(1e-9 + 1e-6 * abs(oracle)):
+        raise ValueError(
+            f"regret invariant broken: oracle {oracle} below the "
+            f"placement-free floor {lb}"
+        )
+    return {
+        "regret_total_s": total,
+        "regret_placement_s": placement,
+        "regret_migration_lag_s": lag,
+        "regret_unrecoverable_s": oracle - lb,
+        "regret_actual_s": actual,
+        "regret_oracle_s": oracle,
+        "regret_frac": (total / actual) if actual else 0.0,
+    }
+
+
+def regret_timeline(doc: dict, *, buckets: int = 8) -> list[dict]:
+    """Bucketed per-step regret from the ``regret`` instants: the run's
+    steps split into ``buckets`` equal ranges, each row carrying the mean
+    regret and the dominant component — the collapse after an online
+    replan lands reads directly off this table.
+
+    Also re-checks the *per-step* invariants the trailer cannot see:
+    every instant's ``regret_s`` must equal ``actual_s − oracle_s`` and
+    sit above ``-NOISE_FLOOR``.
+    """
+    evs = [
+        ev["args"] for ev in doc["events"]
+        if ev.get("kind") == "instant" and ev.get("name") == "regret"
+    ]
+    for a in evs:
+        if abs(a["regret_s"] - (a["actual_s"] - a["oracle_s"])) > 1e-12:
+            raise ValueError(
+                f"regret instant at step {a['step']}: regret_s "
+                f"{a['regret_s']} != actual - oracle"
+            )
+        if a["regret_s"] < -NOISE_FLOOR:
+            raise ValueError(
+                f"regret instant at step {a['step']}: negative regret "
+                f"{a['regret_s']}"
+            )
+    if not evs:
+        return []
+    evs.sort(key=lambda a: a["step"])
+    n = len(evs)
+    buckets = min(buckets, n)
+    rows = []
+    for b in range(buckets):
+        lo, hi = b * n // buckets, (b + 1) * n // buckets
+        chunk = evs[lo:hi]
+        lag = sum(
+            a["regret_s"] for a in chunk if a["component"] == "migration-lag"
+        )
+        tot = sum(a["regret_s"] for a in chunk)
+        rows.append({
+            "steps": (chunk[0]["step"], chunk[-1]["step"]),
+            "mean_regret_s": tot / len(chunk),
+            "lag_frac": (lag / tot) if tot > 0 else 0.0,
+        })
+    return rows
+
+
 def render(doc: dict) -> str:
     lines = []
     meta = doc.get("meta", {})
@@ -133,6 +237,37 @@ def render(doc: dict) -> str:
             f"variability={attr['slack_var_s']*1e3:.3f}ms  "
             f"(load share {attr['load_frac']:.1%})"
         )
+    reg = regret_summary(doc)
+    if reg is not None:
+        lines.append("fleet health (placement-regret ledger):")
+        lines.append(
+            f"  recoverable now (placement)     "
+            f"{reg['regret_placement_s']*1e3:10.3f}ms"
+        )
+        lines.append(
+            f"  recovering (migration in flight)"
+            f"{reg['regret_migration_lag_s']*1e3:10.3f}ms"
+        )
+        lines.append(
+            f"  unrecoverable by placement      "
+            f"{reg['regret_unrecoverable_s']*1e3:10.3f}ms"
+        )
+        lines.append(
+            f"  regret {reg['regret_total_s']*1e3:.3f}ms over actual "
+            f"{reg['regret_actual_s']*1e3:.3f}ms "
+            f"({reg['regret_frac']:.1%} of MoE step time)"
+        )
+        timeline = regret_timeline(doc)
+        if timeline:
+            lines.append(
+                f"  {'steps':>12s} {'mean regret':>12s} {'lag share':>10s}"
+            )
+            for r in timeline:
+                lo, hi = r["steps"]
+                lines.append(
+                    f"  {f'{lo}-{hi}':>12s} "
+                    f"{r['mean_regret_s']*1e6:10.2f}us {r['lag_frac']:9.1%}"
+                )
     return "\n".join(lines)
 
 

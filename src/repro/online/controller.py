@@ -51,6 +51,7 @@ from ..replication import (
     replicated_step_token_matrix,
 )
 from ..telemetry import Telemetry
+from ..telemetry.audit import canonical, decision_payload
 from .drift import DriftConfig, LoadDriftDetector, VariabilityDriftDetector
 from .migration import (
     MigrationConfig,
@@ -204,6 +205,36 @@ class OnlineController:
         self.bandwidth_estimator = BandwidthEstimator()
         self.bandwidth_estimator.bind_telemetry(self.telemetry)
         self.migration_measurements: list[dict] = []
+        self._audit_init()
+
+    def _audit_init(self) -> None:
+        """Emit the ``audit.init`` record: everything
+        ``benchmarks/decision_replay.py`` needs to reconstruct this
+        controller offline — configs, cost model, initial slot layouts,
+        and the believed profile's curves. One instant, only recorded
+        when event tracing is on."""
+        prof = self.profile
+        self.telemetry.instant(
+            "audit.init",
+            track="controller",
+            config=canonical(dataclasses.asdict(self.config)),
+            gem=canonical(dataclasses.asdict(self.planner.config)),
+            cost_model={
+                "expert_bytes": float(self.cost_model.expert_bytes),
+                "bandwidth": float(self.cost_model.bandwidth),
+                "base_overhead": float(self.cost_model.base_overhead),
+            },
+            num_layers=int(self.planner.num_layers),
+            num_experts=int(self.planner.num_experts),
+            num_devices=int(self.planner.num_devices),
+            replicated=bool(self.replicated),
+            slot_layouts=[lay.tolist() for lay in self.slot_layouts],
+            profile={
+                "token_counts": prof.token_counts.tolist(),
+                "latencies": prof.latencies.tolist(),
+                "tile_size": int(prof.tile_size),
+            },
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -214,6 +245,20 @@ class OnlineController:
     @property
     def migrating(self) -> bool:
         return bool(self._pending)
+
+    @property
+    def adapting(self) -> bool:
+        """True while the controller has already committed to a plan it
+        has not finished landing: migration batches in flight, a drift
+        replan deferred behind the cooldown/window, or the warm-up trace
+        still filling. The regret plane (:mod:`repro.telemetry.regret`)
+        classifies a step's regret as migration lag exactly then — a
+        replan *now* would not reach the oracle any sooner."""
+        return (
+            not self.planned
+            or bool(self._pending)
+            or self._deferred_replan_step is not None
+        )
 
     @property
     def num_slots(self) -> int:
@@ -276,6 +321,12 @@ class OnlineController:
                 "modeled_s": float(modeled_s),
             }
         )
+        # audited: the measurement mutates controller state (bandwidth
+        # estimate → cost model), so the offline replay must re-feed it
+        self.telemetry.instant(
+            "audit.measure", track="controller",
+            **self.migration_measurements[-1],
+        )
         self.telemetry.counter("migrate.model_abs_err_s").inc(
             abs(float(measured_s) - float(modeled_s))
         )
@@ -328,8 +379,33 @@ class OnlineController:
         ``observed_device_latency`` (G,), optional: measured per-device MoE
         time of this step (wall-clock on hardware; the true-fleet simulation
         here). ``None`` disables variability-drift detection for the step.
+
+        Every call is audited: an ``audit.step`` instant records the raw
+        inputs next to the serialized decision, so the offline replayer
+        can re-derive and byte-compare it from the JSONL alone.
         """
         counts = np.asarray(counts)
+        decision = self._observe_step(counts, observed_device_latency)
+        if self.telemetry.enabled:
+            self.telemetry.instant(
+                "audit.step",
+                track="controller",
+                step=self._step,
+                counts=canonical(counts),
+                observed=(
+                    None
+                    if observed_device_latency is None
+                    else canonical(np.asarray(observed_device_latency))
+                ),
+                decision=decision_payload(decision),
+            )
+        return decision
+
+    def _observe_step(
+        self,
+        counts: np.ndarray,
+        observed_device_latency: np.ndarray | None,
+    ) -> StepDecision:
         decision = StepDecision()
         for layer in range(self.planner.num_layers):
             self.planner.observe_step(layer, counts[layer])
@@ -558,6 +634,9 @@ class OnlineController:
         record = {
             "step": self._step, "reason": reason,
             "moves": schedule.total_moves, "applied": True,
+            # candidate scores: the gate's inputs ride the record so the
+            # audit plane can re-derive accept/reject from the log alone
+            "cur_score_s": float(cur_score), "tgt_score_s": float(tgt_score),
         }
         if layers is not None:
             record["staggered_layers"] = sorted(layers)
@@ -574,6 +653,7 @@ class OnlineController:
             cur_score, tgt_score, window, self.config.payback_horizon,
             schedule_cost,
         )
+        record["schedule_cost_s"] = float(schedule_cost)
         record["net_benefit_s"] = net
         if net <= 0.0:
             # the full plan failed the net-benefit gate, whether or not a

@@ -188,7 +188,11 @@ class LoadDriftDetector:
         fired = bool(level > threshold)
         if fired and self.telemetry is not None:
             self.telemetry.counter("controller.drift.load_fires").inc()
-            self.telemetry.instant("drift.load", level=level)
+            # the fire decision's full inputs ride the event (audit plane)
+            self.telemetry.instant(
+                "drift.load", level=level, threshold=float(threshold),
+                steps_since_ref=int(self._steps_since_ref),
+            )
         return fired
 
     def drifted_layers(self) -> np.ndarray:
@@ -244,7 +248,12 @@ class VariabilityDriftDetector:
         fired = bool(departure > self.config.var_threshold)
         if fired and self.telemetry is not None:
             self.telemetry.counter("controller.drift.var_fires").inc()
-            self.telemetry.instant("drift.var", departure=departure)
+            # the fire decision's full inputs ride the event (audit plane)
+            self.telemetry.instant(
+                "drift.var", departure=departure,
+                threshold=float(self.config.var_threshold),
+                steps=int(self._steps),
+            )
         return fired
 
     def drifted_devices(self) -> np.ndarray:

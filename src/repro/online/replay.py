@@ -21,7 +21,13 @@ import numpy as np
 
 from ..core.gem import GEMPlanner
 from ..core.types import GEMConfig, VariabilityProfile
-from ..telemetry import AttributionAccumulator, attribute_step
+from ..telemetry import (
+    AttributionAccumulator,
+    RegretTracker,
+    Telemetry,
+    attribute_step,
+)
+from ..telemetry.regret import record_step_metrics
 from .controller import OnlineConfig, OnlineController
 
 __all__ = [
@@ -76,6 +82,9 @@ class ReplayResult:
     # per-step straggler attribution aggregate (repro.telemetry) — priced
     # with each step's *true* profile under the live placement
     attribution: AttributionAccumulator | None = None
+    # per-step placement regret vs the hindsight oracle (keeps the full
+    # series — fig20's regret-collapse gate reads it)
+    regret: RegretTracker | None = None
 
     @property
     def total_time(self) -> float:
@@ -139,7 +148,15 @@ class ReplayResult:
             out.update(
                 (k, v) for k, v in summ.items() if isinstance(v, float)
             )
+        if self.regret is not None and self.regret.steps > 0:
+            out.update(self.regret.summary())
         return out
+
+    def regret_series(self) -> np.ndarray:
+        """(T,) per-step regret seconds (zeros when regret was off)."""
+        if self.regret is None or self.regret.series is None:
+            return np.zeros(len(self.step_latencies))
+        return np.asarray([sr.regret_s for sr in self.regret.series])
 
 
 @dataclasses.dataclass
@@ -204,27 +221,33 @@ def replay_online(
     online_config: OnlineConfig,
     *,
     expert_bytes: float,
+    telemetry: Telemetry | None = None,
 ) -> ReplayResult:
     """Run one policy through a shift scenario, closed-loop.
 
     Per step: price the step with the scenario's *true* profile under the
     live placement, hand the counts + observed per-device times to the
     controller, mirror its migration batch onto the live placement list, and
-    charge its migration cost to the step.
+    charge its migration cost to the step. A ``telemetry`` hub makes the
+    run exportable: the controller's audit events land on it and every
+    step's regret is mirrored as metrics + a timeline instant.
     """
     T, L, E = scenario.counts.shape
     G = believed_profile.num_devices
     planner = GEMPlanner(E, G, L, gem_config)
     planner.set_profile(believed_profile)
+    tel = telemetry if telemetry is not None else Telemetry(enabled=False)
     controller = OnlineController(
         planner,
         online_config.migration.cost_model(expert_bytes),
         online_config,
+        telemetry=tel,
     )
     step_lat = np.zeros(T)
     mig_cost = np.zeros(T)
     moves = np.zeros(T, dtype=np.int64)
     attribution = AttributionAccumulator(G)
+    regret = RegretTracker(E, G, keep_series=True)
     for t in range(T):
         counts = scenario.counts[t]
         true_profile = scenario.true_profile_at(t)
@@ -236,6 +259,20 @@ def replay_online(
         attribution.observe(
             attribute_step(controller.token_matrix(counts), true_profile)
         )
+        # regret reads the pre-decision state (like the engine): the MoE
+        # cost actually paid this step vs the hindsight oracle, classified
+        # by whether the controller had already committed to a plan
+        sr = regret.observe(
+            counts,
+            true_profile,
+            float(mat.max(axis=1).sum()),
+            placements=(
+                None if controller.replicated
+                else controller.current_placements
+            ),
+            lagging=controller.adapting,
+        )
+        record_step_metrics(tel, sr, t)
         decision = controller.observe_step(counts, observed)
         if decision.migration_step is not None:
             lat += decision.migration_cost
@@ -250,4 +287,5 @@ def replay_online(
         replans=controller.replans,
         total_migration_cost=controller.total_migration_cost,
         attribution=attribution,
+        regret=regret,
     )

@@ -85,7 +85,13 @@ from ..replication import (
     replicated_step_token_matrix,
 )
 from ..sharding.policy import ShardingPolicy
-from ..telemetry import AttributionAccumulator, Telemetry, attribute_step
+from ..telemetry import (
+    AttributionAccumulator,
+    RegretTracker,
+    Telemetry,
+    attribute_step,
+)
+from ..telemetry.regret import record_step_metrics
 from .arrivals import RequestSpec
 from .kv_cache import (
     PagedKVConfig,
@@ -101,7 +107,8 @@ from .slo import slo_report
 __all__ = ["EngineConfig", "ServingEngine"]
 
 # fixed histogram buckets for per-step straggler slack (seconds) —
-# deterministic boundaries so CI can pin exported snapshots
+# deterministic boundaries so CI can pin exported snapshots (per-step
+# regret rides the same decade ladder — telemetry/regret.py)
 _ATTR_SLACK_BOUNDS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0)
 
 
@@ -161,6 +168,11 @@ class EngineConfig:
     prefill_chunk: int = 0
     prefill_time_per_token: float = 0.0  # simulated prefill s/token
     admit_lookahead: int = 8  # scheduler head-of-line lookahead window
+    # optional TTFT service target (sim-seconds). When set, admission
+    # records each request's remaining slack (target minus queue age) in
+    # the sched.ttft_slack_s histogram and counts already-late admissions
+    # in sched.slo_at_risk. None leaves only the queue-age histogram.
+    ttft_slo_s: float | None = None
     # per-device HBM budget shared by the paged KV pool and the expert
     # replica pool; required when replication.auto_slots derives
     # replica_slots from what the KV pool leaves free
@@ -287,10 +299,14 @@ class ServingEngine:
         self.telemetry = (
             telemetry if telemetry is not None else Telemetry(enabled=False)
         )
+        # the clock must be readable during __init__ itself: the online
+        # controller's audit.init instant stamps it at construction
+        self.sim_time = 0.0
         self.telemetry.set_clock(lambda: self.sim_time)
         self.scheduler = Scheduler(
             engine_config.max_batch,
             admit_lookahead=engine_config.admit_lookahead,
+            ttft_slo_s=engine_config.ttft_slo_s,
         )
         self.scheduler.telemetry = self.telemetry
         self.step_count = 0
@@ -314,6 +330,8 @@ class ServingEngine:
         # per-step straggler attribution (load vs variability split) —
         # populated on MoE engines with a profile; see latency_report()
         self.attribution: AttributionAccumulator | None = None
+        # per-step placement regret vs the hindsight oracle — same gating
+        self.regret: RegretTracker | None = None
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
@@ -353,6 +371,9 @@ class ServingEngine:
                 engine_config.gem,
             )
             self.attribution = AttributionAccumulator(nd)
+            self.regret = RegretTracker(
+                config.num_experts * config.expert_tp, nd
+            )
             if profile is not None:
                 self.planner.set_profile(profile)
             self.placements = identity_placement(config, config.num_layers)
@@ -416,9 +437,9 @@ class ServingEngine:
                     telemetry=self.telemetry,
                 )
 
-        # simulated latency accounting
+        # simulated latency accounting (sim_time itself initialized above,
+        # before the telemetry clock bind)
         self.sim_step_latencies: list[float] = []
-        self.sim_time = 0.0
 
         # migration data-plane accounting (one record per applied batch —
         # the cost model's charge next to what the executed collective
@@ -932,6 +953,36 @@ class ServingEngine:
                     straggler=(g == straggler),
                 )
 
+    def _observe_regret(
+        self, counts_virt: np.ndarray, cost_mx: np.ndarray | None
+    ) -> None:
+        """Fold this step into the placement-regret aggregate
+        (repro.telemetry.regret) + registry metrics. Host-side numpy only
+        — like attribution, never touches tokens."""
+        prof = self._sim_profile
+        if prof is None or cost_mx is None or self.regret is None:
+            return
+        # migration-lag when the control plane has already committed but
+        # not landed: controller mid-adaptation, or the one-shot plan not
+        # yet applied — a replan now could not reach the oracle sooner
+        lagging = (
+            self.controller.adapting
+            if self.controller is not None
+            else not self.placement_applied
+        )
+        sr = self.regret.observe(
+            counts_virt,
+            prof,
+            float(cost_mx.max(axis=1).sum()),
+            placements=(
+                None
+                if self.current_rplacements is not None
+                else self.current_placements
+            ),
+            lagging=lagging,
+        )
+        record_step_metrics(self.telemetry, sr, self.step_count)
+
     def _maybe_replan(self) -> None:
         if (
             self.planner is None
@@ -975,6 +1026,25 @@ class ServingEngine:
             moves = sum(
                 replica_fetch_rows(cur, new)
                 for cur, new in zip(self.current_rplacements, rplacements)
+            )
+            # audited: the retarget decision's inputs (live + target
+            # layouts) ride the event so decision_replay can re-derive
+            # the priced move count from the log alone
+            self.telemetry.instant(
+                "audit.retarget",
+                track="controller",
+                step=self.step_count,
+                num_experts=int(self.planner.num_experts),
+                num_devices=int(self.profile.num_devices),
+                slot_layouts=[
+                    rp.slot_layout().tolist()
+                    for rp in self.current_rplacements
+                ],
+                target_layouts=[
+                    rp.slot_layout().tolist() for rp in rplacements
+                ],
+                moves=int(moves),
+                modeled_s=float(self._cost_model.cost(moves)),
             )
             stats = self._retarget_replicated_pool(rplacements)
             swap_cost = self._record_migration(
@@ -1222,6 +1292,7 @@ class ServingEngine:
             if cost_mx is not None:
                 sim_latency += float(cost_mx.max(axis=1).sum())
             self._observe_attribution(counts_virt)
+            self._observe_regret(counts_virt, cost_mx)
             tel.counter("dispatch.dropped_tokens").inc(
                 int(np.asarray(moe_aux.dropped_tokens).sum())
             )
@@ -1350,4 +1421,6 @@ class ServingEngine:
             out.update(
                 (k, v) for k, v in summ.items() if isinstance(v, float)
             )
+        if self.regret is not None and self.regret.steps > 0:
+            out.update(self.regret.summary())
         return out

@@ -32,6 +32,12 @@ import numpy as np
 
 __all__ = ["Request", "Scheduler"]
 
+# decade ladders for the admission-time instruments (upper bucket edges,
+# seconds). Queue age is non-negative sim-time; TTFT slack is signed —
+# negative buckets count admissions that already missed the target.
+QUEUE_AGE_BOUNDS = (1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0)
+TTFT_SLACK_BOUNDS = (-1.0, -1e-1, -1e-2, 0.0, 1e-2, 1e-1, 1.0, 10.0)
+
 
 @dataclasses.dataclass
 class Request:
@@ -68,11 +74,15 @@ class Request:
 
 class Scheduler:
     def __init__(self, max_batch: int, *, prefill_token_budget: int = 8192,
-                 slow_device_factor: float = 1.0, admit_lookahead: int = 8):
+                 slow_device_factor: float = 1.0, admit_lookahead: int = 8,
+                 ttft_slo_s: float | None = None):
         self.max_batch = max_batch
         self.prefill_token_budget = prefill_token_budget
         self.slow_device_factor = slow_device_factor  # <1 ⇒ tighter budget
         self.admit_lookahead = admit_lookahead
+        # optional TTFT target (sim-seconds): admission records each
+        # request's remaining slack against it (see admit())
+        self.ttft_slo_s = None if ttft_slo_s is None else float(ttft_slo_s)
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot → request
         # optional repro.telemetry.Telemetry hub (the engine binds its
@@ -141,9 +151,37 @@ class Scheduler:
             req.slot = slot
             self.active[slot] = req
             admissions.append((slot, req))
+            if self.telemetry is not None:
+                self._record_admission(req)
         if admissions and self.telemetry is not None:
             self.telemetry.counter("sched.admitted").inc(len(admissions))
         return admissions
+
+    def _record_admission(self, req: Request) -> None:
+        """Admission-time queue-age / TTFT-slack instruments.
+
+        Queue age is hub-clock *now* (the engine binds its simulated
+        time) minus the request's arrival time. When a TTFT target is
+        configured, the remaining slack ``ttft_slo_s - age`` is recorded
+        per request — negative slack means the request already aged past
+        its target while queued, before prefill even starts; those
+        admissions also bump ``sched.slo_at_risk``.
+        """
+        tel = self.telemetry
+        age = max(0.0, float(tel.now()) - float(req.arrival_time))
+        tel.histogram("sched.queue_age_s", QUEUE_AGE_BOUNDS).observe(age)
+        slack = None
+        if self.ttft_slo_s is not None:
+            slack = self.ttft_slo_s - age
+            tel.histogram(
+                "sched.ttft_slack_s", TTFT_SLACK_BOUNDS
+            ).observe(slack)
+            if slack <= 0.0:
+                tel.counter("sched.slo_at_risk").inc()
+        args = {"uid": int(req.uid), "queue_age_s": age}
+        if slack is not None:
+            args["ttft_slack_s"] = slack
+        tel.instant("sched.admit", track="sched", **args)
 
     def release(self, slot: int) -> Request:
         return self.active.pop(slot)

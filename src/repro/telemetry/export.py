@@ -18,7 +18,9 @@ row per fleet device.
 from __future__ import annotations
 
 import json
+import math
 
+from .audit import validate_audit_event
 from .spans import Telemetry
 
 __all__ = [
@@ -49,15 +51,38 @@ def write_jsonl(tel: Telemetry, path: str, **meta) -> int:
     return len(lines)
 
 
-def read_jsonl(path: str) -> dict:
+def read_jsonl(path: str, *, recover_tail: bool = False) -> dict:
     """Parse + validate a v1 event log.
 
     Returns ``{"meta": header-extras, "events": [...], "metrics":
     snapshot}``. Raises ``ValueError`` on schema mismatch or malformed
     structure — this is the validator the CI telemetry gate runs.
+    Structural checks beyond the original layout:
+
+    - spans must carry a finite non-negative ``dur`` (an out-of-order
+      span close would serialize as a negative duration) and every event
+      a finite ``ts``;
+    - ``audit.*`` events must carry the full input set their offline
+      replay needs (:func:`repro.telemetry.audit.validate_audit_event`).
+
+    ``recover_tail=True`` handles crash-consistent logs deterministically
+    instead of rejecting them: a partially-written *final* line is
+    dropped and a missing metrics trailer yields ``metrics: None``; the
+    result then carries ``"recovered": True``. Corruption anywhere but
+    the tail still raises — a torn write only ever loses the tail.
     """
     with open(path) as f:
-        rows = [json.loads(line) for line in f if line.strip()]
+        raw = [line for line in f if line.strip()]
+    rows = []
+    tail_dropped = False
+    for i, line in enumerate(raw):
+        try:
+            rows.append(json.loads(line))
+        except ValueError:
+            if recover_tail and i == len(raw) - 1:
+                tail_dropped = True  # torn final write: drop it
+                break
+            raise ValueError(f"telemetry jsonl: line {i + 1} is not JSON")
     if not rows or rows[0].get("kind") != "header":
         raise ValueError("telemetry jsonl: missing header line")
     header = rows[0]
@@ -65,24 +90,48 @@ def read_jsonl(path: str) -> dict:
         raise ValueError(
             f"telemetry jsonl: schema {header.get('schema')!r} != {SCHEMA!r}"
         )
-    if rows[-1].get("kind") != "metrics":
+    snapshot = None
+    if rows[-1].get("kind") == "metrics":
+        snapshot = rows[-1].get("snapshot")
+        if not isinstance(snapshot, dict) or not {
+            "counters", "gauges", "histograms"
+        } <= set(snapshot):
+            raise ValueError("telemetry jsonl: malformed metrics snapshot")
+        events = rows[1:-1]
+    elif recover_tail:
+        events = rows[1:]  # trailer lost with the tail
+    else:
         raise ValueError("telemetry jsonl: missing metrics trailer")
-    events = rows[1:-1]
     for i, ev in enumerate(events):
         kind = ev.get("kind")
         if kind not in _EVENT_KINDS:
             raise ValueError(f"telemetry jsonl: line {i + 2} bad kind {kind!r}")
-        if not isinstance(ev.get("name"), str) or "ts" not in ev:
+        name = ev.get("name")
+        if not isinstance(name, str) or "ts" not in ev:
             raise ValueError(f"telemetry jsonl: line {i + 2} missing name/ts")
-        if kind == "span" and "dur" not in ev:
-            raise ValueError(f"telemetry jsonl: line {i + 2} span missing dur")
-    snapshot = rows[-1].get("snapshot")
-    if not isinstance(snapshot, dict) or not {
-        "counters", "gauges", "histograms"
-    } <= set(snapshot):
-        raise ValueError("telemetry jsonl: malformed metrics snapshot")
+        if not math.isfinite(float(ev["ts"])):
+            raise ValueError(f"telemetry jsonl: line {i + 2} non-finite ts")
+        if kind == "span":
+            if "dur" not in ev:
+                raise ValueError(
+                    f"telemetry jsonl: line {i + 2} span missing dur"
+                )
+            dur = float(ev["dur"])
+            if not math.isfinite(dur) or dur < 0.0:
+                raise ValueError(
+                    f"telemetry jsonl: line {i + 2} span closed out of "
+                    f"order (dur={ev['dur']!r})"
+                )
+        if name.startswith("audit."):
+            try:
+                validate_audit_event(name, ev.get("args"))
+            except ValueError as e:
+                raise ValueError(f"telemetry jsonl: line {i + 2}: {e}")
     meta = {k: v for k, v in header.items() if k not in ("kind", "schema")}
-    return {"meta": meta, "events": events, "metrics": snapshot}
+    out = {"meta": meta, "events": events, "metrics": snapshot}
+    if recover_tail:
+        out["recovered"] = tail_dropped or snapshot is None
+    return out
 
 
 def _track_order(events: list[dict]) -> list[str]:

@@ -22,12 +22,15 @@ from repro.serving import EngineConfig, PagedKVPool, Request, Scheduler, Serving
 from repro.serving.slo import slo_report
 from repro.sharding import host_policy
 from repro.telemetry import (
+    NOISE_FLOOR,
     AttributionAccumulator,
     Registry,
+    RegretTracker,
     Telemetry,
     attribute_step,
     read_jsonl,
     to_chrome_trace,
+    validate_audit_event,
     write_chrome_trace,
     write_jsonl,
 )
@@ -458,6 +461,302 @@ def test_engine_step_counters_and_attribution(engine_pair):
     rep = eng.latency_report()
     assert rep["attr_slack_total_s"] == pytest.approx(total)
     assert all(isinstance(v, float) for v in rep.values())
+
+
+# ---------------------------------------------------------------------------
+# placement regret (hindsight oracle)
+# ---------------------------------------------------------------------------
+
+def _actual_cost(counts, prof, placements):
+    """Σ_l max_g C_g(n_g) under the live placements — what the run paid."""
+    loads = np.stack([
+        np.bincount(p.expert_to_device, weights=c, minlength=4)
+        for c, p in zip(counts, placements)
+    ])
+    return float(prof.cost_all(loads).max(axis=1).sum())
+
+
+def test_regret_nonnegative_and_components_sum_exactly():
+    from repro.core import linear_placement
+
+    prof = _hetero_profile([1.0, 0.7, 1.4, 0.9])
+    tr = RegretTracker(8, 4, keep_series=True)
+    placements = [linear_placement(8, 4) for _ in range(2)]
+    rng = np.random.default_rng(0)
+    for s in range(6):
+        counts = rng.integers(0, 40, size=(2, 8))
+        actual = _actual_cost(counts, prof, placements)
+        sr = tr.observe(counts, prof, actual,
+                        placements=placements, lagging=s < 2)
+        assert sr.regret_s >= -NOISE_FLOOR
+        assert sr.oracle_s <= sr.actual_s
+        assert sr.lower_bound_s <= sr.oracle_s + NOISE_FLOOR
+        assert sr.component == ("migration-lag" if s < 2 else "placement")
+    summ = tr.summary()
+    assert summ["regret_steps"] == 6.0
+    # exact, not approximate: every step lands in exactly one component
+    assert summ["regret_placement_s"] + summ["regret_migration_lag_s"] == \
+        summ["regret_total_s"]
+    assert summ["regret_total_s"] == pytest.approx(
+        summ["regret_actual_s"] - summ["regret_oracle_s"]
+    )
+    assert summ["regret_unrecoverable_s"] >= -NOISE_FLOOR
+
+
+def test_regret_zero_on_uniform_fleet_balanced_load():
+    from repro.core import linear_placement
+
+    prof = _hetero_profile([1.0, 1.0, 1.0, 1.0])
+    tr = RegretTracker(8, 4)
+    placements = [linear_placement(8, 4)]
+    counts = np.full((1, 8), 16)  # 32 tokens/device everywhere
+    actual = _actual_cost(counts, prof, placements)
+    sr = tr.observe(counts, prof, actual, placements=placements)
+    # nothing to recover: actual == oracle == the placement-free floor
+    assert sr.regret_s == pytest.approx(0.0, abs=NOISE_FLOOR)
+    assert sr.unrecoverable_s == pytest.approx(0.0, abs=NOISE_FLOOR)
+
+
+def test_regret_oracle_recovers_hot_expert_misplacement():
+    from repro.core import linear_placement
+
+    # fast device 0 idle-ish, slow device 3 carries the hot expert: a
+    # hindsight re-search must find a strictly better assignment
+    prof = _hetero_profile([1.0, 1.0, 1.0, 0.25])
+    placements = [linear_placement(8, 4)]  # experts 6,7 → device 3
+    counts = np.zeros((1, 8), dtype=np.int64)
+    counts[0, 7] = 48  # hot expert pinned to the slow device
+    counts[0, 0] = 4
+    tr = RegretTracker(8, 4)
+    actual = _actual_cost(counts, prof, placements)
+    sr = tr.observe(counts, prof, actual, placements=placements)
+    assert sr.regret_s > 0.0
+    assert sr.oracle_s < sr.actual_s
+
+
+def test_record_step_metrics_counters_and_instant():
+    from repro.telemetry.regret import StepRegret, record_step_metrics
+
+    tel = Telemetry()
+    sr = StepRegret(actual_s=3e-3, oracle_s=2e-3, lower_bound_s=1.5e-3,
+                    component="migration-lag")
+    record_step_metrics(tel, sr, step=7)
+    assert tel.counter("regret.total_s").value == pytest.approx(1e-3)
+    assert tel.counter("regret.migration_lag_s").value == pytest.approx(1e-3)
+    assert tel.counter("regret.placement_s").value == 0.0
+    assert tel.registry.histogram("regret.step_s").total == 1
+    (ev,) = [e for e in tel.events if e["name"] == "regret"]
+    assert ev["args"]["step"] == 7
+    assert ev["args"]["component"] == "migration-lag"
+    assert ev["args"]["regret_s"] == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# decision audit + offline replay
+# ---------------------------------------------------------------------------
+
+def _audited_controller_run(tel):
+    """A tiny online-controller run with a mid-run load shift: warm-up,
+    plan, drift fire, deferred replan, budgeted migration — every decision
+    path the audit plane logs."""
+    from repro.core import GEMConfig, MigrationCostModel
+    from repro.core.gem import GEMPlanner
+    from repro.online import MigrationConfig, OnlineConfig, OnlineController
+
+    prof = _hetero_profile([1.0, 0.7, 1.4, 0.9])
+    planner = GEMPlanner(8, 4, 2, GEMConfig(trace_length=4, num_restarts=2))
+    planner.set_profile(prof)
+    ctrl = OnlineController(
+        planner,
+        MigrationCostModel(expert_bytes=1e6, base_overhead=0.0),
+        OnlineConfig(
+            drift=DriftConfig(min_steps=2, threshold=0.5),
+            migration=MigrationConfig(max_moves_per_step=2),
+            replan_cooldown=2, payback_horizon=100_000,
+        ),
+        telemetry=tel,
+    )
+    rng = np.random.default_rng(0)
+    for s in range(24):
+        if s < 12:
+            counts = rng.integers(8, 16, size=(2, 8))
+        else:  # shift: one expert goes hot in every layer
+            counts = rng.integers(0, 4, size=(2, 8))
+            counts[:, 5] += 90
+        observed = None if s % 3 else prof.cost_all(
+            np.full((1, 4), 24.0)
+        )[0] * (1.0 + 0.01 * s)
+        ctrl.observe_step(counts, observed)
+    ctrl.observe_migration_measurement(2e6, 1e-4, modeled_s=9e-5, step=20)
+    return ctrl
+
+
+def test_decision_replay_is_byte_exact(tmp_path):
+    from benchmarks.decision_replay import replay_log
+
+    tel = Telemetry()
+    ctrl = _audited_controller_run(tel)
+    assert ctrl.replans, "run never replanned — the test lost its teeth"
+    path = str(tmp_path / "audit.jsonl")
+    write_jsonl(tel, path, figure="test", seed=0)
+    res = replay_log(path)
+    assert res["mismatches"] == []
+    assert res["controllers"] == 1
+    assert res["steps"] == 24
+    assert res["measures"] == 1
+    assert res["replans_logged"] == len(ctrl.replans)
+    assert res["replans_replayed"] == res["replans_logged"]
+
+
+def test_decision_replay_detects_tampered_decision(tmp_path):
+    from benchmarks.decision_replay import replay_log
+
+    tel = Telemetry()
+    _audited_controller_run(tel)
+    path = str(tmp_path / "tampered.jsonl")
+    write_jsonl(tel, path, figure="test", seed=0)
+    lines = open(path).read().splitlines()
+    for i, line in enumerate(lines):
+        row = json.loads(line)
+        if row.get("name") == "audit.step":
+            row["args"]["decision"]["migration_cost"] += 1.0
+            lines[i] = json.dumps(row, sort_keys=True)
+            break
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    res = replay_log(path)
+    assert any(m["kind"] == "decision" for m in res["mismatches"])
+
+
+def test_validate_audit_event_contract():
+    validate_audit_event(
+        "audit.measure",
+        {"step": 1, "payload_bytes": 1.0, "measured_s": 1e-4,
+         "modeled_s": 1e-4},
+    )
+    with pytest.raises(ValueError, match="missing args"):
+        validate_audit_event("audit.measure", {"step": 1})
+    with pytest.raises(ValueError, match="unknown audit event"):
+        validate_audit_event("audit.bogus", {})
+    with pytest.raises(ValueError, match="no args dict"):
+        validate_audit_event("audit.step", None)
+
+
+# ---------------------------------------------------------------------------
+# read_jsonl robustness (crash-consistent tails, bad spans, bad audits)
+# ---------------------------------------------------------------------------
+
+def test_read_jsonl_recover_tail_torn_line(tmp_path):
+    tel = _populated_hub()
+    path = str(tmp_path / "torn.jsonl")
+    write_jsonl(tel, path, figure="test")
+    whole = open(path).read().splitlines()
+    # crash mid-write: trailer gone, final event line torn in half
+    torn = "\n".join(whole[:-2] + [whole[-2][: len(whole[-2]) // 2]]) + "\n"
+    with open(path, "w") as f:
+        f.write(torn)
+    with pytest.raises(ValueError):
+        read_jsonl(path)
+    doc = read_jsonl(path, recover_tail=True)
+    assert doc["recovered"] is True
+    assert doc["metrics"] is None
+    assert doc["events"] == tel.events[:-1]  # torn event dropped
+    # a healthy log is not marked recovered
+    write_jsonl(tel, path, figure="test")
+    assert "recovered" not in read_jsonl(path)
+    assert read_jsonl(path, recover_tail=True)["recovered"] is False
+
+
+def test_read_jsonl_recover_tail_rejects_mid_file_corruption(tmp_path):
+    tel = _populated_hub()
+    path = str(tmp_path / "mid.jsonl")
+    write_jsonl(tel, path, figure="test")
+    lines = open(path).read().splitlines()
+    lines[2] = lines[2][:10]  # torn *interior* line: not a tail crash
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="not JSON"):
+        read_jsonl(path, recover_tail=True)
+
+
+def test_read_jsonl_rejects_out_of_order_span(tmp_path):
+    p = tmp_path / "span.jsonl"
+    trailer = ('{"kind": "metrics", "snapshot": '
+               '{"counters": {}, "gauges": {}, "histograms": {}}}')
+    p.write_text(
+        '{"kind": "header", "schema": "repro.telemetry/v1"}\n'
+        '{"kind": "span", "name": "step", "track": "engine", '
+        '"ts": 1.0, "dur": -0.5}\n' + trailer + "\n"
+    )
+    with pytest.raises(ValueError, match="out of order"):
+        read_jsonl(str(p))
+    p.write_text(
+        '{"kind": "header", "schema": "repro.telemetry/v1"}\n'
+        '{"kind": "instant", "name": "x", "track": "engine", "ts": NaN}\n'
+        + trailer + "\n"
+    )
+    with pytest.raises(ValueError, match="non-finite ts"):
+        read_jsonl(str(p))
+
+
+def test_read_jsonl_rejects_malformed_audit_record(tmp_path):
+    p = tmp_path / "audit.jsonl"
+    trailer = ('{"kind": "metrics", "snapshot": '
+               '{"counters": {}, "gauges": {}, "histograms": {}}}')
+    p.write_text(
+        '{"kind": "header", "schema": "repro.telemetry/v1"}\n'
+        '{"kind": "instant", "name": "audit.step", "track": "controller", '
+        '"ts": 0.0, "args": {"step": 1}}\n' + trailer + "\n"
+    )
+    with pytest.raises(ValueError, match="missing args"):
+        read_jsonl(str(p))
+
+
+# ---------------------------------------------------------------------------
+# admission-time queue-age / TTFT-slack instruments
+# ---------------------------------------------------------------------------
+
+def test_scheduler_queue_age_and_ttft_slack():
+    t = {"now": 0.0}
+    tel = Telemetry(clock=lambda: t["now"])
+    sched = Scheduler(1, ttft_slo_s=0.05)
+    sched.telemetry = tel
+    a = Request(0, np.arange(4, dtype=np.int32), 4)
+    b = Request(1, np.arange(4, dtype=np.int32), 4)
+    a.arrival_time = b.arrival_time = 0.0
+    sched.submit(a)
+    sched.submit(b)
+    t["now"] = 0.01
+    (admitted_a,) = sched.admit()  # one slot: only the head goes
+    t["now"] = 0.2
+    sched.release(admitted_a[0])
+    (admitted_b,) = sched.admit()
+    assert admitted_b[1] is b
+    age = tel.registry.histogram("sched.queue_age_s")
+    slack = tel.registry.histogram("sched.ttft_slack_s")
+    assert age.total == 2 and slack.total == 2
+    assert age.sum == pytest.approx(0.01 + 0.2)
+    # first admission had 0.04s of slack; the second was 0.15s late
+    assert slack.sum == pytest.approx(0.04 - 0.15)
+    assert tel.counter("sched.slo_at_risk").value == 1.0
+    evs = [e for e in tel.events if e["name"] == "sched.admit"]
+    assert [e["args"]["uid"] for e in evs] == [0, 1]
+    assert evs[1]["args"]["ttft_slack_s"] == pytest.approx(-0.15)
+    assert evs[1]["track"] == "sched"
+
+
+def test_scheduler_queue_age_without_slo_target():
+    tel = Telemetry()
+    sched = Scheduler(1)  # no TTFT target configured
+    sched.telemetry = tel
+    sched.submit(Request(0, np.arange(4, dtype=np.int32), 4))
+    sched.admit()
+    assert tel.registry.histogram("sched.queue_age_s").total == 1
+    with pytest.raises(KeyError):  # slack instrument never declared
+        tel.registry.histogram("sched.ttft_slack_s")
+    assert tel.counter("sched.slo_at_risk").value == 0.0
+    (ev,) = [e for e in tel.events if e["name"] == "sched.admit"]
+    assert "ttft_slack_s" not in ev["args"]
 
 
 def test_engine_trace_exports_round_trip(engine_pair, tmp_path):
