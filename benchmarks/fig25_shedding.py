@@ -1,0 +1,515 @@
+"""Fig. 25 (beyond-paper): capacity-overflow token shedding, gated.
+
+PR 10 breaks the per-layer lock-step barrier's worst failure mode: when a
+slot's capacity clamp fires, overflow assignments are no longer dropped
+but re-scattered — deterministically, in the same stable-sort rank order
+the clamp used — onto the free capacity rows of the *other live copies of
+the same virtual expert* (``build_dispatch``'s second pass). A shed-vs-
+wait gate prices each layer online: believed per-device costs scaled by
+the variability detector's live observed/predicted ratios, against the
+interconnect transfer the re-scatter pays (cross-device rows only).
+
+The profitable regime is **stale beliefs** (fig20's scenario): a
+believed-fast device slows mid-run, its speed-proportional replica share
+keeps overloading it in real time, while its slower-believed co-copies
+hold capacity slack. Shedding bridges the window until the detector
+fires and the replan re-shares — compose, don't compete. Under *correct*
+beliefs the gate correctly refuses: free rows then live only on slow
+devices and moving work there raises the straggler.
+
+Two parts, both bit-deterministic at ``--seed 0``; **exits non-zero**
+unless every gate passes:
+
+  Part A — analytic bursty replay (8 devices, replicated GEM placements
+  planned on the *believed* profile, charged on the *true* one):
+    1. **GEM+shed beats placement-only GEM** on the straggler-bound
+       bursty mix: summed straggler latency strictly drops;
+    2. the gate actually fired (sheds > 0) and regretted layer-steps
+       (adjusted+transfer > legacy in hindsight) stay ≤ 20% of fired.
+
+  Part B — live serving engine (tied router logits → deterministic hot
+  experts; believed-fastest device slows mid-run via the injected true
+  profile):
+    3. **no-drop regime** — once a live replica slot with free capacity
+       exists and the gate is on, ``moe.dropped_tokens == 0`` on every
+       subsequent fully-enabled step (and OFF drops > ON drops > 0 side);
+    4. **shed-off parity** — with the gate suppressed the engine's token
+       stream is bit-identical to ``ShedConfig(enabled=False)``: a shed
+       decision that never fires changes nothing;
+    5. **trace flatness** — shed decisions flip a scanned operand, never
+       recompile: ``jit_trace_counts["decode"] == 1`` under scan;
+    6. **determinism** — the shed-on run repeated yields byte-identical
+       token streams and shed counters;
+    7. **e2e** — shed-on simulated fleet time ≤ shed-off.
+
+Wall times on this CPU container are not TPU latency claims; the figures
+of merit are the latency *model* deltas and the determinism/trace
+contracts. CI's ``shed-smoke`` entry invokes ``--smoke``.
+
+    PYTHONPATH=src python -m benchmarks.fig25_shedding [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+
+import numpy as np
+
+from .common import add_seed_arg, seeded, write_bench_summary
+
+MODEL = "mixtral-8x7b"
+
+# ---------------------------------------------------------------- part A
+A_DEVICES = 8
+A_EXPERTS = 8
+A_TOPK = 2
+A_TOKENS = 128
+A_LAYERS = 4
+A_FIT_STEPS = 16
+A_CAPACITY_FACTOR = 2.0
+A_TOKEN_BYTES = 2.0 * 4096 * 2  # activation+gradient-free decode row, fp16
+A_BANDWIDTH = 50e9
+A_BELIEVED = (0.55, 0.65, 0.8, 0.9, 1.0, 1.1, 1.25, 1.4)
+A_SLOWED_DEVICE = 7  # believed-fastest
+A_SLOWED_SPEED = 0.6  # ~2.3x slower than believed
+A_EWMA_ALPHA = 0.2  # mirrors DriftConfig.var_alpha's detector smoothing
+
+
+def _profile(speeds, *, num_devices: int, max_tokens: int, seed: int):
+    from repro.core import DeviceFleet, profile_fleet, simulator_measure_fn
+
+    fleet = DeviceFleet.from_speeds(
+        np.asarray(speeds, dtype=np.float64), tile=8, tile_time=40e-6,
+        base=10e-6,
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet, seed=seed), num_devices,
+        max_tokens=max_tokens, tile=8, repeats=10,
+    ).profile
+
+
+def run_analytic(*, smoke: bool, seed: int) -> dict:
+    """Part A: replicated GEM placements planned on stale beliefs, then a
+    bursty straggler-bound trace replayed with and without the shed pass.
+
+    The believed-fastest device is secretly slow for the whole eval
+    window; the plan (and its speed-proportional replica shares) never
+    learns this — exactly the window between a real slowdown and the
+    replan that repairs it. The gate prices with the believed profile
+    scaled by an EWMA of observed/predicted per-device cost ratios (the
+    same signal ``OnlineController.shed_decisions`` reads from the live
+    variability detector), while the fleet is *charged* the true cost.
+    """
+    from repro.core import GEMConfig, WorkloadSpec, generate_layer_traces
+    from repro.replication import (
+        ReplicationConfig,
+        plan_replicated,
+        shed_gate_decisions,
+        simulate_shed_pass,
+    )
+
+    G, E, K, N, L = A_DEVICES, A_EXPERTS, A_TOPK, A_TOKENS, A_LAYERS
+    eval_steps = 48 if smoke else 96
+    believed_speeds = np.asarray(A_BELIEVED, dtype=np.float64)
+    true_speeds = believed_speeds.copy()
+    true_speeds[A_SLOWED_DEVICE] = A_SLOWED_SPEED
+    bp = _profile(believed_speeds, num_devices=G, max_tokens=N * K,
+                  seed=seed)
+    tp = _profile(true_speeds, num_devices=G, max_tokens=N * K, seed=seed)
+
+    fit_spec = WorkloadSpec(
+        num_experts=E, top_k=K, tokens_per_step=N,
+        num_consistent=1, consistent_share=0.35,
+        num_temporal_groups=1, temporal_group_size=2,
+        temporal_burst_share=0.25, background="lognormal", skew_sigma=0.5,
+    )
+    eval_spec = dataclasses.replace(fit_spec, temporal_burst_share=0.7)
+    fit = generate_layer_traces(
+        fit_spec, L, A_FIT_STEPS, seed=seeded(1, seed), identity_seed=11
+    )
+    ev = generate_layer_traces(
+        eval_spec, L, eval_steps, seed=seeded(2, seed), identity_seed=11
+    )
+    rcfg = ReplicationConfig(
+        replica_slots=2, exclude_speed_below=0.0, consistent_only=False
+    )
+    gcfg = GEMConfig(trace_length=A_FIT_STEPS, num_restarts=8)
+    # the stale plan: shares are speed-proportional to *believed* speeds
+    rps = [plan_replicated(lt, bp, gcfg, rcfg).placement for lt in fit]
+    S = rps[0].num_slots
+    C = max(math.ceil(N * K / E * A_CAPACITY_FACTOR * E / S), 1)
+
+    lat_off = lat_on = 0.0
+    shed_tot = drop_off = drop_on = fired = regret = 0
+    enables = np.zeros(L, dtype=np.int32)
+    ratios = np.ones(G)
+    for t in range(eval_steps):
+        counts = np.stack([ev[layer].counts[t] for layer in range(L)])
+        # detector emulation: EWMA of observed/predicted device cost
+        tok0 = counts[0].astype(np.float64) @ rps[0].share_matrix()
+        obs = tp.cost_all(tok0[None, :])[0]
+        pred = bp.cost_all(tok0[None, :])[0]
+        ratios = (1.0 - A_EWMA_ALPHA) * ratios + A_EWMA_ALPHA * (
+            obs / np.maximum(pred, 1e-12)
+        )
+        for layer, rp in enumerate(rps):
+            tokens_g = counts[layer].astype(np.float64) @ rp.share_matrix()
+            legacy = float(tp.cost_all(tokens_g[None, :])[0].max())
+            lat_off += legacy
+            sim = simulate_shed_pass(counts[layer], rp, C)
+            drop_off += sim["overflow"]  # off: every overflow row drops
+            if enables[layer] and sim["shed"] > 0:
+                dev = sim["delta"].reshape(G, rp.slots_per_device).sum(-1)
+                adj = float(
+                    tp.cost_all(
+                        np.maximum(tokens_g + dev, 0.0)[None, :]
+                    )[0].max()
+                )
+                tr = sim["shed"] * A_TOKEN_BYTES / A_BANDWIDTH
+                lat_on += adj + tr
+                shed_tot += sim["shed"]
+                drop_on += sim["dropped"]
+                fired += 1
+                regret += int(adj + tr > legacy)
+            else:
+                lat_on += legacy
+                drop_on += sim["overflow"]
+        # one step behind, with *believed* costs × detector ratios — the
+        # exact pricing OnlineController.shed_decisions performs live
+        enables = shed_gate_decisions(
+            counts, rps, bp, C, bandwidth=A_BANDWIDTH,
+            token_bytes=A_TOKEN_BYTES, min_overflow=4, hysteresis=1.1,
+            device_scale=ratios,
+        )
+    return {
+        "eval_steps": eval_steps,
+        "num_slots": int(S),
+        "capacity": int(C),
+        "off_ms": 1e3 * lat_off,
+        "on_ms": 1e3 * lat_on,
+        "saving_pct": 100.0 * (1.0 - lat_on / lat_off),
+        "shed_tokens": int(shed_tot),
+        "dropped_off": int(drop_off),
+        "dropped_on": int(drop_on),
+        "fired_layer_steps": int(fired),
+        "regret_layer_steps": int(regret),
+    }
+
+
+# ---------------------------------------------------------------- part B
+B_BELIEVED = (0.6, 0.8, 1.0, 1.3)
+B_SLOWED_DEVICE = 3  # believed-fastest
+B_SLOWED_SPEED = 0.5  # 2.6x slower than believed
+B_SLOW_AT_STEP = 12
+B_CAPACITY_FACTOR = 1.5
+B_DROP_PENALTY_S = 0.01
+
+
+def _counters(eng) -> dict[str, float]:
+    snap = eng.telemetry.registry.snapshot()
+    return dict(snap.get("counters", {}))
+
+
+def _engine_profile(speeds, *, seed: int):
+    from repro.core import DeviceFleet, profile_fleet, simulator_measure_fn
+
+    fleet = DeviceFleet.from_speeds(
+        np.asarray(speeds, dtype=np.float64), tile=1, tile_time=50e-6,
+        base=10e-6,
+    )
+    return profile_fleet(
+        simulator_measure_fn(fleet, seed=seed), len(speeds),
+        max_tokens=64, tile=1, repeats=5,
+    ).profile
+
+
+def _drive_engine(*, shed_on: bool, suppress: bool, seed: int,
+                  smoke: bool) -> dict:
+    """One serving run: tied router logits make experts 0/1 carry every
+    assignment (the straggler-bound regime), and the believed-fastest
+    device is slowed 2.6x mid-run through the injected true profile —
+    the engine's gate must discover the stale-beliefs window from the
+    variability detector's live ratios alone."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.core import GEMConfig
+    from repro.models import init_params
+    from repro.online import DriftConfig, MigrationConfig
+    from repro.replication import ReplicationConfig
+    from repro.serving import EngineConfig, ServingEngine, ShedConfig
+    from repro.sharding import host_policy
+
+    cfg = dataclasses.replace(
+        get_smoke_config(MODEL), decode_capacity_factor=B_CAPACITY_FACTOR
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(seed), policy,
+                            jnp.float32)
+    # tie every router logit: stable top-k then deterministically routes
+    # all tokens to experts 0 and 1 — two hot experts, two cold ones
+    router = jnp.zeros_like(params["blocks"]["moe"]["router"])
+    params = {
+        **params,
+        "blocks": {
+            **params["blocks"],
+            "moe": {**params["blocks"]["moe"], "router": router},
+        },
+    }
+    believed = _engine_profile(B_BELIEVED, seed=seed)
+    true_speeds = np.asarray(B_BELIEVED, dtype=np.float64)
+    true_speeds[B_SLOWED_DEVICE] = B_SLOWED_SPEED
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=16, max_len=128, decode_mode="scan",
+            gem=GEMConfig(trace_length=8, num_restarts=4),
+            other_time_per_step=1e-4, online=True,
+            drift=DriftConfig(
+                min_steps=4, threshold=100.0, var_threshold=2.0
+            ),
+            migration=MigrationConfig(
+                max_moves_per_step=2, base_overhead=0.0
+            ),
+            replan_cooldown=8, payback_horizon=100_000,
+            replication=ReplicationConfig(
+                replica_slots=1, exclude_speed_below=0.0,
+                consistent_only=False,
+            ),
+            shed=ShedConfig(
+                enabled=shed_on,
+                min_overflow=10**9 if suppress else 1,
+                hysteresis=1.0,
+                drop_penalty_s=B_DROP_PENALTY_S,
+            ),
+        ),
+        profile=believed, num_devices=len(B_BELIEVED),
+    )
+    rng = np.random.default_rng(seeded(17, seed))
+    max_new = 32 if smoke else 48
+    for _ in range(16):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), max_new)
+
+    num_layers = cfg.num_layers
+    per_step = []  # (enabled_layers, drop, shed, overflow) deltas
+    steps = 0
+    while eng.scheduler.has_work() and steps < 200:
+        if steps == B_SLOW_AT_STEP:
+            eng.set_true_profile(
+                _engine_profile(true_speeds, seed=seed)
+            )
+        pre = eng.shed_enables  # applies to THIS step's dispatch
+        c0 = _counters(eng)
+        eng.step()
+        c1 = _counters(eng)
+
+        def delta(name):
+            return int(c1.get(name, 0.0) - c0.get(name, 0.0))
+
+        per_step.append(
+            (
+                -1 if pre is None else int(pre.sum()),
+                delta("dispatch.dropped_tokens"),
+                delta("shed.tokens"),
+                delta("shed.overflow_tokens"),
+            )
+        )
+        steps += 1
+    rep = eng.latency_report()
+    final = _counters(eng)
+    return {
+        "steps": steps,
+        "finished": len(eng.finished),
+        "sim_time_s": float(eng.sim_time),
+        "dropped_tokens": int(final.get("dispatch.dropped_tokens", 0.0)),
+        "shed_tokens": int(rep.get("shed_tokens", 0.0)),
+        "shed_overflow_tokens": int(rep.get("shed_overflow_tokens", 0.0)),
+        "shed_saved_s": float(rep.get("shed_saved_s", 0.0)),
+        "shed_transfer_s": float(rep.get("shed_transfer_s", 0.0)),
+        "jit_trace_counts": dict(eng.jit_trace_counts),
+        "num_layers": num_layers,
+        "per_step": per_step,
+        "tokens": {int(r.uid): list(map(int, r.generated))
+                   for r in eng.finished},
+    }
+
+
+def _gate_no_drop_regime(res: dict) -> tuple[bool, str]:
+    """Gate 3: once a fully-enabled step rescued every overflow row
+    (drop == 0 with overflow > 0 — live replica slots had the room), no
+    later fully-enabled step may drop anything."""
+    L = res["num_layers"]
+    clean_from = None
+    for i, (en, drop, shed, over) in enumerate(res["per_step"]):
+        if en == L and over > 0 and drop == 0 and shed > 0:
+            clean_from = i
+            break
+    if clean_from is None:
+        return False, "no fully-enabled step ever reached drop == 0"
+    late_drops = sum(
+        drop
+        for en, drop, _, _ in res["per_step"][clean_from:]
+        if en == L
+    )
+    if late_drops:
+        return False, (
+            f"{late_drops} tokens dropped on fully-enabled steps after "
+            f"step {clean_from} despite live replica capacity"
+        )
+    return True, f"clean from step {clean_from}"
+
+
+def run(*, smoke: bool, seed: int) -> dict:
+    out: dict = {"model": MODEL, "smoke": bool(smoke), "violations": []}
+
+    analytic = run_analytic(smoke=smoke, seed=seed)
+    out["analytic"] = analytic
+    # gate 1: shed-on strictly beats placement-only on the bursty mix
+    if not analytic["on_ms"] < analytic["off_ms"]:
+        out["violations"].append(
+            f"analytic: shed-on {analytic['on_ms']:.2f}ms did not beat "
+            f"placement-only {analytic['off_ms']:.2f}ms"
+        )
+    # gate 2: the gate actually fired, and rarely in regret
+    if analytic["shed_tokens"] == 0:
+        out["violations"].append("analytic: no tokens were ever shed")
+    if analytic["regret_layer_steps"] > 0.2 * max(
+        analytic["fired_layer_steps"], 1
+    ):
+        out["violations"].append(
+            f"analytic: {analytic['regret_layer_steps']} regretted "
+            f"layer-steps out of {analytic['fired_layer_steps']} fired"
+        )
+
+    runs = {
+        "off": _drive_engine(
+            shed_on=False, suppress=False, seed=seed, smoke=smoke
+        ),
+        "on": _drive_engine(
+            shed_on=True, suppress=False, seed=seed, smoke=smoke
+        ),
+        "on_repeat": _drive_engine(
+            shed_on=True, suppress=False, seed=seed, smoke=smoke
+        ),
+        "on_suppressed": _drive_engine(
+            shed_on=True, suppress=True, seed=seed, smoke=smoke
+        ),
+    }
+    on, off = runs["on"], runs["off"]
+    # gate 3: no-drop regime under the quality-aware gate
+    ok, why = _gate_no_drop_regime(on)
+    out["no_drop_regime"] = why
+    if not ok:
+        out["violations"].append(f"engine: {why}")
+    if not (off["dropped_tokens"] > on["dropped_tokens"] > 0):
+        out["violations"].append(
+            f"engine: expected off drops {off['dropped_tokens']} > on "
+            f"drops {on['dropped_tokens']} > 0 (pre-replan overflow on "
+            "single-copy experts must still drop)"
+        )
+    # gate 4: a gate that never fires is bit-identical to the plane off
+    if runs["on_suppressed"]["tokens"] != off["tokens"]:
+        out["violations"].append(
+            "engine: suppressed-gate run diverged from shed-off tokens"
+        )
+    if runs["on_suppressed"]["shed_tokens"] != 0:
+        out["violations"].append(
+            "engine: suppressed-gate run shed tokens"
+        )
+    # gate 5: trace flatness — shed enables are a scanned operand
+    for name in ("on", "on_suppressed"):
+        counts = runs[name]["jit_trace_counts"]
+        if counts.get("decode") != 1:
+            out["violations"].append(
+                f"engine {name}: decode traced {counts.get('decode')}x "
+                "(want exactly 1: a shed decision recompiled the step)"
+            )
+        if counts.get("migrate", 0) > 1:
+            out["violations"].append(
+                f"engine {name}: migrate traced {counts.get('migrate')}x"
+            )
+    # gate 6: bit-determinism of the shed-on run
+    for key in ("tokens", "shed_tokens", "dropped_tokens", "per_step",
+                "sim_time_s"):
+        if on[key] != runs["on_repeat"][key]:
+            out["violations"].append(
+                f"engine: shed-on repeat diverged on {key}"
+            )
+    # gate 7: shedding helped (or at worst matched) simulated fleet time
+    if not on["sim_time_s"] <= off["sim_time_s"]:
+        out["violations"].append(
+            f"engine: shed-on sim {on['sim_time_s']:.6f}s exceeded "
+            f"shed-off {off['sim_time_s']:.6f}s"
+        )
+    if on["shed_tokens"] == 0:
+        out["violations"].append("engine: shed-on run never shed")
+    for res in runs.values():
+        res.pop("tokens")  # bulky; parity already judged
+    out["engine"] = runs
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter eval windows (CI)")
+    ap.add_argument("--out", default="results/fig25_shedding.json")
+    add_seed_arg(ap)
+    args = ap.parse_args()
+    out = run(smoke=args.smoke, seed=args.seed)
+    a = out["analytic"]
+    print(
+        f"== analytic: off {a['off_ms']:.2f}ms → on {a['on_ms']:.2f}ms "
+        f"({a['saving_pct']:+.2f}%), shed {a['shed_tokens']}, "
+        f"drops {a['dropped_off']} → {a['dropped_on']}, "
+        f"regret {a['regret_layer_steps']}/{a['fired_layer_steps']}"
+    )
+    for name in ("off", "on", "on_suppressed"):
+        r = out["engine"][name]
+        print(
+            f"== engine {name}: sim {r['sim_time_s']*1e3:.2f}ms, "
+            f"shed {r['shed_tokens']}/{r['shed_overflow_tokens']} "
+            f"overflow, dropped {r['dropped_tokens']}, "
+            f"traces={r['jit_trace_counts']}"
+        )
+    print(f"== no-drop regime: {out['no_drop_regime']}")
+    write_bench_summary(
+        "fig25_shedding", seed=args.seed,
+        scalars={
+            "analytic": {
+                k: a[k]
+                for k in ("off_ms", "on_ms", "saving_pct", "shed_tokens",
+                          "dropped_off", "dropped_on",
+                          "regret_layer_steps", "fired_layer_steps")
+            },
+            "engine": {
+                name: {
+                    "sim_time_s": r["sim_time_s"],
+                    "shed_tokens": r["shed_tokens"],
+                    "dropped_tokens": r["dropped_tokens"],
+                    "shed_saved_s": r["shed_saved_s"],
+                }
+                for name, r in out["engine"].items()
+                if name != "on_repeat"
+            },
+        },
+    )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.out}")
+    if out["violations"]:
+        for v in out["violations"]:
+            print(f"VIOLATION: {v}")
+        return 1
+    print("all shedding gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,8 @@ __all__ = [
     "step_token_matrix",
     "step_cost_matrix",
     "migration_net_benefit",
+    "shed_gate_terms",
+    "shed_decisions",
     "IncrementalScorer",
 ]
 
@@ -103,6 +105,108 @@ def migration_net_benefit(
         raise ValueError("window_steps must be positive")
     per_step_gain = (current_score - target_score) / window_steps
     return per_step_gain * horizon_steps - migration_cost
+
+
+def shed_gate_terms(
+    tokens_g: np.ndarray,
+    overflow: float,
+    profile: VariabilityProfile,
+    device_scale: np.ndarray | None = None,
+) -> tuple[float, float]:
+    """Marginal-cost terms of the shed-vs-wait decision for one layer.
+
+    ``tokens_g`` (G,) is the layer's per-device token load, ``overflow``
+    the assignments past the straggler's capacity clamp. Returns
+    ``(wait_s, recv_s)``:
+
+    * ``wait_s`` — queue-wait bought back by taking ``overflow`` tokens
+      off the straggler device: ``C_g*(n) − C_g*(n − overflow)`` on its
+      profiled curve.
+    * ``recv_s`` — the *cheapest* marginal cost of absorbing them
+      elsewhere: ``min_{g≠g*} C_g(n_g + overflow) − C_g(n_g)``.
+
+    The data plane's waterfall may split the overflow across several
+    copies, so this single-receiver pricing is the *optimistic* (lower)
+    bound on the receiving side — the replica-exact gate
+    (:func:`repro.replication.score.shed_gate_decisions`) simulates the
+    real split and supersedes this bound whenever live replicated
+    placements are available; this form remains for the non-replicated
+    controller fallback.
+
+    ``device_scale`` (G,) multiplies each device's believed cost curve
+    (observed/predicted latency ratios from the variability detector:
+    believed × ratio ≈ observed), so a believed-fast device that slowed
+    mid-run is priced at the queue-wait it actually imposes.
+    """
+    tokens = np.asarray(tokens_g, dtype=np.float64)
+    scale = (
+        np.ones(len(tokens))
+        if device_scale is None
+        else np.asarray(device_scale, dtype=np.float64)
+    )
+    base = profile.cost_all(tokens[None, :])[0] * scale  # (G,)
+    g_s = int(base.argmax())
+    reduced = tokens.copy()
+    reduced[g_s] = max(reduced[g_s] - overflow, 0.0)
+    wait_s = float(
+        base[g_s]
+        - profile.cost_all(reduced[None, :])[0, g_s] * scale[g_s]
+    )
+    bumped = tokens[None, :] + overflow * np.eye(len(tokens))
+    marginal = profile.cost_all(bumped).diagonal() * scale - base
+    marginal[g_s] = np.inf  # the straggler can't receive its own overflow
+    recv_s = float(marginal.min())
+    return wait_s, recv_s
+
+
+def shed_decisions(
+    tokens: np.ndarray,
+    overflow: np.ndarray,
+    profile: VariabilityProfile,
+    *,
+    bandwidth: float,
+    token_bytes: float,
+    min_overflow: int = 1,
+    hysteresis: float = 1.0,
+    device_scale: np.ndarray | None = None,
+    drop_penalty_s: float = 0.0,
+) -> np.ndarray:
+    """Per-layer shed-vs-wait gate: (L,) 0/1 enables for the next step.
+
+    ``tokens`` (L, G) per-layer per-device loads and ``overflow`` (L,)
+    capacity-overflow counts, both from the *previous* engine step (the
+    online pricing loop: observe, price, enable). Layer ``l`` sheds iff
+
+        recv_s + overflow·token_bytes/bandwidth
+            <  wait_s / hysteresis + overflow·drop_penalty_s
+
+    — the receiving device's marginal compute plus the activation
+    transfer must beat the straggler's queue wait (``hysteresis`` > 1
+    demands a margin), with ``drop_penalty_s`` crediting the quality
+    value of rescuing rows that would otherwise fall out of the capacity
+    buffer (see :class:`repro.serving.shed.ShedConfig`). ``bandwidth``
+    comes from the migration cost model
+    (``BandwidthEstimator``-calibrated when the controller runs with
+    ``MigrationConfig.calibrate_bandwidth``), so the gate reprices as the
+    fabric's measured throughput drifts.
+    """
+    tokens = np.asarray(tokens, dtype=np.float64)
+    overflow = np.asarray(overflow, dtype=np.float64).reshape(-1)
+    L = tokens.shape[0]
+    if overflow.shape[0] != L:
+        raise ValueError("need one overflow count per layer")
+    enables = np.zeros(L, dtype=np.int32)
+    for layer in range(L):
+        o = float(overflow[layer])
+        if o < min_overflow:
+            continue
+        wait_s, recv_s = shed_gate_terms(
+            tokens[layer], o, profile, device_scale
+        )
+        transfer_s = o * token_bytes / bandwidth
+        if recv_s + transfer_s < wait_s / hysteresis + o * drop_penalty_s:
+            enables[layer] = 1
+    return enables
 
 
 class IncrementalScorer:

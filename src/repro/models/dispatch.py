@@ -32,6 +32,14 @@ placement-aware scatter/gather around it:
   the (Gd, S, C, D) buffers (``num_slots`` ≥ E_v), so neither the kernels
   nor the scatter/gather grow any replication-specific code; a 1-D table
   takes the original path, bit-for-bit.
+
+  **Capacity-overflow shedding** (HarMoEny-style, ROADMAP direction 1):
+  with a replica table and a traced ``shed_enable`` operand, a *second*
+  dispatch pass re-scatters capacity-overflow assignments onto the free
+  rows of the same expert's other live copies (least-loaded first, stable
+  rank order) instead of dropping them — the first mechanism that acts
+  *inside* a layer's synchronization barrier rather than between layers.
+  See :func:`build_dispatch`.
 * :func:`expert_compute` — gather tokens into the (Gd, E_v, C, D) buffers
   and run the expert FFN. ``einsum`` uses grouped einsums; ``pallas`` runs
   ``moe_ffn_pallas`` *per device shard* via ``shard_map`` over the
@@ -69,11 +77,39 @@ __all__ = [
     "DispatchPlan",
     "MoEAux",
     "route",
+    "slot_capacity",
     "build_dispatch",
     "expert_compute",
     "combine",
     "dense_mix",
 ]
+
+
+def slot_capacity(
+    num_tokens: int,
+    config,
+    *,
+    capacity_factor: float,
+    num_slots: int,
+    replicated: bool,
+) -> int:
+    """Per-slot row capacity C of the dispatch buffers — the single
+    source of truth shared by :func:`build_dispatch` and the host-side
+    shed-gate pricing (:func:`repro.replication.score.shed_gate_decisions`
+    must predict exactly the clamp the data plane will apply).
+
+    ``num_tokens`` is the per-data-group token count Ng. With a replica
+    table whose slot count S exceeds E_v, the expected per-slot load
+    shrinks by E_v/S (the split spreads each expert over its copies), so
+    C scales by the same static factor. Both are Python ints: C is a
+    compile-time constant and never retraces.
+    """
+    E = config.num_experts
+    Ev = E * config.expert_tp
+    cf = capacity_factor
+    if replicated and num_slots > Ev:
+        cf = capacity_factor * Ev / num_slots
+    return max(int(np.ceil(num_tokens * config.experts_per_token / E * cf)), 1)
 
 _WARNED: set = set()
 
@@ -121,15 +157,34 @@ class DispatchPlan:
     ``dispatch_idx`` (Gd, E_v, C) i32 — token index (within its group) held
     by each capacity row; ``Ng`` marks the zero pad token. ``dispatch_gate``
     (Gd, E_v, C) f32 — the gate each row is combined with (0 for pad/
-    dropped). ``dropped`` () f32 — fraction of assignments dropped at
-    capacity; ``dropped_tokens`` () i32 — the absolute count behind that
-    fraction (telemetry's capacity-overflow counter).
+    dropped).
+
+    **Drop accounting — two views of one quantity.** The denominator is the
+    total number of *assignments* this call made: ``Gd · Ag`` with
+    ``Ag = Ng · k · expert_tp`` (every token contributes ``k`` expert picks,
+    each split into ``expert_tp`` virtual-expert slices). ``dropped_tokens``
+    () i32 is the absolute count of assignments that found no capacity row;
+    ``dropped`` () f32 is exactly ``dropped_tokens / (Gd · Ag)`` — the
+    legacy fraction older call sites read. The two are pinned to each other
+    by a regression test (``tests/test_shed.py::test_drop_accounting_identities``).
+
+    **Shed table.** ``overflow_tokens`` () i32 counts assignments past the
+    capacity clamp *before* the shed pass (== ``dropped_tokens`` when
+    shedding is off); ``shed_tokens`` () i32 is how many of those the
+    second dispatch pass re-scattered onto free replica rows instead of
+    dropping, so ``dropped_tokens = overflow_tokens − shed_tokens`` always.
+    ``shed_delta`` (S,) i32 is the signed per-slot row delta (+received,
+    −sent, summed over groups); a slot either overflows or has free rows,
+    never both, so the signs never mix within one slot.
     """
 
     dispatch_idx: jax.Array
     dispatch_gate: jax.Array
     dropped: jax.Array
     dropped_tokens: jax.Array
+    overflow_tokens: jax.Array
+    shed_tokens: jax.Array
+    shed_delta: jax.Array
 
     @property
     def capacity(self) -> int:
@@ -149,7 +204,10 @@ class DispatchPlan:
 
 _register(
     DispatchPlan,
-    ("dispatch_idx", "dispatch_gate", "dropped", "dropped_tokens"),
+    (
+        "dispatch_idx", "dispatch_gate", "dropped", "dropped_tokens",
+        "overflow_tokens", "shed_tokens", "shed_delta",
+    ),
 )
 
 
@@ -158,19 +216,34 @@ class MoEAux:
     """Per-call aux the layer stack scans and the engine's Step-1 reads.
 
     Supports ``aux["expert_counts"]`` indexing for dict-style call sites.
+
+    ``dropped`` is the *fraction* of assignments dropped at capacity and
+    ``dropped_tokens`` the absolute count behind it — always related by
+    ``dropped = dropped_tokens / (Gd · Ng · k · expert_tp)`` (see
+    :class:`DispatchPlan` for the denominator's derivation).
+    ``overflow_tokens`` / ``shed_tokens`` / ``shed_delta`` mirror the
+    plan's shed table so the serving engine can price and account the
+    capacity-overflow shed pass per layer.
     """
 
     expert_counts: jax.Array
     aux_loss: jax.Array
     dropped: jax.Array
     dropped_tokens: jax.Array
+    overflow_tokens: jax.Array
+    shed_tokens: jax.Array
+    shed_delta: jax.Array
 
     def __getitem__(self, key: str):
         return getattr(self, key)
 
 
 _register(
-    MoEAux, ("expert_counts", "aux_loss", "dropped", "dropped_tokens")
+    MoEAux,
+    (
+        "expert_counts", "aux_loss", "dropped", "dropped_tokens",
+        "overflow_tokens", "shed_tokens", "shed_delta",
+    ),
 )
 
 
@@ -247,18 +320,38 @@ def build_dispatch(
     *,
     capacity_factor: float,
     num_slots: int | None = None,
+    shed_enable=None,
 ) -> DispatchPlan:
     """Routing decision → scatter plan. Backend-independent index work.
 
     Virtual assignments map through the placement table to physical slots,
     rank within their (group, slot) via the stable sort, and drop beyond the
     static capacity C = ⌈Ng·k/E · cf⌉ (dropped assignments scatter out of
-    bounds, ``mode="drop"``).
+    bounds, ``mode="drop"``). The drop *fraction* and the absolute count it
+    abbreviates are both returned and pinned to each other:
+    ``dropped = dropped_tokens / (Gd · Ag)`` with ``Ag = Ng · k ·
+    expert_tp`` total assignments per group.
 
     ``expert_to_slot`` is either the (E_v,) single-slot map or an (E_v, P)
     replica-split table (see the module docstring); ``num_slots`` is the
     physical slot count S of the weight pool (default E_v — required when
     the pool carries replica slots, since table contents are traced values).
+
+    **Capacity-overflow shed pass.** With a replica table and
+    ``shed_enable`` given (a traced 0/1 scalar — a *scanned operand* under
+    the whole-model decode scan, so flipping it never retraces), a second
+    dispatch pass re-scatters assignments that overflowed their slot's
+    capacity onto the free capacity rows of the *other live copies of the
+    same virtual expert*, instead of dropping them. Deterministic by
+    construction: overflow assignments are ranked within their (group,
+    virtual expert) by the same stable sort the capacity clamp uses, the
+    target copies are ordered least-loaded-first (slot id breaks ties, dead
+    duplicate-table columns sort last with zero free rows), and rank ``r``
+    waterfalls into the ``r``-th free row of that ordering. Overflow beyond
+    the copies' total free capacity still drops. ``shed_enable=0`` yields
+    bit-identical outputs to the pass being absent; ``shed_enable=None``
+    (the default) omits the pass from the traced program entirely, so
+    pre-existing executables are structurally unchanged.
 
     **Replica-aware capacity.** With replica slots (S > E_v and a 2-D
     table) the expected per-slot load shrinks by E_v/S — the split spreads
@@ -294,18 +387,17 @@ def build_dispatch(
     else:
         slots = jnp.take(table, vids_flat)  # (Gd, Ag)
     keyed = (group_of * S + slots.reshape(-1)).astype(jnp.int32)
-    pos, _ = _rank_in_group(keyed, Gd * S)
+    pos, slot_sizes = _rank_in_group(keyed, Gd * S)
     pos = pos.reshape(Gd, Ag)
     tok_idx = jnp.tile(
         jnp.repeat(jnp.arange(Ng, dtype=jnp.int32), k * tp), (Gd, 1)
     )
     a_gates = jnp.repeat(router.gates.reshape(Gd, -1), tp, axis=1)
 
-    cf = capacity_factor
-    if table.ndim == 2 and S > Ev:
-        cf = capacity_factor * Ev / S  # share-weighted per-slot load
-    C = int(np.ceil(Ng * k / E * cf))
-    C = max(C, 1)
+    C = slot_capacity(
+        Ng, config, capacity_factor=capacity_factor, num_slots=S,
+        replicated=table.ndim == 2,
+    )
     keep = pos < C
     slot_safe = jnp.where(keep, slots, S)
     gidx = jnp.broadcast_to(
@@ -319,6 +411,87 @@ def build_dispatch(
     dispatch_gate = dispatch_gate.at[gidx, slot_safe, pos].set(
         a_gates, mode="drop"
     )
+
+    kept = jnp.sum(keep).astype(jnp.int32)
+    overflow_tokens = jnp.asarray(Gd * Ag, jnp.int32) - kept
+    shed_tokens = jnp.asarray(0, jnp.int32)
+    shed_delta = jnp.zeros((S,), jnp.int32)
+    if table.ndim == 2 and shed_enable is not None:
+        # ---- capacity-overflow second pass: shed to free replica rows ----
+        shed_on = jnp.asarray(shed_enable).astype(jnp.int32) > 0
+        P = table.shape[1]
+        sizes = slot_sizes.reshape(Gd, S)
+        cnt = jnp.minimum(sizes, C)  # kept rows per (group, slot)
+        # a table row may repeat a slot (single-copy experts, Bresenham
+        # rounding): only the first occurrence is a live copy, duplicates
+        # must not double-count its free rows
+        dupe = jnp.tril(table[:, :, None] == table[:, None, :], k=-1).any(-1)
+        live = ~dupe  # (E_v, P)
+        cload = cnt[:, table]  # (Gd, E_v, P) kept rows on each copy
+        free = jnp.where(live[None], C - cload, 0)
+        # waterfall order: least-loaded live copy first, slot id breaks
+        # ties, dead duplicates last (their free rows are already 0)
+        okey = jnp.where(
+            live[None], cload * (S + 1) + table[None], (C + 1) * (S + 1)
+        )
+        order = jnp.argsort(okey, axis=-1, stable=True)
+        sorted_slot = jnp.take_along_axis(
+            jnp.broadcast_to(table[None], cload.shape), order, axis=-1
+        )
+        cumfree = jnp.cumsum(
+            jnp.take_along_axis(free, order, axis=-1), axis=-1
+        )  # (Gd, E_v, P)
+        # rank overflow assignments within (group, virtual expert) by the
+        # same stable sort the capacity clamp used; kept ones park in a
+        # sentinel segment so they never consume a rank
+        rkey = jnp.where(
+            keep.reshape(-1),
+            Gd * Ev,
+            group_of * Ev + vids_flat.reshape(-1),
+        ).astype(jnp.int32)
+        orank, _ = _rank_in_group(rkey, Gd * Ev + 1)
+        orank = orank.reshape(Gd, Ag)
+        cf_a = cumfree[gidx, vids_flat]  # (Gd, Ag, P)
+        copy_idx = jnp.sum(cf_a <= orank[..., None], axis=-1)
+        shed_ok = orank < cf_a[..., P - 1]
+        t_slot = jnp.take_along_axis(
+            sorted_slot[gidx, vids_flat],
+            jnp.minimum(copy_idx, P - 1)[..., None],
+            axis=-1,
+        )[..., 0]
+        prev_cum = jnp.where(
+            copy_idx > 0,
+            jnp.take_along_axis(
+                cf_a, jnp.maximum(copy_idx - 1, 0)[..., None], axis=-1
+            )[..., 0],
+            0,
+        )
+        # rows cnt..C-1 of the target copy are free; the waterfall offset
+        # orank − prev_cum is < that copy's free count, so t_pos < C and
+        # kept rows (pos < cnt) are never overwritten
+        t_pos = cnt[gidx, t_slot] + (orank - prev_cum)
+        shed_mask = jnp.logical_and(~keep, shed_ok) & shed_on
+        s_slot = jnp.where(shed_mask, t_slot, S)  # S → out-of-bounds drop
+        s_pos = jnp.where(shed_mask, t_pos, 0)
+        dispatch_idx = dispatch_idx.at[gidx, s_slot, s_pos].set(
+            tok_idx, mode="drop"
+        )
+        dispatch_gate = dispatch_gate.at[gidx, s_slot, s_pos].set(
+            a_gates, mode="drop"
+        )
+        shed_i32 = shed_mask.astype(jnp.int32).reshape(-1)
+        recv = jax.ops.segment_sum(
+            shed_i32, s_slot.reshape(-1), num_segments=S + 1
+        )[:S]
+        sent = jax.ops.segment_sum(
+            shed_i32,
+            jnp.where(shed_mask, slots, S).reshape(-1),
+            num_segments=S + 1,
+        )[:S]
+        shed_delta = (recv - sent).astype(jnp.int32)
+        shed_tokens = jnp.sum(shed_i32)
+        kept = kept + shed_tokens
+
     # expert spec adapts: None (replicate) when E_v doesn't divide the
     # model axis — a hard divisibility error from with_sharding_constraint
     # otherwise
@@ -326,14 +499,17 @@ def build_dispatch(
     _, es = policy.moe_shard_spec(Gd, S)
     dispatch_idx = policy.constrain(dispatch_idx, b, es, None)
     dispatch_gate = policy.constrain(dispatch_gate, b, es, None)
-    kept = jnp.sum(keep)
+    # absolute count of capacity-dropped assignments (telemetry's
+    # `dispatch.dropped_tokens`) and the legacy fraction it abbreviates:
+    # dropped == dropped_tokens / (Gd·Ag), Ag = Ng·k·expert_tp — pinned by
+    # the regression test in tests/test_moe.py
+    dropped_tokens = jnp.asarray(Gd * Ag, jnp.int32) - kept
     dropped = 1.0 - kept / (Gd * Ag)
-    # absolute count of capacity-dropped assignments — today's silent
-    # drops, surfaced for the telemetry plane (`dispatch.dropped_tokens`)
-    dropped_tokens = jnp.asarray(Gd * Ag, jnp.int32) - kept.astype(jnp.int32)
     return DispatchPlan(
         dispatch_idx=dispatch_idx, dispatch_gate=dispatch_gate,
         dropped=dropped, dropped_tokens=dropped_tokens,
+        overflow_tokens=overflow_tokens, shed_tokens=shed_tokens,
+        shed_delta=shed_delta,
     )
 
 

@@ -202,12 +202,19 @@ def _ssm_block_train(x, lp, config: ModelConfig, policy: ShardingPolicy,
     return x, cache
 
 
-def _moe_aux_zero(config: ModelConfig):
+def _moe_aux_zero(config: ModelConfig, num_slots: int | None = None):
+    S = (
+        num_slots if num_slots is not None
+        else config.num_experts * config.expert_tp
+    )
     return MoEAux(
         expert_counts=jnp.zeros((config.num_experts,), jnp.int32),
         aux_loss=jnp.asarray(0.0, jnp.float32),
         dropped=jnp.asarray(0.0, jnp.float32),
         dropped_tokens=jnp.asarray(0, jnp.int32),
+        overflow_tokens=jnp.asarray(0, jnp.int32),
+        shed_tokens=jnp.asarray(0, jnp.int32),
+        shed_delta=jnp.zeros((S,), jnp.int32),
     )
 
 
@@ -444,7 +451,8 @@ def _ssm_tree(config, batch, leading, dtype, policy: ShardingPolicy):
 
 def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 policy: ShardingPolicy, placements=None, *,
-                block_tables=None, decode_mode: str = "scan"):
+                block_tables=None, decode_mode: str = "scan",
+                shed_enables=None):
     """One serving step: tokens (B, 1) int32.
 
     Dense mode (``block_tables=None``): ``cur_len`` is a scalar int32
@@ -463,6 +471,13 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
     the same compiled program; ``"python"`` unrolls the identical body
     per layer, the baseline the scan≡python token-parity gates diff
     against.
+
+    ``shed_enables`` (L,) 0/1 int32, optional: per-layer capacity-
+    overflow shed switches for the MoE layers (see
+    :func:`~repro.models.dispatch.build_dispatch`). A *scanned operand*
+    like the placements, so per-step shed decisions never retrace the
+    compiled decode executable; ``None`` (the default) keeps the traced
+    program byte-identical to the pre-shed step.
     """
     x = embed_tokens(tokens, params["embed"], config, policy)
     x = policy.act_bsd(x)
@@ -542,8 +557,7 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
         if placements is None:
             placements = identity_placement(config, config.num_layers)
 
-        def body(xc, inputs):
-            lp, placement_l, cache = inputs
+        def layer_body(xc, lp, placement_l, cache, shed_l):
             h = rms_norm(xc, lp["ln1"], config.norm_eps)
             if block_tables is not None:
                 a, (new_k, new_v) = attention_decode_paged(
@@ -562,6 +576,7 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 y, aux = moe_layer(
                     h2, lp["moe"], placement_l, config, policy,
                     capacity_factor=config.decode_capacity_factor,
+                    shed_enable=shed_l,
                 )
             else:
                 aux = _moe_aux_zero(config) if config.is_moe else 0.0
@@ -573,9 +588,22 @@ def decode_step(params, caches, cur_len, tokens, config: ModelConfig,
                 aux = _moe_aux_zero(config)
             return xc + y, ({"k": new_c.k, "v": new_c.v}, aux)
 
-        x, (new_attn, auxes) = _scan_or_unroll(
-            body, x, (blocks, placements, caches["attn"]), decode_mode
-        )
+        if shed_enables is None:
+            # pre-shed operand tuple: the traced program (and therefore
+            # every existing compiled decode executable) is unchanged
+            def body(xc, inputs):
+                lp, placement_l, cache = inputs
+                return layer_body(xc, lp, placement_l, cache, None)
+
+            xs = (blocks, placements, caches["attn"])
+        else:
+            def body(xc, inputs):
+                lp, placement_l, shed_l, cache = inputs
+                return layer_body(xc, lp, placement_l, cache, shed_l)
+
+            xs = (blocks, placements, shed_enables, caches["attn"])
+
+        x, (new_attn, auxes) = _scan_or_unroll(body, x, xs, decode_mode)
         new_caches = {"attn": new_attn}
         if config.is_moe:
             moe_aux = auxes

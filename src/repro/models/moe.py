@@ -223,12 +223,21 @@ def moe_layer(
     capacity_factor: float | None = None,
     seq_sharded_out: bool = False,
     backend: str | None = None,
+    shed_enable=None,
 ):
     """x (B, S, D) replicated over model → (y (B,S,D), :class:`MoEAux`).
 
     aux: ``expert_counts`` (E,) tokens routed per *real* expert this call
     (GEM Step-1 hook), ``aux_loss`` load-balance loss (train), ``dropped``
-    fraction of assignments dropped at capacity.
+    fraction of assignments dropped at capacity (=
+    ``dropped_tokens / (Gd·Ng·k·expert_tp)`` — see
+    :class:`~repro.models.dispatch.DispatchPlan`), plus the shed table
+    (``overflow_tokens`` / ``shed_tokens`` / ``shed_delta``).
+
+    ``shed_enable`` (traced 0/1 scalar, or None) turns on the
+    capacity-overflow shed pass in :func:`build_dispatch` — only
+    meaningful with a replica-split table; ``None`` keeps the traced
+    program identical to the pre-shed layer.
 
     ``backend`` overrides ``config.moe_backend`` for this call (see the
     module docstring for the three backends). The body is a pure
@@ -278,11 +287,14 @@ def moe_layer(
             aux_loss=router.aux_loss,
             dropped=jnp.asarray(0.0, jnp.float32),
             dropped_tokens=jnp.asarray(0, jnp.int32),
+            overflow_tokens=jnp.asarray(0, jnp.int32),
+            shed_tokens=jnp.asarray(0, jnp.int32),
+            shed_delta=jnp.zeros((int(p["w_gate"].shape[0]),), jnp.int32),
         )
 
     plan = build_dispatch(
         router, expert_to_slot, config, policy, capacity_factor=cf,
-        num_slots=int(p["w_gate"].shape[0]),
+        num_slots=int(p["w_gate"].shape[0]), shed_enable=shed_enable,
     )
     y_e = expert_compute(xg, plan, p, config, policy, backend=backend)
     y = combine(y_e, plan, (B, S, D), policy, seq_sharded_out=seq_sharded_out)
@@ -291,6 +303,9 @@ def moe_layer(
         aux_loss=router.aux_loss,
         dropped=plan.dropped,
         dropped_tokens=plan.dropped_tokens,
+        overflow_tokens=plan.overflow_tokens,
+        shed_tokens=plan.shed_tokens,
+        shed_delta=plan.shed_delta,
     )
 
 

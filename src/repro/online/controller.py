@@ -37,6 +37,7 @@ from ..core.latency_model import BandwidthEstimator, MigrationCostModel
 from ..core.score import (
     migration_net_benefit,
     score,
+    shed_decisions as _shed_decisions,
     step_cost_matrix,
     step_token_matrix,
 )
@@ -49,6 +50,7 @@ from ..replication import (
     replicated_score,
     replicated_step_cost_matrix,
     replicated_step_token_matrix,
+    shed_gate_decisions,
 )
 from ..telemetry import Telemetry
 from ..telemetry.audit import canonical, decision_payload
@@ -360,6 +362,71 @@ class OnlineController:
             )
         return step_token_matrix(
             counts, self.planner.num_devices, self.current_placements
+        )
+
+    def shed_decisions(
+        self,
+        counts: np.ndarray,
+        overflow: np.ndarray,
+        *,
+        token_bytes: float,
+        capacity: int | None = None,
+        min_overflow: int = 1,
+        hysteresis: float = 1.0,
+        drop_penalty_s: float = 0.0,
+    ) -> np.ndarray:
+        """(L,) shed-enable flags for the *next* step's dispatch pass.
+
+        Prices the shed-vs-wait gate with the controller's current
+        beliefs: the believed profile, the live replica layouts, and the
+        migration cost model's bandwidth — which tightens over time when
+        ``migration.calibrate_bandwidth`` feeds measured transfers back
+        in. With live replicated placements and the data plane's slot
+        ``capacity``, the replica-exact pricing
+        (:func:`repro.replication.score.shed_gate_decisions`) simulates
+        the actual waterfall outcome; otherwise the single-receiver
+        marginal-cost bound (:func:`repro.core.score.shed_decisions`).
+
+        Deliberately stateless: it reads the same beliefs the replan path
+        reads but mutates nothing, so interleaving shed pricing with
+        placement decisions leaves the audit stream and the offline
+        decision replay byte-exact. Shedding masks a straggler's queue
+        *this step*; replanning still sees the un-shed loads and removes
+        the imbalance itself (compose, don't compete).
+
+        The believed costs are scaled by the variability detector's live
+        per-device observed/predicted latency ratios (1.0 at rest): when
+        a believed-fast device slows mid-run, its stale speed-
+        proportional replica share keeps overloading it *in real time*
+        while its slower-believed co-copies hold capacity slack — the
+        ratio-scaled gate starts shedding into that slack steps before
+        the detector fires and the replan (which resets the ratios via
+        the profile repair) removes the need.
+        """
+        ratios = self.var_detector.ratios
+        if self.replicated and capacity is not None:
+            return shed_gate_decisions(
+                counts,
+                self.current_rplacements,
+                self.profile,
+                capacity,
+                bandwidth=self.cost_model.bandwidth,
+                token_bytes=token_bytes,
+                min_overflow=min_overflow,
+                hysteresis=hysteresis,
+                device_scale=ratios,
+                drop_penalty_s=drop_penalty_s,
+            )
+        return _shed_decisions(
+            self.token_matrix(counts),
+            overflow,
+            self.profile,
+            bandwidth=self.cost_model.bandwidth,
+            token_bytes=token_bytes,
+            min_overflow=min_overflow,
+            hysteresis=hysteresis,
+            device_scale=ratios,
+            drop_penalty_s=drop_penalty_s,
         )
 
     def predicted_device_latency(self, counts: np.ndarray) -> np.ndarray:

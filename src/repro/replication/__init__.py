@@ -41,8 +41,13 @@ from .score import (
     replicated_per_device_tokens,
     replicated_per_step_latency,
     replicated_score,
+    replica_slot_loads,
     replicated_step_cost_matrix,
     replicated_step_token_matrix,
+    shed_adjusted_step_cost_matrix,
+    shed_device_deltas,
+    shed_gate_decisions,
+    simulate_shed_pass,
 )
 from .types import ReplicatedPlacement, ReplicationConfig
 
@@ -56,9 +61,14 @@ __all__ = [
     "plan_replicated_layers",
     "refine_replicated",
     "replica_fetch_rows",
+    "replica_slot_loads",
     "replicated_per_device_tokens",
     "replicated_per_step_latency",
     "replicated_score",
     "replicated_step_cost_matrix",
     "replicated_step_token_matrix",
+    "shed_adjusted_step_cost_matrix",
+    "shed_device_deltas",
+    "shed_gate_decisions",
+    "simulate_shed_pass",
 ]

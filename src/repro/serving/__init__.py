@@ -16,6 +16,7 @@ from .kv_cache import (
 )
 from .sampling import sample
 from .scheduler import Request, Scheduler
+from .shed import ShedConfig, default_token_bytes
 from .slo import request_metrics, slo_report
 
 __all__ = [
@@ -28,9 +29,11 @@ __all__ = [
     "RequestSpec",
     "Scheduler",
     "ServingEngine",
+    "ShedConfig",
     "TaskProfile",
     "batch_arrivals",
     "blocks_for_tokens",
+    "default_token_bytes",
     "generate_arrivals",
     "kv_pool_bytes",
     "replica_slots_for_headroom",

@@ -58,6 +58,7 @@ from ..models.model import (
     init_paged_decode_cache,
     prefill,
 )
+from ..models.dispatch import slot_capacity
 from ..models.moe import (
     apply_placement,
     identity_placement,
@@ -83,6 +84,9 @@ from ..replication import (
     replica_fetch_rows,
     replicated_step_cost_matrix,
     replicated_step_token_matrix,
+    shed_adjusted_step_cost_matrix,
+    shed_device_deltas,
+    shed_gate_decisions,
 )
 from ..sharding.policy import ShardingPolicy
 from ..telemetry import (
@@ -102,6 +106,7 @@ from .kv_cache import (
 )
 from .sampling import sample
 from .scheduler import Request, Scheduler
+from .shed import ShedConfig, default_token_bytes
 from .slo import slo_report
 
 __all__ = ["EngineConfig", "ServingEngine"]
@@ -137,6 +142,15 @@ class EngineConfig:
     # replication-aware planner and step costs use the speed-proportional
     # split. Requires the gem policy and an attached profile.
     replication: ReplicationConfig = ReplicationConfig()
+    # --- capacity-overflow token shedding (serving/shed.py) ---
+    # enabled=True arms the dispatch plane's second scatter pass: each
+    # step the engine prices the shed-vs-wait gate per layer
+    # (core/score.shed_decisions, one step behind) and feeds the (L,)
+    # enable flags into the decode executable as a scanned operand —
+    # flipping them never retraces. Needs a replicated pool
+    # (replication.replica_slots > 0): overflow can only re-seat on a
+    # live replica row.
+    shed: ShedConfig = ShedConfig()
     # --- online adaptation plane (repro.online) ---
     online: bool = False  # drift-triggered replans + budgeted partial swaps
     # instead of the one-shot step-counter replan above
@@ -269,6 +283,18 @@ class ServingEngine:
                     ),
                 ),
             )
+        if engine_config.shed.enabled and (
+            profile is None
+            or not config.is_moe
+            or engine_config.replication.replica_slots <= 0
+        ):
+            raise ValueError(
+                "EngineConfig(shed.enabled=True) needs a MoE config, an "
+                "attached VariabilityProfile, and a replicated pool "
+                "(replication.replica_slots > 0) — overflow tokens can "
+                "only re-seat on a live replica row, and the shed-vs-wait "
+                "gate prices against the profile's staircase curves"
+            )
         if engine_config.online and (profile is None or not config.is_moe):
             raise ValueError(
                 "EngineConfig(online=True) needs a MoE config and an attached "
@@ -332,6 +358,15 @@ class ServingEngine:
         self.attribution: AttributionAccumulator | None = None
         # per-step placement regret vs the hindsight oracle — same gating
         self.regret: RegretTracker | None = None
+        # capacity-overflow shedding: (L,) int32 enable flags for the NEXT
+        # step's dispatch pass (None ⇒ plane off and the decode operand is
+        # the empty pytree — program identical to the pre-shed engine)
+        self._shed_enables: np.ndarray | None = None
+        self._shed_token_bytes = 0.0
+        self._shed_total = 0
+        self._shed_overflow_total = 0
+        self._shed_saved_s = 0.0
+        self._shed_transfer_s = 0.0
         self.placement_applied = False
         self.placements = None
         self.current_placements: list[Placement] | None = None
@@ -418,6 +453,29 @@ class ServingEngine:
             self._cost_model = engine_config.migration.cost_model_for_dims(
                 config.d_model, Fv, bytes_per_param=dtype_bytes
             )
+            if engine_config.shed.enabled:
+                # all layers start disabled: step t's measured overflow
+                # prices step t+1's enables (one step behind, by design)
+                self._shed_enables = np.zeros(
+                    config.num_layers, dtype=np.int32
+                )
+                self._shed_token_bytes = (
+                    float(engine_config.shed.token_bytes)
+                    if engine_config.shed.token_bytes is not None
+                    else default_token_bytes(config.d_model, dtype_bytes)
+                )
+                # the decode clamp the gate pricing must predict exactly:
+                # same formula build_dispatch applies per data group
+                gd = (
+                    policy.data_axis_size if policy.mesh is not None else 1
+                )
+                self._shed_capacity = slot_capacity(
+                    max(engine_config.max_batch // max(gd, 1), 1),
+                    config,
+                    capacity_factor=config.decode_capacity_factor,
+                    num_slots=num_slots,
+                    replicated=True,
+                )
             if engine_config.online and profile is not None:
                 self.controller = OnlineController(
                     self.planner,
@@ -468,7 +526,7 @@ class ServingEngine:
                 (engine_config.max_batch, self._n_max), dtype=np.int32
             )
             def _decode_paged(params, caches, cur_len, tables, tokens,
-                              placements):
+                              placements, shed):
                 # python side effect: runs once per trace, never on
                 # compiled-executable reuse
                 self.telemetry.counter("jit.trace.decode").inc()
@@ -476,6 +534,7 @@ class ServingEngine:
                     params, caches, cur_len, tokens, config, policy,
                     placements, block_tables=tables,
                     decode_mode=engine_config.decode_mode,
+                    shed_enables=shed,
                 )
 
             self._decode = jax.jit(_decode_paged)
@@ -498,11 +557,13 @@ class ServingEngine:
                 config, engine_config.max_batch, engine_config.max_len,
                 policy, dtype=cache_dtype,
             )
-            def _decode_dense(params, caches, cur_len, tokens, placements):
+            def _decode_dense(params, caches, cur_len, tokens, placements,
+                              shed):
                 self.telemetry.counter("jit.trace.decode").inc()
                 return decode_step(
                     params, caches, cur_len, tokens, config, policy,
                     placements, decode_mode=engine_config.decode_mode,
+                    shed_enables=shed,
                 )
 
             self._decode = jax.jit(_decode_dense)
@@ -922,6 +983,122 @@ class ServingEngine:
             )
         return step_token_matrix(counts_virt, G, self.current_placements)
 
+    def _shed_operand(self):
+        """The decode executable's (L,) shed-enable operand — ``None``
+        when the plane is off, so the traced program (and therefore
+        ``jit_trace_counts``) is byte-identical to the pre-shed engine."""
+        if self._shed_enables is None:
+            return None
+        return jnp.asarray(self._shed_enables)
+
+    def _shed_step(
+        self,
+        counts_virt: np.ndarray,
+        moe_aux,
+        cost_mx: np.ndarray | None,
+    ) -> float | None:
+        """Per-step shed accounting + next step's gate pricing.
+
+        Returns the shed-*adjusted* straggler latency the simulated fleet
+        actually paid this step (including the interconnect transfer
+        charge), or ``None`` when nothing shed — the caller then falls
+        back to the legacy ``cost_mx`` charge. Crucially the legacy
+        matrix itself is what the controller, the straggler attribution,
+        and the regret oracle keep seeing: shedding masks the symptom
+        for *this* step's latency only, so placement replans keep
+        targeting the underlying imbalance (compose, don't compete —
+        ROADMAP direction 1).
+        """
+        tel = self.telemetry
+        overflow = np.asarray(moe_aux.overflow_tokens, dtype=np.int64)
+        shed_tok = np.asarray(moe_aux.shed_tokens, dtype=np.int64)
+        shed_delta = np.asarray(moe_aux.shed_delta, dtype=np.int64)  # (L, S)
+        total_over = int(overflow.sum())
+        total_shed = int(shed_tok.sum())
+        self._shed_overflow_total += total_over
+        if total_over:
+            tel.counter("shed.overflow_tokens").inc(total_over)
+
+        adjusted: float | None = None
+        prof = self._sim_profile
+        if (
+            total_shed > 0
+            and prof is not None
+            and cost_mx is not None
+            and self.current_rplacements is not None
+        ):
+            tokens = self._step_token_matrix(counts_virt)  # un-shed (L, G)
+            spd = self.current_rplacements[0].slots_per_device
+            adj_mx = shed_adjusted_step_cost_matrix(
+                tokens, shed_delta, prof, spd
+            )
+            # the actual transfer is charged at the measuring
+            # interconnect's bandwidth (injected ground truth when the
+            # harness departs the believed model) — same accounting rule
+            # as migration batches. Only rows that change *device* touch
+            # the interconnect: a re-seat between two slots of the same
+            # device (the local-copy pool at engine init) is free.
+            cross_rows = float(
+                np.maximum(
+                    shed_device_deltas(shed_delta, spd), 0.0
+                ).sum()
+            )
+            transfer_s = (
+                cross_rows * self._shed_token_bytes
+                / self._measure_interconnect.bandwidth
+            )
+            legacy = float(cost_mx.max(axis=1).sum())
+            adjusted = float(adj_mx.max(axis=1).sum()) + transfer_s
+            self._shed_total += total_shed
+            self._shed_transfer_s += transfer_s
+            self._shed_saved_s += legacy - adjusted
+            tel.counter("shed.tokens").inc(total_shed)
+            tel.counter("shed.steps").inc()
+            tel.counter("shed.transfer_s").inc(transfer_s)
+            tel.gauge("shed.saved_s").set(self._shed_saved_s)
+            if tel.enabled:
+                recv_dev = np.maximum(
+                    shed_device_deltas(shed_delta, spd), 0.0
+                ).sum(axis=0)  # (G,) assignments received per device
+                total_recv = float(recv_dev.sum())
+                for g in range(recv_dev.shape[0]):
+                    if recv_dev[g] <= 0:
+                        continue
+                    tel.emit_span(
+                        "shed.recv", self.sim_time,
+                        transfer_s * float(recv_dev[g]) / total_recv,
+                        track=f"device{g}", step=self.step_count,
+                        tokens=int(recv_dev[g]),
+                    )
+
+        # price the NEXT step's enables from this step's overflow — one
+        # step behind by construction, with the *believed* profile and
+        # bandwidth (the controller's beliefs tighten over time when
+        # bandwidth calibration is on)
+        if self.controller is not None:
+            enables = self.controller.shed_decisions(
+                counts_virt, overflow,
+                token_bytes=self._shed_token_bytes,
+                capacity=self._shed_capacity,
+                min_overflow=self.ecfg.shed.min_overflow,
+                hysteresis=self.ecfg.shed.hysteresis,
+                drop_penalty_s=self.ecfg.shed.drop_penalty_s,
+            )
+        else:
+            # one-shot engines price with the believed profile and the
+            # configured cost model directly (no calibration loop)
+            enables = shed_gate_decisions(
+                counts_virt, self.current_rplacements, self.profile,
+                self._shed_capacity,
+                bandwidth=self._cost_model.bandwidth,
+                token_bytes=self._shed_token_bytes,
+                min_overflow=self.ecfg.shed.min_overflow,
+                hysteresis=self.ecfg.shed.hysteresis,
+                drop_penalty_s=self.ecfg.shed.drop_penalty_s,
+            )
+        self._shed_enables = np.asarray(enables, dtype=np.int32)
+        return adjusted
+
     def _observe_attribution(self, counts_virt: np.ndarray) -> None:
         """Decompose this step's straggler slack into load vs variability
         (repro.telemetry.attribution) and fold it into the run aggregate +
@@ -1267,6 +1444,7 @@ class ServingEngine:
             logits, new_caches, moe_aux = self._decode(
                 self.params, self.caches, jnp.asarray(self.cur_len),
                 jnp.asarray(self.block_tables), tokens, self.placements,
+                self._shed_operand(),
             )
         else:
             # single shared cur_len is not enough for ragged slots: use
@@ -1274,7 +1452,8 @@ class ServingEngine:
             # cache zero panels (the dense fallback's approximation)
             cur = jnp.asarray(int(self.cur_len.max()))
             logits, new_caches, moe_aux = self._decode(
-                self.params, self.caches, cur, tokens, self.placements
+                self.params, self.caches, cur, tokens, self.placements,
+                self._shed_operand(),
             )
         self.caches = new_caches
         next_tokens = np.asarray(
@@ -1289,7 +1468,16 @@ class ServingEngine:
             counts = np.asarray(moe_aux.expert_counts)  # (L, E)
             counts_virt = np.repeat(counts, self.config.expert_tp, axis=1)
             cost_mx = self._step_cost_matrix(counts_virt)
-            if cost_mx is not None:
+            shed_latency = None
+            if self._shed_enables is not None:
+                # shedding changes what the fleet PAID (adjusted loads +
+                # transfer charge) but not what the control plane SEES:
+                # cost_mx below stays the un-shed matrix for the
+                # controller, attribution, and regret
+                shed_latency = self._shed_step(counts_virt, moe_aux, cost_mx)
+            if shed_latency is not None:
+                sim_latency += shed_latency
+            elif cost_mx is not None:
                 sim_latency += float(cost_mx.max(axis=1).sum())
             self._observe_attribution(counts_virt)
             self._observe_regret(counts_virt, cost_mx)
@@ -1369,6 +1557,17 @@ class ServingEngine:
         out["kv_preemptions"] = float(self.preemption_count)
         return out
 
+    @property
+    def shed_enables(self) -> np.ndarray | None:
+        """Snapshot of the (L,) 0/1 shed-enable flags the *next*
+        ``step()`` will dispatch with (one step behind the overflow that
+        priced them), or ``None`` when the shed plane is off. Read-only:
+        a copy, so callers can log per-step enable histories (fig25)
+        without aliasing the engine's decision state."""
+        if self._shed_enables is None:
+            return None
+        return self._shed_enables.copy()
+
     def latency_report(self) -> dict[str, float]:
         """Step-level latency stats (legacy keys: ``mean_tpot`` etc. are
         *step* latencies) merged with the per-request SLO percentiles
@@ -1395,6 +1594,13 @@ class ServingEngine:
                 replans=float(len(self.controller.replans)),
                 migration_s=self.controller.total_migration_cost,
                 max_moves_per_step=float(self.controller.max_moves_in_step),
+            )
+        if self._shed_enables is not None:
+            out.update(
+                shed_tokens=float(self._shed_total),
+                shed_overflow_tokens=float(self._shed_overflow_total),
+                shed_saved_s=float(self._shed_saved_s),
+                shed_transfer_s=float(self._shed_transfer_s),
             )
         measured = [
             r for r in self.migration_records if "measured_s" in r

@@ -235,3 +235,114 @@ def test_decode_mode_parity_all_families(arch):
         jax.tree.leaves(caches_out["python"]),
     ):
         np.testing.assert_allclose(ls, lp, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# capacity-overflow shedding through the scanned executable
+# ---------------------------------------------------------------------------
+
+def _run_shed_engine(decode_mode, *, enabled=True, suppress=False,
+                     max_steps=120):
+    """fig25's part-B scenario in miniature: tied router logits make
+    experts 0/1 carry every assignment, capacity factor 1.5 makes the
+    big-share replica copies overflow, and the believed-fastest device
+    is slowed 2.6x mid-run via the injected true profile. Returns
+    (engine, {uid: tokens})."""
+    from repro.replication import ReplicationConfig
+    from repro.serving import ShedConfig
+
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), decode_capacity_factor=1.5
+    )
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    params = {
+        **params,
+        "blocks": {
+            **params["blocks"],
+            "moe": {
+                **params["blocks"]["moe"],
+                "router": jnp.zeros_like(params["blocks"]["moe"]["router"]),
+            },
+        },
+    }
+
+    def prof(speeds):
+        fleet = DeviceFleet.from_speeds(
+            np.asarray(speeds, dtype=np.float64), tile=1, tile_time=50e-6,
+            base=10e-6,
+        )
+        return profile_fleet(
+            simulator_measure_fn(fleet, seed=0), 4, max_tokens=64, tile=1,
+            repeats=5,
+        ).profile
+
+    believed = [0.6, 0.8, 1.0, 1.3]
+    true_speeds = list(believed)
+    true_speeds[3] = 0.5
+    eng = ServingEngine(
+        params, cfg, policy,
+        EngineConfig(
+            max_batch=16, max_len=96, decode_mode=decode_mode,
+            gem=GEMConfig(trace_length=8, num_restarts=4),
+            other_time_per_step=1e-4, online=True,
+            drift=DriftConfig(min_steps=4, threshold=100.0,
+                              var_threshold=2.0),
+            migration=MigrationConfig(max_moves_per_step=2,
+                                      base_overhead=0.0),
+            replan_cooldown=8, payback_horizon=100_000,
+            replication=ReplicationConfig(
+                replica_slots=1, exclude_speed_below=0.0,
+                consistent_only=False,
+            ),
+            shed=ShedConfig(
+                enabled=enabled,
+                min_overflow=10**9 if suppress else 1,
+                drop_penalty_s=0.01,
+            ),
+        ),
+        profile=prof(believed), num_devices=4,
+    )
+    rng = np.random.default_rng(17)
+    for _ in range(16):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8), 24)
+    steps = 0
+    while eng.scheduler.has_work() and steps < max_steps:
+        if steps == 12:
+            eng.set_true_profile(prof(true_speeds))
+        eng.step()
+        steps += 1
+    return eng, {r.uid: list(r.generated) for r in eng.finished}
+
+
+def test_shed_scan_matches_python_tokens():
+    """Scan ≡ python bit-for-bit *through live shed decisions*: the gate
+    prices on the host, so both modes flip the same (L,) enables and the
+    waterfall re-scatter lands identical rows."""
+    eng_s, toks_s = _run_shed_engine("scan")
+    eng_p, toks_p = _run_shed_engine("python")
+    rep_s, rep_p = eng_s.latency_report(), eng_p.latency_report()
+    assert rep_s["shed_tokens"] > 0, "shed pass never fired"
+    assert rep_s["shed_tokens"] == rep_p["shed_tokens"]
+    assert rep_s["shed_overflow_tokens"] == rep_p["shed_overflow_tokens"]
+    assert toks_s and toks_s == toks_p
+
+
+def test_shed_decisions_never_retrace_scan_decode():
+    """Flipping shed enables mid-run is an operand change, not a shape
+    change: one decode trace for the whole run."""
+    eng, toks = _run_shed_engine("scan")
+    assert toks
+    assert eng.latency_report()["shed_tokens"] > 0
+    counts = eng.jit_trace_counts
+    assert counts["decode"] == 1, counts
+
+
+def test_shed_gate_suppressed_bitwise_identical_to_off():
+    """An armed gate that never fires (budget-0 economics) is byte-exact
+    against the plane being disabled — same tokens, zero sheds."""
+    eng_on, toks_on = _run_shed_engine("scan", suppress=True)
+    eng_off, toks_off = _run_shed_engine("scan", enabled=False)
+    assert toks_on and toks_on == toks_off
+    assert eng_on.latency_report()["shed_tokens"] == 0
+    assert "shed_tokens" not in eng_off.latency_report()

@@ -1,0 +1,383 @@
+"""Capacity-overflow token shedding: determinism, accounting, gate tests.
+
+The shed pass is the second scatter inside
+:func:`repro.models.dispatch.build_dispatch`: assignments past their
+slot's capacity clamp re-seat onto the free rows of the *other live
+copies of the same virtual expert* instead of dropping. The contract
+pinned here:
+
+* ``shed_enable=0`` ≡ ``shed_enable=None`` — bit-identical plans, so an
+  armed-but-disabled engine is byte-exact against the pre-shed one.
+* Budget-0 broadcast tables (every column the same slot) shed nothing:
+  the only live copy is the overflowing slot itself.
+* Drop accounting identities: ``dropped_tokens = overflow − shed`` and
+  ``dropped = dropped_tokens / (Gd · Ag)`` (fraction ↔ absolute count).
+* Shedding is deterministic and *stable under token permutation*: the
+  per-slot row population depends on the routing multiset, not the
+  arrival order.
+* With enough free replica capacity, ``dropped_tokens == 0`` while the
+  shed-off plan drops — the fig25 "no drops while a live replica
+  exists" gate in miniature.
+* The shed-vs-wait gate (:func:`repro.core.score.shed_decisions`)
+  enables exactly when the receiver's marginal cost + transfer beats
+  the straggler's queue wait.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.score import shed_decisions, shed_gate_terms
+from repro.core.types import VariabilityProfile
+from repro.models.dispatch import build_dispatch, route
+from repro.replication import (
+    ReplicatedPlacement,
+    shed_adjusted_step_cost_matrix,
+    shed_device_deltas,
+    shed_gate_decisions,
+    simulate_shed_pass,
+)
+from repro.sharding import host_policy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 16, cfg.d_model), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (cfg.d_model, cfg.num_experts))
+    router = route(x, w, cfg, policy, backend="einsum")
+    return cfg, policy, router
+
+
+def _skewed_table(cfg):
+    """Experts 0 and 1 (the forced-hot pair) each get a second copy on a
+    replica slot, with a 15/16 share skew toward copy 0 — overflow on
+    copy 0, free rows on copy 1. Other experts stay single-copy
+    (constant rows)."""
+    Ev = cfg.num_experts * cfg.expert_tp
+    P = 16
+    table = np.tile(np.arange(Ev, dtype=np.int32)[:, None], (1, P))
+    table[0] = [0] * (P - 1) + [Ev]
+    table[1] = [1] * (P - 1) + [Ev + 1]
+    return jnp.asarray(table), Ev + 2
+
+
+def _force_hot(router, cfg):
+    """Route every token to experts (0, 1): expert 0 overflows hard."""
+    Gd, Ng, k = router.ids.shape
+    forced = jnp.tile(
+        jnp.asarray([[0, 1]], jnp.int32)[None], (Gd, Ng, 1)
+    )[..., :k]
+    return dataclasses.replace(router, ids=forced)
+
+
+def _plans(cfg, policy, router, table, S, cf=1.0):
+    off = build_dispatch(
+        router, table, cfg, policy, capacity_factor=cf, num_slots=S,
+        shed_enable=jnp.asarray(0),
+    )
+    on = build_dispatch(
+        router, table, cfg, policy, capacity_factor=cf, num_slots=S,
+        shed_enable=jnp.asarray(1),
+    )
+    absent = build_dispatch(
+        router, table, cfg, policy, capacity_factor=cf, num_slots=S,
+    )
+    return off, on, absent
+
+
+def _assert_plans_equal(a, b):
+    for field in (
+        "dispatch_idx", "dispatch_gate", "dropped", "dropped_tokens",
+        "overflow_tokens", "shed_tokens", "shed_delta",
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, field)), np.asarray(getattr(b, field)),
+            err_msg=field,
+        )
+
+
+def test_shed_disabled_bitwise_identical_to_absent(setup):
+    """shed_enable=0 must produce the exact plan of the pass not existing
+    — the engine's armed-but-idle state is byte-exact vs pre-shed."""
+    cfg, policy, router = setup
+    table, S = _skewed_table(cfg)
+    off, on, absent = _plans(cfg, policy, _force_hot(router, cfg), table, S)
+    _assert_plans_equal(off, absent)
+    # and the enabled plan genuinely differs (the fixture sheds)
+    assert int(on.shed_tokens) > 0
+
+
+def test_budget0_broadcast_table_sheds_nothing(setup):
+    """Budget-0 replica tables broadcast one slot across all P columns:
+    the dedup pass leaves a single live copy — the overflowing slot
+    itself — so shedding on/off is bit-identical."""
+    cfg, policy, router = setup
+    router = _force_hot(router, cfg)
+    Ev = cfg.num_experts * cfg.expert_tp
+    table = jnp.tile(jnp.arange(Ev, dtype=jnp.int32)[:, None], (1, 16))
+    off, on, absent = _plans(cfg, policy, router, table, Ev)
+    assert int(on.shed_tokens) == 0
+    _assert_plans_equal(off, on)
+    _assert_plans_equal(on, absent)
+
+
+def test_drop_accounting_identities(setup):
+    """dropped_tokens = overflow − shed, and the legacy fraction is the
+    absolute count over Gd·Ag — the two drop stats can never diverge."""
+    cfg, policy, router = setup
+    router = _force_hot(router, cfg)
+    table, S = _skewed_table(cfg)
+    Gd, Ng, k = router.ids.shape
+    Ag = Ng * k * cfg.expert_tp
+    for plan in _plans(cfg, policy, router, table, S):
+        assert int(plan.dropped_tokens) == int(plan.overflow_tokens) - int(
+            plan.shed_tokens
+        )
+        assert float(plan.dropped) == pytest.approx(
+            int(plan.dropped_tokens) / (Gd * Ag)
+        )
+    # shed_delta sums to zero (every shed row leaves one slot and lands
+    # on another) and its positive mass is the shed count
+    _, on, _ = _plans(cfg, policy, router, table, S)
+    delta = np.asarray(on.shed_delta)
+    assert delta.sum() == 0
+    assert delta[delta > 0].sum() == int(on.shed_tokens)
+
+
+def test_shed_rescues_all_overflow_when_capacity_exists(setup):
+    """With enough free rows on the replica, shed-on drops nothing while
+    shed-off drops — the fig25 zero-drop gate in miniature."""
+    cfg, policy, router = setup
+    router = _force_hot(router, cfg)
+    table, S = _skewed_table(cfg)
+    # cf=2: expert 0's two copies hold 2·C ≥ its token load, but the
+    # 15/16 share skew still overflows copy 0 without the shed pass
+    off, on, _ = _plans(cfg, policy, router, table, S, cf=2.0)
+    assert int(off.dropped_tokens) > 0
+    assert int(on.dropped_tokens) == 0
+    assert int(on.shed_tokens) == int(off.dropped_tokens)
+
+
+def test_shed_stable_under_token_permutation(setup):
+    """Permuting the tokens within a group must leave every shed
+    *statistic* unchanged: the stable rank order depends only on the
+    routing multiset, so the same number of rows shed to the same copies
+    and the same number drop. (Which individual token occupies a kept
+    row legitimately rotates — the capacity clamp keeps the first C by
+    arrival order — so the invariant is per-slot counts, not ids.)"""
+    cfg, policy, router = setup
+    router = _force_hot(router, cfg)
+    table, S = _skewed_table(cfg)
+    _, base, _ = _plans(cfg, policy, router, table, S)
+
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(router.ids.shape[1])
+    ids_p = jnp.asarray(np.asarray(router.ids)[:, perm])
+    gates_p = jnp.asarray(np.asarray(router.gates)[:, perm])
+    router_p = dataclasses.replace(router, ids=ids_p, gates=gates_p)
+    _, permuted, _ = _plans(cfg, policy, router_p, table, S)
+
+    np.testing.assert_array_equal(
+        np.asarray(base.shed_delta), np.asarray(permuted.shed_delta)
+    )
+    assert int(base.shed_tokens) == int(permuted.shed_tokens)
+    assert int(base.dropped_tokens) == int(permuted.dropped_tokens)
+    Ng = router.ids.shape[1]
+    rows_b = (np.asarray(base.dispatch_idx)[0] < Ng).sum(axis=1)
+    rows_p = (np.asarray(permuted.dispatch_idx)[0] < Ng).sum(axis=1)
+    np.testing.assert_array_equal(rows_b, rows_p)
+
+
+# ---------------------------------------------------------------------------
+# the shed-vs-wait gate (core/score.py)
+# ---------------------------------------------------------------------------
+
+def _linear_profile(slopes):
+    """Synthetic staircase-free profile: device g costs slopes[g]·n."""
+    grid = np.arange(0, 513, 16, dtype=np.int64)
+    lat = np.outer(np.asarray(slopes, dtype=np.float64), grid)
+    return VariabilityProfile(grid, lat, tile_size=16)
+
+
+def test_shed_gate_terms_straggler_vs_receiver():
+    prof = _linear_profile([4e-6, 1e-6, 1e-6, 1e-6])
+    tokens = np.array([100.0, 50.0, 50.0, 50.0])
+    wait_s, recv_s = shed_gate_terms(tokens, 10.0, prof)
+    # straggler (device 0, 4 µs/token) buys back 10·4µs of wait; the
+    # cheapest receiver pays 10·1µs of marginal compute
+    assert wait_s == pytest.approx(40e-6)
+    assert recv_s == pytest.approx(10e-6)
+
+
+def test_shed_decisions_gate_economics():
+    prof = _linear_profile([4e-6, 1e-6, 1e-6, 1e-6])
+    tokens = np.tile(np.array([100.0, 50.0, 50.0, 50.0]), (3, 1))
+    overflow = np.array([10.0, 10.0, 0.0])
+    # fast fabric: transfer ≈ free → shed layers with overflow
+    fast = shed_decisions(
+        tokens, overflow, prof, bandwidth=50e9, token_bytes=1024.0
+    )
+    np.testing.assert_array_equal(fast, [1, 1, 0])
+    # glacial fabric: transfer dwarfs the wait saving → never shed
+    slow = shed_decisions(
+        tokens, overflow, prof, bandwidth=1e3, token_bytes=1024.0
+    )
+    np.testing.assert_array_equal(slow, [0, 0, 0])
+    # min_overflow masks small layers
+    thr = shed_decisions(
+        tokens, overflow, prof, bandwidth=50e9, token_bytes=1024.0,
+        min_overflow=11,
+    )
+    np.testing.assert_array_equal(thr, [0, 0, 0])
+    # hysteresis demands margin: wait/recv = 4 ⇒ a 5× bar disables
+    hyst = shed_decisions(
+        tokens, overflow, prof, bandwidth=50e9, token_bytes=1024.0,
+        hysteresis=5.0,
+    )
+    np.testing.assert_array_equal(hyst, [0, 0, 0])
+
+
+def test_shed_decisions_rejects_shape_mismatch():
+    prof = _linear_profile([1e-6, 1e-6])
+    with pytest.raises(ValueError):
+        shed_decisions(
+            np.zeros((3, 2)), np.zeros(2), prof,
+            bandwidth=1e9, token_bytes=8.0,
+        )
+
+
+def test_shed_adjusted_cost_matrix_moves_load():
+    prof = _linear_profile([1e-6, 1e-6])
+    tokens = np.array([[100.0, 20.0]])
+    # 2 slots/device; 10 rows left device 0's slot 1 for device 1's slot 2
+    delta = np.array([[0, -10, 10, 0]])
+    dev = shed_device_deltas(delta, 2)
+    np.testing.assert_array_equal(dev, [[-10.0, 10.0]])
+    adj = shed_adjusted_step_cost_matrix(tokens, delta, prof, 2)
+    np.testing.assert_allclose(adj, [[90e-6, 30e-6]])
+    with pytest.raises(ValueError):
+        shed_device_deltas(np.zeros((1, 3)), 2)
+
+
+def test_shed_gate_terms_device_scale_reprices_straggler():
+    """Observed/predicted ratios shift who the gate thinks the straggler
+    is and how much wait a shed buys back (stale-beliefs pricing)."""
+    prof = _linear_profile([4e-6, 1e-6, 1e-6, 1e-6])
+    tokens = np.array([100.0, 50.0, 50.0, 50.0])
+    # believed-slow device 0 is actually 4x faster than believed: the
+    # scaled wait shrinks to the receiver's marginal cost and the gate's
+    # strict inequality can no longer clear
+    wait_s, recv_s = shed_gate_terms(
+        tokens, 10.0, prof, device_scale=np.array([0.25, 1.0, 1.0, 1.0])
+    )
+    assert wait_s == pytest.approx(10e-6)
+    assert recv_s == pytest.approx(10e-6)
+    dec = shed_decisions(
+        tokens[None, :], np.array([10.0]), prof,
+        bandwidth=50e9, token_bytes=1024.0,
+        device_scale=np.array([0.25, 1.0, 1.0, 1.0]),
+    )
+    np.testing.assert_array_equal(dec, [0])
+
+
+def test_shed_decisions_drop_penalty_rescues_on_glacial_fabric():
+    """A large enough quality credit flips the gate even when the
+    transfer dwarfs the latency saving: rows are rescued because
+    dropping them costs more than waiting."""
+    prof = _linear_profile([4e-6, 1e-6, 1e-6, 1e-6])
+    tokens = np.tile(np.array([100.0, 50.0, 50.0, 50.0]), (2, 1))
+    overflow = np.array([10.0, 10.0])
+    glacial = shed_decisions(
+        tokens, overflow, prof, bandwidth=1e3, token_bytes=1024.0
+    )
+    np.testing.assert_array_equal(glacial, [0, 0])
+    rescued = shed_decisions(
+        tokens, overflow, prof, bandwidth=1e3, token_bytes=1024.0,
+        drop_penalty_s=2.0,
+    )
+    np.testing.assert_array_equal(rescued, [1, 1])
+
+
+def _two_copy_placement():
+    """One expert, two copies on different devices, 3:1 share skew: 16
+    tokens load the copies [12, 4], so capacity 10 overflows copy 0 by
+    2 while copy 1 holds 6 free rows."""
+    return ReplicatedPlacement(
+        np.array([0, 0], dtype=np.int32), 2, 1,
+        shares=np.array([0.75, 0.25]),
+    )
+
+
+def test_shed_gate_decisions_device_scale_stale_beliefs():
+    prof = _linear_profile([1e-6, 1e-6])
+    rp = _two_copy_placement()
+    counts = np.array([[16]])
+    sim = simulate_shed_pass(counts[0], rp, 10)
+    assert sim["overflow"] == 2 and sim["shed"] == 2
+    # equal believed speeds: moving 2 rows off the straggler copy is a
+    # straight latency win once the (negligible) transfer is paid
+    on = shed_gate_decisions(
+        counts, [rp], prof, 10, bandwidth=1e12, token_bytes=8.0
+    )
+    np.testing.assert_array_equal(on, [1])
+    # the receiving device is observed 10x slower than believed: the
+    # ratio-scaled gate sees the shed *raising* the straggler and refuses
+    off = shed_gate_decisions(
+        counts, [rp], prof, 10, bandwidth=1e12, token_bytes=8.0,
+        device_scale=np.array([1.0, 10.0]),
+    )
+    np.testing.assert_array_equal(off, [0])
+    # ...unless each rescued row carries a quality credit that outweighs
+    # the latency regression (fig25's no-drop regime)
+    rescued = shed_gate_decisions(
+        counts, [rp], prof, 10, bandwidth=1e12, token_bytes=8.0,
+        device_scale=np.array([1.0, 10.0]), drop_penalty_s=1.0,
+    )
+    np.testing.assert_array_equal(rescued, [1])
+
+
+def test_shed_gate_decisions_same_device_reseat_is_free():
+    """A re-seat between two slots of the same device never touches the
+    interconnect: even a glacial fabric prices it at zero transfer, so
+    an epsilon quality credit is enough to enable."""
+    prof = _linear_profile([1e-6, 1e-6])
+    # both copies of expert 0 live on device 0; expert 1 pads device 1
+    rp = ReplicatedPlacement(
+        np.array([0, 0, 1, 1], dtype=np.int32), 2, 2,
+        shares=np.array([0.75, 0.25, 0.5, 0.5]),
+    )
+    counts = np.array([[16, 4]])
+    sim = simulate_shed_pass(counts[0], rp, 10)
+    assert sim["shed"] == 2
+    dev_delta = sim["delta"].reshape(2, 2).sum(-1)
+    np.testing.assert_array_equal(dev_delta, [0, 0])  # no device change
+    on = shed_gate_decisions(
+        counts, [rp], prof, 10, bandwidth=1e-6, token_bytes=8.0,
+        drop_penalty_s=1e-9,
+    )
+    np.testing.assert_array_equal(on, [1])
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_engine_shed_requires_replicas():
+    from repro.serving import EngineConfig, ServingEngine, ShedConfig
+    from repro.models import init_params
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    policy = host_policy()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), policy, jnp.float32)
+    with pytest.raises(ValueError, match="shed"):
+        ServingEngine(
+            params, cfg, policy,
+            EngineConfig(shed=ShedConfig(enabled=True)),
+            profile=_linear_profile([1e-6] * 4), num_devices=4,
+        )

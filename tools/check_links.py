@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Stdlib-only markdown link checker for the repo's docs.
+
+Walks every tracked ``*.md`` file, extracts inline links and images
+(``[text](target)`` / ``![alt](target)``), and verifies that each
+relative target resolves to a real file or directory. For targets with
+a ``#fragment`` pointing at a markdown file, also verifies the fragment
+matches a heading in that file (GitHub anchor rules: lowercase, spaces
+to dashes, punctuation stripped).
+
+Skipped on purpose: external URLs (``http://``/``https://``/
+``mailto:``), bare in-page anchors are still checked against the
+current file's headings, and fenced code blocks are ignored entirely
+(command examples full of ``[--flags]`` are not links).
+
+No third-party deps — CI's lint job runs this before the jax stack is
+even installed. Exits non-zero listing every broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# directories never worth scanning (generated/vendored/VCS state)
+PRUNE = {".git", ".ruff_cache", "__pycache__", ".pytest_cache", "results"}
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files() -> list[Path]:
+    out = []
+    for p in sorted(REPO.rglob("*.md")):
+        if any(part in PRUNE for part in p.parts):
+            continue
+        out.append(p)
+    return out
+
+
+def strip_fences(text: str) -> str:
+    """Blank out fenced code blocks (keep line count for error lines)."""
+    lines = text.splitlines()
+    in_fence = False
+    for i, line in enumerate(lines):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            lines[i] = ""
+        elif in_fence:
+            lines[i] = ""
+    return "\n".join(lines)
+
+
+def anchors_of(path: Path) -> set[str]:
+    """GitHub-style anchors for every heading in a markdown file."""
+    anchors: set[str] = set()
+    for line in strip_fences(path.read_text(encoding="utf-8")).splitlines():
+        m = re.match(r"^#{1,6}\s+(.*)$", line)
+        if not m:
+            continue
+        heading = m.group(1).strip()
+        # drop inline markdown/code markers, then GitHub slugify
+        heading = re.sub(r"[`*_]", "", heading)
+        heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+        slug = re.sub(r"[^\w\- ]", "", heading.lower()).strip()
+        slug = re.sub(r"\s+", "-", slug)
+        base, n = slug, 1
+        while slug in anchors:  # duplicate headings get -1, -2, ...
+            slug, n = f"{base}-{n}", n + 1
+        anchors.add(slug)
+    return anchors
+
+
+def check_file(path: Path) -> list[str]:
+    errors: list[str] = []
+    text = strip_fences(path.read_text(encoding="utf-8"))
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            target, _, fragment = target.partition("#")
+            if target:
+                resolved = (path.parent / target).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{path.relative_to(REPO)}:{lineno}: broken link "
+                        f"-> {target}"
+                    )
+                    continue
+            else:
+                resolved = path
+            if fragment and resolved.suffix == ".md" and resolved.is_file():
+                if fragment.lower() not in anchors_of(resolved):
+                    errors.append(
+                        f"{path.relative_to(REPO)}:{lineno}: missing anchor "
+                        f"-> {target or path.name}#{fragment}"
+                    )
+    return errors
+
+
+def main() -> int:
+    files = md_files()
+    errors: list[str] = []
+    for f in files:
+        errors.extend(check_file(f))
+    if errors:
+        print(f"FAIL: {len(errors)} broken link(s) in {len(files)} files:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"PASS: all links resolve across {len(files)} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
